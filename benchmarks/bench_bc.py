@@ -1,0 +1,30 @@
+"""Fig 5: Betweenness Centrality push vs pull (pull = Madduri successor
+trick removes float locks in both Brandes phases)."""
+
+from __future__ import annotations
+
+from repro.core.algorithms import betweenness_centrality
+
+from .common import emit, graph, timeit
+
+
+def run():
+    g = graph("orc", scale=1.0 / 1024)
+    for k in (4, 16):
+        t_push = timeit(
+            lambda: betweenness_centrality(g, "push", num_sources=k),
+            iters=2)
+        t_pull = timeit(
+            lambda: betweenness_centrality(g, "pull", num_sources=k),
+            iters=2)
+        emit(f"bc_push_orc_k{k}", t_push, "")
+        emit(f"bc_pull_orc_k{k}", t_pull,
+             f"pull/push={t_pull/t_push:.2f}")
+    locks_push = betweenness_centrality(g, "push", num_sources=4).cost
+    locks_pull = betweenness_centrality(g, "pull", num_sources=4).cost
+    emit("bc_locks", 0.0,
+         f"push={int(locks_push.locks)};pull={int(locks_pull.locks)}")
+
+
+if __name__ == "__main__":
+    run()

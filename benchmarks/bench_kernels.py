@@ -1,0 +1,58 @@
+"""Kernel-level push/pull microbenchmarks: Pallas (interpret) kernels vs
+their jnp oracles — correctness sweep + relative timing on a stand-in."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import cin_layer, flash_attention, pull_spmv, push_combine
+from repro.kernels import ref as R
+
+from .common import emit, graph, timeit
+
+
+def run():
+    g = graph("pok", scale=1.0 / 1024)
+    x = jax.random.normal(jax.random.PRNGKey(0), (g.n,), jnp.float32)
+    act = jnp.ones((g.n,), bool)
+
+    out = pull_spmv(g, x, "sum")
+    want = R.ell_spmv_ref(jnp.pad(x, (0, 1)), g.ell_idx, g.ell_w, "sum")
+    ok1 = bool(jnp.allclose(out, want, atol=1e-4))
+    t = timeit(lambda: pull_spmv(g, x, "sum"), iters=2)
+    emit("kernel_ell_spmv", t, f"allclose={ok1};n={g.n};d_ell={g.d_ell}")
+
+    out = push_combine(g, x, act)
+    want = R.coo_push_ref(x, act, g.coo_src, g.coo_dst, g.coo_w, g.n)
+    ok2 = bool(jnp.allclose(out, want, atol=1e-4))
+    t = timeit(lambda: push_combine(g, x, act), iters=2)
+    emit("kernel_coo_push", t, f"allclose={ok2};m={g.m}")
+
+    key = jax.random.PRNGKey(1)
+    B, T, H, d = 1, 256, 4, 64
+    q = jax.random.normal(key, (B, T, H, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, d))
+    out = flash_attention(q, k, v)
+    want = R.flash_attention_ref(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    ok3 = bool(jnp.allclose(out, want, atol=1e-3))
+    t = timeit(lambda: flash_attention(q, k, v), iters=2)
+    emit("kernel_flash_attention", t, f"allclose={ok3};T={T}")
+
+    xk = jax.random.normal(key, (256, 200, 10), jnp.float32)
+    x0 = jax.random.normal(jax.random.fold_in(key, 3), (256, 39, 10))
+    w = jax.random.normal(jax.random.fold_in(key, 4), (200, 200, 39)) * 0.01
+    out = cin_layer(xk, x0, w)
+    want = R.cin_layer_ref(xk, x0, w)
+    ok4 = bool(jnp.allclose(out, want, rtol=1e-3, atol=1e-3))
+    t = timeit(lambda: cin_layer(xk, x0, w), iters=2)
+    emit("kernel_cin", t, f"allclose={ok4};B=256;H=200")
+    return ok1 and ok2 and ok3 and ok4
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Fig 4: Boruvka MST push vs pull (FM phase dominates; pull avoids the
+cross-component combining writes)."""
+
+from __future__ import annotations
+
+from repro.core.algorithms import boruvka_mst
+
+from .common import emit, graph, timeit
+
+
+def run():
+    for gname in ("orc", "rca"):
+        g = graph(gname, weighted=True)
+        t_push = timeit(lambda: boruvka_mst(g, "push"), iters=2)
+        t_pull = timeit(lambda: boruvka_mst(g, "pull"), iters=2)
+        r = boruvka_mst(g, "pull")
+        emit(f"mst_push_{gname}", t_push, f"rounds={int(r.rounds)}")
+        emit(f"mst_pull_{gname}", t_pull,
+             f"pull/push={t_pull/t_push:.2f};weight={float(r.weight):.0f}")
+
+
+if __name__ == "__main__":
+    run()

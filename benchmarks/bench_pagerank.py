@@ -1,0 +1,36 @@
+"""Table 3 / Table 4 / Table 6a: PageRank time per iteration,
+push vs pull vs push+PA, across the five stand-in graphs."""
+
+from __future__ import annotations
+
+from repro.core.algorithms import pagerank
+from repro.core.algorithms.pagerank import pagerank_pa_prepare
+
+from .common import emit, graph, timeit
+
+GRAPHS = ("orc", "pok", "ljn", "am", "rca")
+ITERS = 5
+
+
+def run():
+    results = {}
+    for gname in GRAPHS:
+        g = graph(gname)
+        t_push = timeit(lambda: pagerank(g, ITERS, direction="push")) / ITERS
+        t_pull = timeit(lambda: pagerank(g, ITERS, direction="pull")) / ITERS
+        t_ell = timeit(lambda: pagerank(g, ITERS, direction="pull",
+                                        use_ell=True)) / ITERS
+        pa_run, _ = pagerank_pa_prepare(g, 16, ITERS)
+        t_pa = timeit(pa_run) / ITERS
+        results[gname] = (t_push, t_pull, t_ell, t_pa)
+        emit(f"pagerank_push_{gname}", t_push, f"n={g.n},m={g.m}")
+        emit(f"pagerank_pull_{gname}", t_pull,
+             f"pull/push={t_pull/t_push:.2f}")
+        emit(f"pagerank_pull_ell_{gname}", t_ell, "")
+        emit(f"pagerank_pushPA_{gname}", t_pa,
+             f"pa/push={t_pa/t_push:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Fig 2: Δ-Stepping SSSP push vs pull, and the Δ sensitivity (paper
+Fig 2c: larger Δ shrinks the push/pull gap)."""
+
+from __future__ import annotations
+
+from repro.core.algorithms import sssp_delta
+
+from .common import emit, graph, timeit
+
+
+def run():
+    for gname in ("pok", "am"):
+        g = graph(gname, weighted=True)
+        for delta in (2.0, 8.0):
+            t_push = timeit(
+                lambda: sssp_delta(g, 0, delta, direction="push"), iters=2)
+            t_pull = timeit(
+                lambda: sssp_delta(g, 0, delta, direction="pull"), iters=2)
+            emit(f"sssp_push_{gname}_d{delta:g}", t_push, "")
+            emit(f"sssp_pull_{gname}_d{delta:g}", t_pull,
+                 f"pull/push={t_pull/t_push:.2f}")
+        r = sssp_delta(g, 0, 2.0, direction="push")
+        emit(f"sssp_epochs_{gname}", 0.0,
+             f"epochs={int(r.epochs)};inner={int(r.inner_iters)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Table 3 (right): Triangle Counting total time, push vs pull.
+
+Paper: pull wins (~2-4%) because push pays FAA atomics; our counters carry
+that; wall-clock here reflects the dense-combine formulation."""
+
+from __future__ import annotations
+
+from repro.core.algorithms import triangle_count
+
+from .common import emit, graph, timeit
+
+GRAPHS = ("pok", "am", "rca")   # TC is O(m*d^2): small sparse stand-ins
+
+
+def run():
+    out = {}
+    for gname in GRAPHS:
+        g = graph(gname, scale=1.0 / 4096)
+        t_push = timeit(lambda: triangle_count(g, "push"), iters=2)
+        t_pull = timeit(lambda: triangle_count(g, "pull"), iters=2)
+        total = int(triangle_count(g, "pull").total)
+        out[gname] = (t_push, t_pull)
+        emit(f"tc_push_{gname}", t_push, f"triangles={total}")
+        emit(f"tc_pull_{gname}", t_pull,
+             f"pull/push={t_pull/t_push:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Shared benchmark scaffolding.
+
+Wall-clock numbers come from the CPU container, so they validate the
+paper's *relative* push/pull claims; the analytic PRAM counters validate
+the *structural* claims (Table 1). Real-world graphs are offline, so the
+paper's graphs are structurally matched synthetic stand-ins
+(graphs.generators.standin; DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import numpy as np
+
+SCALE = 1.0 / 256    # stand-in scale vs paper sizes (CPU container)
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock microseconds of fn(*args) (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
+@lru_cache(maxsize=None)
+def graph(name: str, weighted: bool = False, scale: float = SCALE):
+    from repro.graphs import standin
+    return standin(name, scale=scale, weighted=weighted)
+
+
+def fmt_count(x: int) -> str:
+    if x >= 1_000_000_000:
+        return f"{x/1e9:.2f}B"
+    if x >= 1_000_000:
+        return f"{x/1e6:.2f}M"
+    if x >= 1_000:
+        return f"{x/1e3:.1f}k"
+    return str(x)

@@ -1,0 +1,54 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus human tables).
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = [
+    ("table1_counters", "bench_counters"),
+    ("table3_pagerank", "bench_pagerank"),
+    ("table3_tc", "bench_tc"),
+    ("fig1_table6b_coloring", "bench_coloring"),
+    ("fig2_sssp", "bench_sssp"),
+    ("fig3_dm_scaling", "bench_dm_scaling"),
+    ("fig4_mst", "bench_mst"),
+    ("fig5_bc", "bench_bc"),
+    ("table6a_strategies", "bench_strategies"),
+    ("kernels", "bench_kernels"),
+    ("roofline", "roofline_run"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name, mod in SUITES:
+        if args.only and args.only not in (name, mod):
+            continue
+        print(f"\n===== {name} ({mod}) =====", flush=True)
+        t0 = time.time()
+        try:
+            module = __import__(f"benchmarks.{mod}", fromlist=["run"])
+            module.run()
+            print(f"----- {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            import traceback
+            traceback.print_exc()
+    if failures:
+        print("\nFAILED:", failures)
+        sys.exit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

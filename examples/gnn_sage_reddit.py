@@ -1,0 +1,69 @@
+"""Sampled GraphSAGE training — the paper's Frontier-Exploit strategy as
+a training-time system feature (sampling = FE; aggregation = pull).
+
+    PYTHONPATH=src python examples/gnn_sage_reddit.py --steps 100
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs import kronecker, sample_blocks
+from repro.models.gnn import GNNConfig, sage_apply_blocks, sage_init
+from repro.train import OptConfig, apply_updates, init_opt
+from repro.train.losses import softmax_xent_dense
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=64)
+    args = ap.parse_args()
+
+    # reddit-like stand-in: power-law, labels from a planted partition
+    g = kronecker(scale=12, edge_factor=12, seed=0)
+    n_classes, d_feat = 8, 64
+    rng = np.random.default_rng(0)
+    labels = jnp.asarray(rng.integers(0, n_classes, g.n), jnp.int32)
+    # features correlated with labels so learning is visible
+    centers = rng.normal(size=(n_classes, d_feat)).astype(np.float32)
+    feats = jnp.asarray(centers[np.asarray(labels)]
+                        + 0.8 * rng.normal(size=(g.n, d_feat)))
+    feats_pad = jnp.pad(feats, ((0, 1), (0, 0)))
+
+    cfg = GNNConfig(arch="sage", n_layers=2, d_hidden=64, d_in=d_feat,
+                    d_out=n_classes, fanouts=(10, 5))
+    params = sage_init(jax.random.PRNGKey(0), cfg)
+    ocfg = OptConfig(lr=1e-2, total_steps=args.steps, warmup_steps=5)
+    opt = init_opt(params, ocfg)
+
+    @jax.jit
+    def step(params, opt, seeds, key):
+        blocks = sample_blocks(g, seeds, cfg.fanouts, key)
+        hs = tuple(feats_pad[jnp.minimum(ids, g.n)]
+                   for ids in blocks.node_ids)
+
+        def loss_fn(p):
+            out = sage_apply_blocks(p, cfg, blocks, hs)
+            return softmax_xent_dense(out, labels[seeds])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = apply_updates(params, grads, opt, ocfg)
+        return params, opt, loss
+
+    key = jax.random.PRNGKey(1)
+    for i in range(args.steps):
+        key, k1, k2 = jax.random.split(key, 3)
+        seeds = jax.random.randint(k1, (args.batch,), 0, g.n)
+        params, opt, loss = step(params, opt, seeds, k2)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:>4} loss {float(loss):.4f}")
+    print("frontier-exploit sampling touched "
+          f"{args.batch * (1 + 10 + 50)} nodes/step of {g.n} "
+          f"({100 * args.batch * 61 / g.n:.1f}% — the FE win)")
+
+
+if __name__ == "__main__":
+    main()

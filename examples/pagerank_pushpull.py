@@ -1,0 +1,48 @@
+"""The paper's full PageRank story on one graph: push vs pull vs push+PA
+(Algorithm 8), plus the distributed exchange schedules (Fig 3 analogues).
+
+    PYTHONPATH=src python examples/pagerank_pushpull.py
+"""
+
+import numpy as np
+
+from repro.core.algorithms import pagerank
+from repro.core.algorithms.pagerank import pagerank_pa_prepare
+from repro.graphs import pa_split, partition_1d, standin
+
+
+def main():
+    g = standin("orc", scale=1.0 / 256, weighted=False)
+    print(f"orkut stand-in: n={g.n} m={g.m}")
+
+    push = pagerank(g, 20, direction="push")
+    pull = pagerank(g, 20, direction="pull")
+    run_pa, stats = pagerank_pa_prepare(g, num_parts=16, iters=20)
+    ranks_pa, cost_pa = run_pa()
+
+    assert np.allclose(push.ranks, pull.ranks, atol=1e-6)
+    assert np.allclose(push.ranks, ranks_pa, atol=1e-6)
+
+    print("\nvariant      locks        reads        writes")
+    for name, c in (("push", push.cost), ("pull", pull.cost),
+                    ("push+PA", cost_pa)):
+        d = c.as_dict()
+        print(f"{name:8s} {d['locks']:>12,} {d['reads']:>12,} "
+              f"{d['writes']:>12,}")
+    print(f"\nPA cut fraction: {stats['cut_fraction']:.3f} "
+          f"(locks scale with the cut — paper §5 bound [0, 2m])")
+
+    print("\nDM schedules, bytes/device by P (paper Fig 3 structure):")
+    for P in (4, 16, 64, 256):
+        part = partition_1d(g.n, P)
+        _, remote, s = pa_split(g, part)
+        print(f"  P={P:>4}: MP-push={part.n_padded*4:>10,}  "
+              f"RMA-pull={part.n_padded*4*(P-1)//P:>10,}  "
+              f"RMA-push={s['cut_edges']*8//P:>10,}  "
+              f"(cut={s['cut_edges']:,})")
+    print("\nMP-style combining keeps bytes flat in P; per-edge RMA-push "
+          "explodes with the cut — the paper's >10x PR gap.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Batched serving demo: continuous batching over a fixed slot budget,
+per-slot cache positions, greedy sampling.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import jax
+
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serve import ServeConfig, ServeLoop, greedy_decode
+
+
+def main():
+    cfg = TransformerConfig(name="serve-demo", n_layers=4, d_model=128,
+                            n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
+                            dtype="float32", attn_impl="naive")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    # one-shot batched rollout
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 512)
+    toks = greedy_decode(params, cfg, prompt, num_steps=16,
+                         cache_kind="bf16")
+    print("greedy_decode output shape:", toks.shape)
+
+    # continuous batching: 8 requests through 4 slots
+    loop = ServeLoop(params, cfg,
+                     ServeConfig(max_len=64, batch=4, cache_kind="bf16"))
+    rids = [loop.submit([1 + i, 2 + i, 3 + i]) for i in range(8)]
+    steps = 0
+    while (loop.active.any() or loop.queue) and steps < 400:
+        loop.step(max_new=12)
+        steps += 1
+    done = sum(1 for r in rids if len(loop.outputs[r]) >= 12)
+    print(f"served {done}/8 requests in {steps} decode steps "
+          f"(4 slots, continuous batching)")
+    print("sample output tokens:", loop.outputs[rids[0]][:8])
+
+
+if __name__ == "__main__":
+    main()

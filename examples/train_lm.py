@@ -1,0 +1,81 @@
+"""End-to-end LM pretraining driver: data pipeline -> TrainLoop with
+async checkpointing, crash resume, straggler watchdog, and optional
+gradient compression.
+
+    # CPU-friendly default (~20M params, 200 steps):
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+    # the ~100M-param configuration (same code path, heavier):
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+    # kill it mid-run and rerun: it resumes from the latest checkpoint.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.data import prefetch, token_batches
+from repro.dist import CompressionConfig
+from repro.models.transformer import (TransformerConfig, init_params,
+                                      lm_loss)
+from repro.models.common import param_count
+from repro.train import LoopConfig, OptConfig, TrainLoop
+
+PRESETS = {
+    # ~19M params: fast on CPU
+    "20m": TransformerConfig(
+        name="lm20m", n_layers=4, d_model=384, n_heads=6, n_kv_heads=2,
+        d_ff=1024, vocab=8192, dtype="float32", loss_chunk=128,
+        attn_impl="naive"),
+    # ~124M params: the e2e driver scale from the deliverable
+    "100m": TransformerConfig(
+        name="lm100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        d_ff=2048, vocab=32768, dtype="float32", loss_chunk=256,
+        attn_impl="naive"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="20m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--compression", choices=["none", "topk", "int8"],
+                    default="none")
+    ap.add_argument("--micro", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    print(f"model: {cfg.name}  params={param_count(params):,}")
+
+    def loss_fn(p, batch):
+        return lm_loss(p, cfg, batch["tokens"], batch["labels"])
+
+    loop = TrainLoop(
+        loss_fn, params,
+        OptConfig(lr=args.lr, total_steps=args.steps, warmup_steps=20),
+        LoopConfig(total_steps=args.steps, ckpt_every=50,
+                   ckpt_dir=args.ckpt_dir, log_every=10,
+                   num_micro=args.micro,
+                   compression=CompressionConfig(kind=args.compression)))
+    if loop.start_step:
+        print(f"resumed from checkpoint at step {loop.start_step}")
+
+    data = prefetch(token_batches(args.batch, args.seq, cfg.vocab), depth=2)
+    res = loop.run(data)
+    print(f"\ndone: step={res['final_step']} loss={res['final_loss']:.4f} "
+          f"median_step={res['median_dt']*1e3:.0f}ms "
+          f"stragglers={len(res['stragglers'])}")
+    for h in res["history"][-5:]:
+        print(f"  step {h['step']:>5} loss {h['loss']:.4f} "
+              f"dt {h['dt']*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

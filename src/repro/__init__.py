@@ -1,0 +1,8 @@
+"""repro — a push/pull-native graph + ML training/serving framework in JAX.
+
+Reproduction of Besta et al., "To Push or To Pull: On Reducing
+Communication and Synchronization in Graph Computations" (HPDC 17),
+adapted to TPU/XLA semantics, plus the assigned architecture zoo.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,40 @@
+"""Cell registry: enumerate and build every assigned (arch × shape) cell."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from .archs import ALL_ARCHS, ARCH_FAMILY, full_config, smoke_config
+from .shapes import shape_table
+from .steps import BuiltCell, build_gnn_cell, build_lm_cell, build_recsys_cell
+
+__all__ = ["all_cells", "build_cell", "ALL_ARCHS", "ARCH_FAMILY",
+           "full_config", "smoke_config"]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """The 40 assigned (arch, shape) pairs."""
+    cells = []
+    for arch in ALL_ARCHS:
+        for shape_name in shape_table(ARCH_FAMILY[arch]):
+            cells.append((arch, shape_name))
+    return cells
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               overrides: Optional[dict] = None,
+               direction: str = "pull", zero: str = "pull") -> BuiltCell:
+    from ..dist.sharding import set_activation_mesh
+    family = ARCH_FAMILY[arch]
+    shape = shape_table(family)[shape_name]
+    # activation-sharding hints trace against this mesh at lower time
+    set_activation_mesh(mesh)
+    if family == "lm":
+        return build_lm_cell(arch, shape, mesh, zero=zero,
+                             overrides=overrides)
+    if family == "gnn":
+        return build_gnn_cell(arch, shape, mesh, direction=direction,
+                              overrides=overrides)
+    return build_recsys_cell(arch, shape, mesh)

@@ -1,0 +1,455 @@
+"""Cell builders: (arch × shape × mesh) → lowered-ready step functions.
+
+Each builder returns a `BuiltCell`:
+    fn            the step function to jit
+    args          tuple of ShapeDtypeStruct pytrees (NO allocation)
+    in_shardings  matching tuple of NamedSharding pytrees
+    out_shardings for state-carrying outputs (params/opt/cache: same as in)
+    donate        argnums whose buffers alias outputs
+
+Conventions: batch dims shard over the flattened ('pod','data') axes;
+parameters follow dist.sharding rules; graph cells pad node/edge counts to
+the batch-axis multiple (padded tail is masked; true sizes stay in meta).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dist.sharding import (batch_axes, make_sharding,
+                             recsys_param_specs, set_activation_mesh,
+                             transformer_param_specs)
+from ..graphs.structure import EdgeView
+from ..models import gnn as gnn_mod
+from ..models.recsys import (XDeepFMConfig, retrieval_score, xdeepfm_apply,
+                             xdeepfm_init)
+from ..models.transformer import (TransformerConfig, decode_step,
+                                  init_kv_cache, init_params, lm_loss,
+                                  prefill)
+from ..train.losses import bce_with_logits, mse, softmax_xent_dense
+from ..train.optimizer import OptConfig, apply_updates, init_opt
+from .archs import full_config
+from .shapes import ShapeSpec
+
+__all__ = ["BuiltCell", "build_lm_cell", "build_gnn_cell",
+           "build_recsys_cell", "OPT_CFG"]
+
+OPT_CFG = OptConfig(lr=3e-4, total_steps=10_000)
+
+F32 = jnp.float32
+I32 = jnp.int32
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class BuiltCell:
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _shard_tree_like(mesh, spec_fn, tree):
+    """Apply a params-spec rule fn to any tree with the same structure."""
+    return spec_fn(mesh, tree)
+
+
+def _batch_sharding(mesh, shape, extra=()):
+    ba = batch_axes(mesh)
+    spec = P(ba, *extra)
+    return make_sharding(mesh, spec, shape)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+# ------------------------------------------------------------------ LM --
+def _lm_state_specs(mesh, cfg: TransformerConfig, zero: str = "pull"):
+    params_spec = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    opt_spec = jax.eval_shape(lambda p: init_opt(p, OPT_CFG), params_spec)
+    p_sh = transformer_param_specs(mesh, params_spec, zero=zero)
+    o_sh = type(opt_spec)(
+        step=_repl(mesh),
+        mu=transformer_param_specs(mesh, opt_spec.mu, zero=zero),
+        nu=transformer_param_specs(mesh, opt_spec.nu, zero=zero))
+    return params_spec, opt_spec, p_sh, o_sh
+
+
+def _cache_shardings(mesh, cache_spec, batch: int, seq_shard: bool):
+    """KV cache sharding: batch over batch axes when divisible, sequence
+    over 'model' (flash-decoding split) — or over everything for B=1."""
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        # leaf: [L, B, S, Hk, Dh] or scale [L, B, S, Hk, 1]
+        if seq_shard:
+            axes_for_seq = tuple(ba) + ("model",)
+            spec = P(None, None, axes_for_seq, None, None)
+        else:
+            spec = P(None, ba, "model", None, None)
+        return make_sharding(mesh, spec, leaf.shape)
+
+    return jax.tree.map(one, cache_spec)
+
+
+def build_lm_cell(arch: str, shape: ShapeSpec, mesh: Mesh,
+                  zero: str = "pull",
+                  overrides: Optional[dict] = None) -> BuiltCell:
+    cfg = full_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    T = shape.params["seq_len"]
+    B = shape.params["global_batch"]
+    ba = batch_axes(mesh)
+
+    if shape.kind == "train":
+        params_spec, opt_spec, p_sh, o_sh = _lm_state_specs(mesh, cfg, zero)
+        batch_spec = {"tokens": SDS((B, T), I32),
+                      "labels": SDS((B, T), I32)}
+        batch_sh = {k: _batch_sharding(mesh, (B, T), (None,))
+                    for k in batch_spec}
+
+        def step(params, opt_state, batch):
+            def loss_fn(p):
+                return lm_loss(p, cfg, batch["tokens"], batch["labels"])
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = apply_updates(params, grads, opt_state,
+                                              OPT_CFG)
+            return params, opt_state, loss
+
+        return BuiltCell(
+            name=f"{arch}@{shape.name}", fn=step,
+            args=(params_spec, opt_spec, batch_spec),
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(p_sh, o_sh, _repl(mesh)),
+            donate=(0, 1), meta={"cfg": cfg, "kind": "train"})
+
+    if shape.kind == "prefill":
+        params_spec = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+        p_sh = transformer_param_specs(mesh, params_spec, zero="push")
+        tokens_spec = SDS((B, T), I32)
+        cache_kind = "int8" if arch == "qwen1.5-32b" else "bf16"
+
+        def step(params, tokens):
+            return prefill(params, cfg, tokens, cache_kind=cache_kind)
+
+        out_cache_spec = jax.eval_shape(step, params_spec, tokens_spec)[1]
+        cache_sh = _cache_shardings(mesh, out_cache_spec, B,
+                                    seq_shard=False)
+        return BuiltCell(
+            name=f"{arch}@{shape.name}", fn=step,
+            args=(params_spec, tokens_spec),
+            in_shardings=(p_sh, _batch_sharding(mesh, (B, T), (None,))),
+            out_shardings=(make_sharding(mesh, P(ba, "model"), (B, cfg.vocab)),
+                           cache_sh),
+            meta={"cfg": cfg, "kind": "prefill", "cache_kind": cache_kind})
+
+    # decode (decode_32k / long_500k)
+    params_spec = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = transformer_param_specs(mesh, params_spec, zero="push")
+    int8 = arch in ("qwen1.5-32b",) or T >= 262144
+    kind = "int8" if int8 else "bf16"
+    cache_spec = jax.eval_shape(
+        lambda: init_kv_cache(cfg, B, T, kind=kind))
+    seq_shard = B == 1           # long_500k: flash-decoding over sequence
+    cache_sh = _cache_shardings(mesh, cache_spec, B, seq_shard=seq_shard)
+    tok_spec = SDS((B, 1), I32)
+    len_spec = SDS((), I32)
+
+    def step(params, tokens, cache, cur_len):
+        return decode_step(params, cfg, tokens, cache, cur_len)
+
+    return BuiltCell(
+        name=f"{arch}@{shape.name}", fn=step,
+        args=(params_spec, tok_spec, cache_spec, len_spec),
+        in_shardings=(p_sh, _batch_sharding(mesh, (B, 1), (None,)),
+                      cache_sh, _repl(mesh)),
+        out_shardings=(make_sharding(mesh, P(ba, "model"), (B, cfg.vocab)),
+                       cache_sh),
+        donate=(2,), meta={"cfg": cfg, "kind": "decode",
+                           "cache_kind": kind})
+
+
+# ----------------------------------------------------------------- GNN --
+def _gnn_batch_spec(arch: str, shape: ShapeSpec, mesh: Mesh,
+                    shard_axes: str = "batch"):
+    """Padded node/edge buffers + per-arch extras. Returns (spec, sh,
+    meta). shard_axes='all' spreads nodes/edges over every mesh axis
+    (removes the 16x model-replica waste — hillclimb lever)."""
+    ba = (tuple(mesh.axis_names) if shard_axes == "all"
+          else batch_axes(mesh))
+    mult = max(1, __import__("math").prod(
+        mesh.shape[a] for a in ba)) * 8
+    p = shape.params
+
+    if shape.name == "minibatch_lg":
+        seeds = p["batch_nodes"]
+        f1, f2 = p["fanout"]
+        n1, n2 = seeds * f1, seeds * f1 * f2
+        N = seeds + n1 + n2
+        E = n1 + n2
+        Np, Ep = _pad_to(N, mult), _pad_to(E, mult)
+        d = p["d_feat"]
+        spec = {"feats": SDS((Np, d), F32),
+                "src": SDS((Ep,), I32), "dst": SDS((Ep,), I32),
+                "w": SDS((Ep,), F32),
+                "labels": SDS((seeds,), I32)}
+        meta = dict(n=Np, m=Ep, n_true=N, labeled=seeds,
+                    n_classes=p["n_classes"], d_feat=d, task="node_class")
+    elif shape.name == "molecule":
+        Bg = p["batch"]
+        N, E = p["n_nodes"] * Bg, p["n_edges"] * Bg
+        Np, Ep = _pad_to(N, mult), _pad_to(E, mult)
+        d = 16     # synthetic atom features
+        spec = {"feats": SDS((Np, d), F32),
+                "src": SDS((Ep,), I32), "dst": SDS((Ep,), I32),
+                "w": SDS((Ep,), F32),
+                "graph_ids": SDS((Np,), I32),
+                "labels": SDS((Bg,), F32)}
+        meta = dict(n=Np, m=Ep, n_true=N, n_graphs=Bg, d_feat=d,
+                    task="graph_reg")
+    else:
+        N, E, d = p["n_nodes"], p["n_edges"], p["d_feat"]
+        Np, Ep = _pad_to(N, mult), _pad_to(E, mult)
+        spec = {"feats": SDS((Np, d), F32),
+                "src": SDS((Ep,), I32), "dst": SDS((Ep,), I32),
+                "w": SDS((Ep,), F32),
+                "labels": SDS((Np,), I32)}
+        meta = dict(n=Np, m=Ep, n_true=N, labeled=N,
+                    n_classes=p["n_classes"], d_feat=d, task="node_class")
+
+    if arch == "egnn":
+        spec["coords"] = SDS((meta["n"],), F32)
+        spec["coords"] = SDS((meta["n"], 3), F32)
+    if arch == "graphcast":
+        # graphcast defines its own variable set (227 vars in/out)
+        spec["feats"] = SDS((meta["n"], 227), F32)
+        spec["target"] = SDS((meta["n"], 227), F32)
+        meta["task"] = "var_reg"
+
+    sh = {}
+    for k, v in spec.items():
+        sh[k] = make_sharding(mesh, P(ba, *(None,) * (len(v.shape) - 1)),
+                              v.shape)
+    return spec, sh, meta
+
+
+def build_gnn_mp_cell(arch: str, shape: ShapeSpec, mesh: Mesh,
+                      overrides: dict) -> BuiltCell:
+    """gin-tu with the explicit PA pull-exchange (edges pre-grouped by
+    destination owner, shard_map all_gather + local combine)."""
+    import math
+    base = full_config(arch)
+    p = shape.params
+    axes = tuple(mesh.axis_names)
+    nparts = math.prod(mesh.shape[a] for a in axes)
+    N, E, d = p["n_nodes"], p["n_edges"], p["d_feat"]
+    Np = _pad_to(N, nparts * 8)
+    cap = _pad_to(int(E * 1.2 // nparts) + 1, 8)
+    gcfg = dataclasses.replace(base, d_in=d, d_out=p["n_classes"],
+                               **{k: v for k, v in overrides.items()
+                                  if k not in ("mp_exchange",)})
+    batch_spec = {
+        "feats": SDS((Np, d), F32),
+        "e_src": SDS((nparts, cap), I32),
+        "e_dst": SDS((nparts, cap), I32),
+        "labels": SDS((Np,), I32),          # -1 = padding
+    }
+    row = make_sharding(mesh, P(axes, None), (Np, d))
+    erow = make_sharding(mesh, P(axes, None), (nparts, cap))
+    lrow = make_sharding(mesh, P(axes), (Np,))
+    batch_sh = {"feats": row, "e_src": erow, "e_dst": erow, "labels": lrow}
+
+    from ..models.gnn import gin_apply_mp
+    params_spec = jax.eval_shape(
+        lambda: gnn_mod.gin_init(jax.random.PRNGKey(0), gcfg))
+    p_sh = jax.tree.map(lambda _: _repl(mesh), params_spec)
+    opt_spec = jax.eval_shape(lambda q: init_opt(q, OPT_CFG), params_spec)
+    o_sh = jax.tree.map(lambda _: _repl(mesh), opt_spec)
+
+    def loss_fn(params, batch):
+        out = gin_apply_mp(params, gcfg, batch["feats"], batch["e_src"],
+                           batch["e_dst"], mesh)
+        lse = jax.nn.logsumexp(out.astype(jnp.float32), axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, out.shape, 1)
+        picked = jnp.sum(
+            jnp.where(iota == batch["labels"][:, None], out, 0.0), axis=-1)
+        valid = batch["labels"] >= 0
+        return (jnp.where(valid, lse - picked, 0.0).sum()
+                / jnp.maximum(jnp.sum(valid, dtype=jnp.int32), 1))
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = apply_updates(params, grads, opt_state, OPT_CFG)
+        return params, opt_state, loss
+
+    return BuiltCell(
+        name=f"{arch}@{shape.name}", fn=step,
+        args=(params_spec, opt_spec, batch_spec),
+        in_shardings=(p_sh, o_sh, batch_sh),
+        out_shardings=(p_sh, o_sh, _repl(mesh)),
+        donate=(0, 1),
+        meta={"cfg": gcfg, "kind": "train", "n": Np, "m": nparts * cap,
+              "mp_exchange": True})
+
+
+def build_gnn_cell(arch: str, shape: ShapeSpec, mesh: Mesh,
+                   direction: str = "pull",
+                   overrides: Optional[dict] = None) -> BuiltCell:
+    base = full_config(arch)
+    overrides = dict(overrides or {})
+    if overrides.get("mp_exchange"):
+        return build_gnn_mp_cell(arch, shape, mesh, overrides)
+    shard_axes = overrides.pop("shard_axes", "batch")
+    batch_spec, batch_sh, meta = _gnn_batch_spec(arch, shape, mesh,
+                                                 shard_axes=shard_axes)
+    d_feat = meta["d_feat"]
+    if meta["task"] == "node_class":
+        d_out = meta["n_classes"]
+    elif meta["task"] == "graph_reg":
+        d_out = 1
+    else:
+        d_out = 0
+    gcfg = dataclasses.replace(base, d_in=d_feat, d_out=d_out,
+                               direction=direction, **overrides)
+
+    init_fn = {"egnn": gnn_mod.egnn_init, "gin-tu": gnn_mod.gin_init,
+               "graphsage-reddit": gnn_mod.sage_init,
+               "graphcast": gnn_mod.graphcast_init}[arch]
+    params_spec = jax.eval_shape(
+        lambda: init_fn(jax.random.PRNGKey(0), gcfg))
+    p_sh = jax.tree.map(lambda _: _repl(mesh), params_spec)
+    opt_spec = jax.eval_shape(lambda p: init_opt(p, OPT_CFG), params_spec)
+    o_sh = jax.tree.map(lambda _: _repl(mesh), opt_spec)
+    N, M = meta["n"], meta["m"]
+
+    def apply_model(params, batch):
+        ev = EdgeView(src=batch["src"], dst=batch["dst"], w=batch["w"],
+                      n=N, m=M)
+        if arch == "egnn":
+            out, _ = gnn_mod.egnn_apply(params, gcfg, ev, batch["feats"],
+                                        batch["coords"])
+        elif arch == "gin-tu":
+            out = gnn_mod.gin_apply(
+                params, gcfg, ev, batch["feats"],
+                graph_ids=batch.get("graph_ids"),
+                num_graphs=meta.get("n_graphs", 1))
+        elif arch == "graphsage-reddit":
+            out = gnn_mod.sage_apply(params, gcfg, ev, batch["feats"])
+        else:
+            out = gnn_mod.graphcast_apply(params, gcfg, ev, batch["feats"])
+        return out
+
+    def loss_fn(params, batch):
+        out = apply_model(params, batch)
+        if meta["task"] == "node_class":
+            k = meta["labeled"]
+            return softmax_xent_dense(out[:k], batch["labels"][:k])
+        if meta["task"] == "graph_reg":
+            if out.shape[0] == meta["n"]:      # per-node output: pool
+                from ..sparse.segment import segment_sum
+                out = segment_sum(out, batch["graph_ids"],
+                                  meta["n_graphs"])
+            return mse(out[:, 0] if out.ndim > 1 else out, batch["labels"])
+        return mse(out[:meta["n_true"]], batch["target"][:meta["n_true"]])
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = apply_updates(params, grads, opt_state, OPT_CFG)
+        return params, opt_state, loss
+
+    return BuiltCell(
+        name=f"{arch}@{shape.name}", fn=step,
+        args=(params_spec, opt_spec, batch_spec),
+        in_shardings=(p_sh, o_sh, batch_sh),
+        out_shardings=(p_sh, o_sh, _repl(mesh)),
+        donate=(0, 1), meta={"cfg": gcfg, "kind": "train", **meta})
+
+
+# -------------------------------------------------------------- recsys --
+def build_recsys_cell(arch: str, shape: ShapeSpec, mesh: Mesh) -> BuiltCell:
+    cfg: XDeepFMConfig = full_config(arch)
+    params_spec = jax.eval_shape(
+        lambda: xdeepfm_init(jax.random.PRNGKey(0), cfg))
+    p_sh = recsys_param_specs(mesh, params_spec)
+    ba = batch_axes(mesh)
+
+    if shape.kind == "train":
+        B = shape.params["batch"]
+        opt_spec = jax.eval_shape(lambda p: init_opt(p, OPT_CFG),
+                                  params_spec)
+        o_sh = type(opt_spec)(
+            step=_repl(mesh),
+            mu=recsys_param_specs(mesh, opt_spec.mu),
+            nu=recsys_param_specs(mesh, opt_spec.nu))
+        batch_spec = {"ids": SDS((B, cfg.n_fields), I32),
+                      "labels": SDS((B,), F32)}
+        batch_sh = {"ids": _batch_sharding(mesh, (B, cfg.n_fields),
+                                           (None,)),
+                    "labels": _batch_sharding(mesh, (B,))}
+
+        def step(params, opt_state, batch):
+            def loss_fn(p):
+                logits = xdeepfm_apply(p, cfg, batch["ids"])
+                return bce_with_logits(logits, batch["labels"])
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = apply_updates(params, grads, opt_state,
+                                              OPT_CFG)
+            return params, opt_state, loss
+
+        return BuiltCell(
+            name=f"{arch}@{shape.name}", fn=step,
+            args=(params_spec, opt_spec, batch_spec),
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(p_sh, o_sh, _repl(mesh)),
+            donate=(0, 1), meta={"cfg": cfg, "kind": "train"})
+
+    if shape.kind == "serve":
+        B = shape.params["batch"]
+        ids_spec = SDS((B, cfg.n_fields), I32)
+
+        def step(params, ids):
+            return jax.nn.sigmoid(xdeepfm_apply(params, cfg, ids))
+
+        return BuiltCell(
+            name=f"{arch}@{shape.name}", fn=step,
+            args=(params_spec, ids_spec),
+            in_shardings=(p_sh, _batch_sharding(mesh, (B, cfg.n_fields),
+                                                (None,))),
+            out_shardings=_batch_sharding(mesh, (B,)),
+            meta={"cfg": cfg, "kind": "serve"})
+
+    # retrieval: 1 user row vs n_candidates item rows
+    NC = shape.params["n_candidates"]
+    Fu = cfg.n_fields // 2
+    Fc = cfg.n_fields - Fu
+    user_spec = SDS((1, Fu), I32)
+    cand_spec = SDS((NC, Fc), I32)
+
+    def step(params, user_ids, cand_ids):
+        return retrieval_score(params, cfg, user_ids, cand_ids)
+
+    return BuiltCell(
+        name=f"{arch}@{shape.name}", fn=step,
+        args=(params_spec, user_spec, cand_spec),
+        in_shardings=(p_sh, _repl(mesh),
+                      _batch_sharding(mesh, (NC, Fc), (None,))),
+        out_shardings=_batch_sharding(mesh, (NC,)),
+        meta={"cfg": cfg, "kind": "retrieval"})

@@ -1,0 +1,21 @@
+"""Core push-pull machinery (the paper's contribution)."""
+
+from .cost_model import Cost, zero_cost
+from .direction import (Direction, DirectionPolicy, Fixed, GenericSwitch,
+                        GreedySwitch)
+from .engine import PushPullEngine, VertexProgram, EngineResult
+from .linalg import (Semiring, PLUS_TIMES, MIN_PLUS, OR_AND, spmv_pull,
+                     spmspv_push)
+from .primitives import (push_relax, pull_relax, pull_relax_ell, k_filter,
+                         frontier_out_edges, frontier_in_edges,
+                         combine_identity)
+
+__all__ = [
+    "Cost", "zero_cost",
+    "Direction", "DirectionPolicy", "Fixed", "GenericSwitch", "GreedySwitch",
+    "PushPullEngine", "VertexProgram", "EngineResult",
+    "Semiring", "PLUS_TIMES", "MIN_PLUS", "OR_AND", "spmv_pull",
+    "spmspv_push",
+    "push_relax", "pull_relax", "pull_relax_ell", "k_filter",
+    "frontier_out_edges", "frontier_in_edges", "combine_identity",
+]

@@ -1,0 +1,23 @@
+from .pagerank import pagerank, pagerank_pa, PageRankResult
+from .triangle_count import triangle_count, TriangleCountResult
+from .bfs import bfs, BFSResult
+from .sssp_delta import sssp_delta, SSSPResult
+from .betweenness import betweenness_centrality, BCResult
+from .coloring import (boman_coloring, fe_coloring, greedy_sequential,
+                       conflict_removal_coloring, ColoringResult,
+                       validate_coloring)
+from .mst_boruvka import boruvka_mst, MSTResult
+from .wcc import wcc, WCCResult
+from .pr_delta import pagerank_delta, PRDeltaResult
+
+__all__ = [
+    "wcc", "WCCResult", "pagerank_delta", "PRDeltaResult",
+    "pagerank", "pagerank_pa", "PageRankResult",
+    "triangle_count", "TriangleCountResult",
+    "bfs", "BFSResult",
+    "sssp_delta", "SSSPResult",
+    "betweenness_centrality", "BCResult",
+    "boman_coloring", "fe_coloring", "greedy_sequential",
+    "conflict_removal_coloring", "ColoringResult", "validate_coloring",
+    "boruvka_mst", "MSTResult",
+]

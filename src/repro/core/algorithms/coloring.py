@@ -1,0 +1,270 @@
+"""Boman Graph Coloring — paper §3.6 / §4.6 / Algorithm 6 + §5 strategies
+(FE Frontier-Exploit, GS Generic-Switch, GrS Greedy-Switch, CR
+Conflict-Removal, Algorithm 9).
+
+Structure per iteration (Algorithm 6):
+  phase 1  seq_color_partition: each partition (thread) greedily first-fit
+           colors its own uncolored vertices — *sequential within,
+           parallel across* partitions. JAX realization: fori_loop over
+           the local slot i; slot i of every partition colors in parallel
+           (a [P]-vector step), which is exactly the PRAM schedule.
+  phase 2  fix_conflicts over border vertices:
+           push — the iterating endpoint *writes the other endpoint's*
+                  state (cross-partition CAS; O(Lm) combining writes);
+           pull — each endpoint re-checks and demotes *itself* (remote
+                  reads only).
+           The loser of a conflict is the higher vertex id (deterministic,
+           direction-independent result).
+
+Colors are 1..C; 0 = uncolored. All strategies return identical-validity
+colorings; they differ in iterations and Cost — Table 6b's subject.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ...graphs.partition import partition_1d
+from ...graphs.structure import Graph
+from ..cost_model import Cost
+
+__all__ = ["boman_coloring", "fe_coloring", "greedy_sequential",
+           "conflict_removal_coloring", "ColoringResult", "validate_coloring"]
+
+
+class ColoringResult(NamedTuple):
+    colors: jax.Array      # int32[n] in 1..C (0 only if C exhausted)
+    cost: Cost
+    iterations: jax.Array
+    num_colors: jax.Array
+
+
+def validate_coloring(g: Graph, colors: jax.Array) -> jax.Array:
+    """True iff no edge joins two equal nonzero colors."""
+    cs = jnp.take(colors, g.coo_src, mode="fill", fill_value=0)
+    cd = jnp.take(colors, g.coo_dst, mode="fill", fill_value=0)
+    bad = (cs == cd) & (cs > 0)
+    return ~jnp.any(bad)
+
+
+def _used_mask(g: Graph, v_ids: jax.Array, colors: jax.Array, C: int):
+    """bool[k, C+1]: colors already used in N(v) for each v in v_ids."""
+    nbrs = g.ell_idx[jnp.minimum(v_ids, g.n - 1)]          # [k, d_ell]
+    ncol = jnp.take(jnp.pad(colors, (0, 1)), nbrs, axis=0)  # sentinel -> 0
+    ncol = jnp.where(nbrs < g.n, ncol, 0)
+    return (jax.nn.one_hot(ncol, C + 1, dtype=jnp.int32).sum(axis=1) > 0)
+
+
+def _first_fit(used: jax.Array) -> jax.Array:
+    """Smallest color in 1..C not present in `used` [k, C+1]; 0 if none."""
+    C = used.shape[-1] - 1
+    free = ~used[:, 1:]                                     # colors 1..C
+    any_free = jnp.any(free, axis=-1)
+    pick = jnp.argmax(free, axis=-1).astype(jnp.int32) + 1
+    return jnp.where(any_free, pick, 0)
+
+
+def _phase1(g: Graph, colors: jax.Array, P: int, C: int, cost: Cost,
+            only_mask: jax.Array | None = None):
+    """seq_color_partition for all partitions (slot-synchronous greedy)."""
+    part = partition_1d(g.n, P)
+    S = part.shard_size
+
+    def slot(i, carry):
+        colors_c, cost_c = carry
+        v = jnp.minimum(i + S * jnp.arange(P, dtype=jnp.int32), g.n - 1)
+        valid = (i + S * jnp.arange(P, dtype=jnp.int32)) < g.n
+        todo = (jnp.take(colors_c, v) == 0) & valid
+        if only_mask is not None:
+            todo &= jnp.take(only_mask, v)
+        used = _used_mask(g, v, colors_c, C)
+        pick = _first_fit(used)
+        new = jnp.where(todo, pick, jnp.take(colors_c, v))
+        colors_c = colors_c.at[v].set(new)
+        # reads: neighbor color scan; writes: one private write per vertex
+        cost_c = cost_c.charge(
+            reads=jnp.sum(jnp.where(todo, g.in_deg[v], 0).astype(jnp.int64)),
+            writes=jnp.sum(todo.astype(jnp.int64)))
+        return colors_c, cost_c
+
+    return jax.lax.fori_loop(0, S, slot, (colors, cost))
+
+
+def _fix_conflicts(g: Graph, colors: jax.Array, P: int, direction: str,
+                   cost: Cost):
+    """Phase 2: demote the higher-id endpoint of every conflicting
+    cross-partition edge. Push writes the neighbor, pull writes self."""
+    part = partition_1d(g.n, P)
+    own_s = part.owner(g.coo_src)
+    own_d = part.owner(g.coo_dst)
+    cs = jnp.take(colors, g.coo_src, mode="fill", fill_value=0)
+    cd = jnp.take(colors, g.coo_dst, mode="fill", fill_value=0)
+    cross = own_s != own_d
+    conflict = cross & (cs == cd) & (cs > 0)
+    n_conf = jnp.sum(conflict.astype(jnp.int64))
+    # loser = higher id endpoint; symmetric edge list covers both roles
+    loser_is_dst = g.coo_dst > g.coo_src
+    demote_dst = conflict & loser_is_dst
+    demote = jax.ops.segment_max(
+        demote_dst.astype(jnp.int32), g.coo_dst, num_segments=g.n) > 0
+    colors = jnp.where(demote, 0, colors)
+    # border scan reads both endpoint colors
+    cost = cost.charge(reads=2 * jnp.sum(cross.astype(jnp.int64)))
+    if direction == "push":
+        # iterating endpoint CASes the other endpoint's color slot
+        cost = cost.charge_combining_writes(n_conf, float_data=False)
+    else:
+        # pull: loser re-reads neighbors and demotes itself (private write)
+        cost = cost.charge(reads=n_conf, writes=jnp.sum(demote.astype(jnp.int64)))
+    return colors, cost, n_conf
+
+
+@partial(jax.jit, static_argnames=("num_parts", "C", "direction", "max_iters"))
+def boman_coloring(g: Graph, num_parts: int = 16, C: int = 64,
+                   direction: str = "push", max_iters: int = 64
+                   ) -> ColoringResult:
+    """Baseline BGC (Algorithm 6), push or pull conflict fixing."""
+    n = g.n
+
+    def cond(st):
+        colors, cost, it, conf = st
+        return (it < max_iters) & ((it == 0) | (conf > 0))
+
+    def body(st):
+        colors, cost, it, _ = st
+        colors, cost = _phase1(g, colors, num_parts, C, cost)
+        cost = cost.charge(barriers=1)
+        colors, cost, conf = _fix_conflicts(g, colors, num_parts, direction,
+                                            cost)
+        cost = cost.charge(iterations=1, barriers=1)
+        return colors, cost, it + 1, conf
+
+    colors, cost, iters, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros((n,), jnp.int32), Cost(), jnp.int32(0),
+                     jnp.int64(1)))
+    return ColoringResult(colors=colors, cost=cost, iterations=iters,
+                          num_colors=jnp.max(colors))
+
+
+@partial(jax.jit, static_argnames=("direction", "max_iters", "gs_threshold",
+                                   "use_gs"))
+def fe_coloring(g: Graph, key: jax.Array, direction: str = "push",
+                max_iters: int = 256, use_gs: bool = False,
+                gs_threshold: float = 0.1) -> ColoringResult:
+    """Frontier-Exploit BGC (§5-FE), optional Generic-Switch (§5-GS).
+
+    Round i colors the uncolored neighbors of the frontier with color c_i.
+      push mode: all candidates grab c_i; adjacent candidate pairs conflict
+                 and the higher id reverts (stays for a later round) —
+                 fewer reads, more rounds (Table 6b: orc 49 -> 173);
+      pull/GS mode: a candidate takes c_i only if it out-prioritizes all
+                 uncolored neighbors (Jones–Plassmann style) — conflict-
+                 free by construction, used once the uncolored tail drops
+                 below `gs_threshold * n` when `use_gs`.
+    """
+    n = g.n
+    prio = jax.random.permutation(key, n).astype(jnp.int32)
+
+    # initial stable set: local priority maxima (one Luby step)
+    nbr_prio = jnp.take(jnp.pad(prio, (0, 1), constant_values=-1),
+                        g.ell_idx, axis=0)
+    nbr_prio = jnp.where(g.ell_idx < n, nbr_prio, -1)
+    stable = prio > nbr_prio.max(axis=1)
+    colors0 = jnp.where(stable, 1, 0).astype(jnp.int32)
+
+    def cond(st):
+        colors, frontier, c_i, cost, it = st
+        return (it < max_iters) & jnp.any(colors == 0)
+
+    def body(st):
+        colors, frontier, c_i, cost, it = st
+        # candidates: uncolored vertices adjacent to the frontier
+        fpad = jnp.pad(frontier, (0, 1))
+        adj_f = jnp.take(fpad, g.ell_idx, axis=0) & (g.ell_idx < n)
+        cand = (colors == 0) & jnp.any(adj_f, axis=1)
+        cand = cand | ((colors == 0) & ~jnp.any(frontier))  # restart islands
+        uncol_pad = jnp.pad(colors == 0, (0, 1))
+        nbr_uncol = jnp.take(uncol_pad, g.ell_idx, axis=0)   # [n, d_ell]
+        nbr_uncol = jnp.where(g.ell_idx < n, nbr_uncol, False)
+
+        do_pull = jnp.asarray(use_gs) & (
+            jnp.sum((colors == 0).astype(jnp.int32))
+            < jnp.int32(gs_threshold * n))
+
+        # pull / JP: take c_i only when out-prioritizing uncolored nbrs
+        nbr_prio_u = jnp.where(nbr_uncol, nbr_prio, -1)
+        wins = prio > nbr_prio_u.max(axis=1)
+        take_pull = cand & wins
+
+        # push: everyone grabs c_i; the higher-id endpoint of each
+        # candidate-candidate edge conflicts and reverts to uncolored
+        cpad = jnp.pad(cand, (0, 1))
+        nbr_cand = jnp.take(cpad, g.ell_idx, axis=0) & (g.ell_idx < n)
+        min_cand_nbr = jnp.where(nbr_cand, g.ell_idx, n).min(axis=1)
+        take_push = cand & (min_cand_nbr > jnp.arange(n, dtype=jnp.int32))
+
+        take = jnp.where(do_pull, take_pull, take_push)
+        colors = jnp.where(take, c_i, colors)
+        frontier = take
+        reads = jnp.sum(jnp.where(cand, g.in_deg, 0).astype(jnp.int64))
+        cost = cost.charge(reads=reads, writes=jnp.sum(take.astype(jnp.int64)),
+                           iterations=1, barriers=1)
+        conflicts = jnp.sum((cand & ~take).astype(jnp.int64))
+        cost = jax.lax.cond(
+            do_pull, lambda c: c,
+            lambda c: c.charge_combining_writes(conflicts, float_data=False),
+            cost)
+        return colors, frontier, c_i + 1, cost, it + 1
+
+    init = (colors0, stable, jnp.int32(2), Cost().charge(iterations=1), jnp.int32(0))
+    colors, _, _, cost, iters = jax.lax.while_loop(cond, body, init)
+    return ColoringResult(colors=colors, cost=cost, iterations=iters + 1,
+                          num_colors=jnp.max(colors))
+
+
+def greedy_sequential(g: Graph, colors: jax.Array, mask: jax.Array, C: int,
+                      cost: Cost):
+    """One-at-a-time first-fit over `mask` vertices (the GrS tail / CR
+    border pre-pass). Sequential ⇒ conflict-free by construction."""
+    n = g.n
+
+    def step(i, carry):
+        colors_c, cost_c = carry
+        v = jnp.int32(i)
+        todo = jnp.take(mask, v) & (jnp.take(colors_c, v) == 0)
+        used = _used_mask(g, v[None], colors_c, C)
+        pick = _first_fit(used)[0]
+        colors_c = colors_c.at[v].set(
+            jnp.where(todo, pick, jnp.take(colors_c, v)))
+        cost_c = cost_c.charge(
+            reads=jnp.where(todo, g.in_deg[v], 0).astype(jnp.int64),
+            writes=todo.astype(jnp.int64))
+        return colors_c, cost_c
+
+    return jax.lax.fori_loop(0, n, step, (colors, cost))
+
+
+@partial(jax.jit, static_argnames=("num_parts", "C"))
+def conflict_removal_coloring(g: Graph, num_parts: int = 16, C: int = 64
+                              ) -> ColoringResult:
+    """§5-CR (Algorithm 9): greedily pre-color the border set B, then color
+    partition interiors in parallel — zero conflicts, one iteration."""
+    part = partition_1d(g.n, num_parts)
+    own_s = part.owner(g.coo_src)
+    own_d = part.owner(g.coo_dst)
+    cross = own_s != own_d
+    border = (jax.ops.segment_max(cross.astype(jnp.int32), g.coo_dst,
+                                  num_segments=g.n) > 0)
+    colors = jnp.zeros((g.n,), jnp.int32)
+    colors, cost = greedy_sequential(g, colors, border, C, Cost())
+    cost = cost.charge(barriers=1)
+    colors, cost = _phase1(g, colors, num_parts, C, cost,
+                           only_mask=~border)
+    cost = cost.charge(iterations=1)
+    return ColoringResult(colors=colors, cost=cost,
+                          iterations=jnp.int32(1),
+                          num_colors=jnp.max(colors))

@@ -1,0 +1,135 @@
+"""Boruvka MST — paper §3.7 / §4.7 / Algorithm 7.
+
+Each round: (FM) every supervertex finds its minimum-weight outgoing edge;
+(BMT/M) incident supervertices hook along those edges and contract via
+pointer jumping. Rounds at least halve the component count: O(log n).
+
+push (FM): every edge offers its key to *both* incident supervertices'
+      shared minimum slots — cross-component combining-min writes (CAS
+      loops on CPU; O(n²)-bounded atomics, Table 1);
+pull (FM): each supervertex privately min-reduces over its own incident
+      edges — reads only, no combining writes.
+
+Determinism: edge keys pack (weight bits, undirected-pair rank) into one
+int64, so comparison is orientation-invariant — the per-cycle global
+minimum is picked identically from both sides, hence hooking only creates
+mutual 2-cycles (broken toward the lower root) and pointer jumping always
+terminates. Both directions return the same MST.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ...graphs.structure import Graph
+from ...sparse.segment import segment_min
+from ..cost_model import Cost
+
+__all__ = ["boruvka_mst", "MSTResult"]
+
+
+class MSTResult(NamedTuple):
+    in_mst: jax.Array       # bool[m] over pull-major edge slots (1 orient.)
+    weight: jax.Array       # float32 total MST weight
+    components: jax.Array   # int32 final component count (1 if connected)
+    cost: Cost
+    rounds: jax.Array
+
+
+@partial(jax.jit, static_argnames=("direction", "max_rounds"))
+def boruvka_mst(g: Graph, direction: str = "pull", max_rounds: int = 64
+                ) -> MSTResult:
+    n, m = g.n, g.m
+    eid = jnp.arange(m, dtype=jnp.int64)
+    src, dst, w = g.coo_src, g.coo_dst, g.coo_w
+    BIG = jnp.iinfo(jnp.int64).max
+
+    # orientation-invariant undirected pair rank in [0, m)
+    lo = jnp.minimum(src, dst).astype(jnp.int64)
+    hi = jnp.maximum(src, dst).astype(jnp.int64)
+    pair = lo * (n + 1) + hi
+    _, pair_rank = jnp.unique(pair, return_inverse=True, size=m)
+    # weights are positive floats: int32 bit pattern preserves order
+    wbits = jax.lax.bitcast_convert_type(w, jnp.int32).astype(jnp.int64)
+    pairkey = wbits * (m + 1) + pair_rank
+
+    def cond(st):
+        comp, in_mst, cost, rnd, done = st
+        return (~done) & (rnd < max_rounds)
+
+    def body(st):
+        comp, in_mst, cost, rnd, _ = st
+        cs = jnp.take(comp, src)
+        cd = jnp.take(comp, dst)
+        external = cs != cd
+        key = jnp.where(external, pairkey, BIG)
+
+        # --- FM: orientation-invariant min key per component ------------
+        if direction == "pull":
+            min_key = segment_min(key, cs, n)
+            cost = cost.charge(reads=jnp.asarray(m, jnp.int64),
+                               writes=jnp.asarray(n, jnp.int64))
+        else:
+            min_a = segment_min(key, cs, n)
+            min_b = segment_min(key, cd, n)
+            min_key = jnp.minimum(min_a, min_b)
+            k_ext = jnp.sum(external.astype(jnp.int64))
+            cost = cost.charge(reads=jnp.asarray(m, jnp.int64))
+            cost = cost.charge_combining_writes(k_ext, float_data=False)
+        cost = cost.charge(barriers=1)
+        has_edge = min_key < BIG
+
+        # representative slot (src-side orientation always exists because
+        # the edge list is symmetric): min slot among winners
+        winner = key == jnp.take(min_key, cs)
+        sel_slot = segment_min(jnp.where(winner, eid, BIG), cs, n)
+        sel_slot_c = jnp.where(has_edge, sel_slot, 0).astype(jnp.int32)
+        hit = jnp.zeros((m,), bool).at[sel_slot_c].set(has_edge)
+        in_mst = in_mst | hit
+
+        # --- BMT/M: hook to the other side's component, contract --------
+        other = jnp.take(comp, jnp.take(dst, sel_slot_c))
+        parent = jnp.where(has_edge, other, jnp.arange(n, dtype=jnp.int32))
+        # mutual 2-cycles: the lower root wins and becomes a root
+        pp = jnp.take(parent, parent)
+        me = jnp.arange(n, dtype=jnp.int32)
+        parent = jnp.where((pp == me) & (me < parent), me, parent)
+
+        # pointer jumping: depth halves per step -> ceil(log2 n)+1 bounds
+        # convergence; fori (not while) so malformed hooks can never hang
+        n_jumps = max(1, math.ceil(math.log2(max(2, n))) + 1)
+        parent = jax.lax.fori_loop(
+            0, n_jumps, lambda _, p: jnp.take(p, p), parent)
+        comp_new = jnp.take(parent, comp)
+        cost = cost.charge(writes=jnp.asarray(n, jnp.int64), barriers=1,
+                           iterations=1)
+        done = ~jnp.any(has_edge)
+        return comp_new, in_mst, cost, rnd + 1, done
+
+    comp0 = jnp.arange(n, dtype=jnp.int32)
+    comp, in_mst, cost, rounds, _ = jax.lax.while_loop(
+        cond, body, (comp0, jnp.zeros((m,), bool), Cost(), jnp.int32(0),
+                     jnp.bool_(False)))
+
+    # total weight with undirected dedup (both orientations may be marked)
+    order = jnp.argsort(pair)
+    pair_s = pair[order]
+    sel_s = in_mst[order]
+    w_s = w[order]
+    first = jnp.concatenate([jnp.array([True]), pair_s[1:] != pair_s[:-1]])
+    grp = jnp.cumsum(first.astype(jnp.int32)) - 1
+    any_sel = jax.ops.segment_max(sel_s.astype(jnp.int32), grp,
+                                  num_segments=m) > 0
+    pair_w = jax.ops.segment_max(w_s, grp, num_segments=m)
+    weight = jnp.sum(jnp.where(any_sel, pair_w, 0.0))
+
+    roots = jax.ops.segment_max(jnp.ones((n,), jnp.int32), comp,
+                                num_segments=n) > 0
+    components = jnp.sum(roots.astype(jnp.int32))
+    return MSTResult(in_mst=in_mst, weight=weight, components=components,
+                     cost=cost, rounds=rounds)

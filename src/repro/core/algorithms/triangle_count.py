@@ -1,0 +1,83 @@
+"""Triangle Counting — paper §3.2 / §4.2 / Algorithm 2 (NodeIterator).
+
+For every edge (v,u) intersect N(v) ∩ N(u). Each triangle {v,u,w} is seen
+6 times over directed edge enumerations, so Σ/ per-vertex counts divide
+accordingly:
+
+  pull: t[v] accumulates |N(v) ∩ N(u)| into tc(v) — private accumulation
+        (0 atomics; O(m·d̂) reads);
+  push: the intersection size is credited to the *other* endpoints (u / w)
+        — combining integer writes (FAA; O(m·d̂) atomics, Table 1).
+
+Implementation: ELL rows give rectangular [d_ell] neighbor lists; the
+intersection is an all-pairs compare of two gathered rows (O(m·d_ell²)
+dense work — TPU-friendly, MXU-independent). Per-vertex counts tc[v] end
+up *identical* across directions; Cost differs per Table 1.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ...graphs.structure import Graph
+from ...sparse.segment import segment_sum
+from ..cost_model import Cost
+
+__all__ = ["triangle_count", "TriangleCountResult"]
+
+
+class TriangleCountResult(NamedTuple):
+    per_vertex: jax.Array   # int32[n] triangles through each vertex
+    total: jax.Array        # int64 total triangle count
+    cost: Cost
+
+
+@partial(jax.jit, static_argnames=("direction", "edge_block"))
+def triangle_count(g: Graph, direction: str = "pull",
+                   edge_block: int = 4096) -> TriangleCountResult:
+    """Count per-vertex and total triangles (undirected simple graph)."""
+    n, d_ell = g.n, g.d_ell
+    idx_pad = jnp.concatenate(
+        [g.ell_idx, jnp.full((1, d_ell), n, jnp.int32)], axis=0)
+
+    num_blocks = -(-g.m // edge_block)
+    m_pad = num_blocks * edge_block
+    src = jnp.pad(g.coo_src, (0, m_pad - g.m), constant_values=n)
+    dst = jnp.pad(g.coo_dst, (0, m_pad - g.m), constant_values=n)
+
+    def block_body(carry, blk):
+        tc, cost = carry
+        s = jax.lax.dynamic_slice(src, (blk * edge_block,), (edge_block,))
+        d = jax.lax.dynamic_slice(dst, (blk * edge_block,), (edge_block,))
+        nv = idx_pad[jnp.minimum(s, n)]              # [B, d_ell]
+        nu = idx_pad[jnp.minimum(d, n)]              # [B, d_ell]
+        # all-pairs equality, sentinel (=n) never matches a real id
+        eq = (nv[:, :, None] == nu[:, None, :]) & (nv[:, :, None] < n)
+        common = eq.sum(axis=(1, 2)).astype(jnp.int32)     # |N(v) ∩ N(u)|
+        common = jnp.where((s < n) & (d < n), common, 0)
+        if direction == "pull":
+            # accumulate into the iterating vertex v=dst of pull-major edges
+            tc = tc + segment_sum(common, jnp.minimum(d, n - 1), n)
+            cost = cost.charge(
+                reads=2 * edge_block * d_ell, writes=edge_block)
+        else:
+            # push: credit the two *other* endpoints (scatter, FAA)
+            tc_u = segment_sum(common, jnp.minimum(s, n - 1), n)
+            tc = tc + tc_u
+            cost = cost.charge(reads=2 * edge_block * d_ell)
+            cost = cost.charge_combining_writes(
+                jnp.sum(common).astype(jnp.int64), float_data=False)
+        return (tc, cost), None
+
+    tc0 = jnp.zeros((n,), jnp.int32)
+    (tc_raw, cost), _ = jax.lax.scan(
+        block_body, (tc0, Cost()), jnp.arange(num_blocks))
+    # each triangle at v is counted once per ordered pair of its two other
+    # vertices adjacent to v => 2x per vertex
+    per_vertex = tc_raw // 2
+    total = jnp.sum(per_vertex.astype(jnp.int64)) // 3
+    return TriangleCountResult(per_vertex=per_vertex, total=total, cost=cost)

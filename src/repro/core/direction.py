@@ -1,0 +1,93 @@
+"""Direction selection: push / pull / auto (paper §3.8, §5 GS/GrS).
+
+`DirectionPolicy` implements the paper's switching strategies as pure
+functions of cheap frontier statistics, so they can run inside jitted
+loops (`lax.cond` on the boolean they return):
+
+  * ``Fixed``            — always push or always pull.
+  * ``GenericSwitch``    — the direction-optimizing heuristic (Beamer's
+    BFS rule generalized per paper §5-GS): push while the frontier's
+    incident out-edges are below ``alpha * m`` (sparse frontier ⇒ push does
+    less work), pull once the frontier densifies; switch back for the
+    shrinking tail using ``beta * n``.
+  * ``GreedySwitch``     — GS plus a terminal hand-off: when the active set
+    drops below ``tail_frac * n`` the algorithm exits the parallel loop and
+    a sequential/greedy tail finishes the job (paper §5-GrS; the tail
+    runner is supplied by each algorithm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax
+import jax.numpy as jnp
+
+from ..graphs.structure import Graph
+from .primitives import frontier_out_edges
+
+__all__ = ["Direction", "Fixed", "GenericSwitch", "GreedySwitch",
+           "DirectionPolicy"]
+
+
+class Direction(enum.Enum):
+    PUSH = "push"
+    PULL = "pull"
+    AUTO = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectionPolicy:
+    """Base: decide_push(graph, frontier, unvisited) -> bool[] (traced)."""
+
+    def decide_push(self, g: Graph, frontier: jax.Array,
+                    unvisited_edges: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__
+
+
+@dataclasses.dataclass(frozen=True)
+class Fixed(DirectionPolicy):
+    direction: Direction = Direction.PUSH
+
+    def decide_push(self, g, frontier, unvisited_edges):
+        return jnp.asarray(self.direction == Direction.PUSH)
+
+    @property
+    def name(self) -> str:
+        return self.direction.value
+
+
+@dataclasses.dataclass(frozen=True)
+class GenericSwitch(DirectionPolicy):
+    """Beamer-style direction optimization.
+
+    push iff  m_frontier < unvisited_edges / alpha   (growing phase)
+          or  m_frontier < m / beta                  (shrinking tail).
+    Defaults follow Beamer et al. (alpha=14, beta=24).
+    """
+    alpha: float = 14.0
+    beta: float = 24.0
+
+    def decide_push(self, g, frontier, unvisited_edges):
+        mf = frontier_out_edges(g, frontier)
+        grow_push = mf * self.alpha < unvisited_edges
+        tail_push = mf * self.beta < g.m
+        return grow_push | tail_push
+
+
+@dataclasses.dataclass(frozen=True)
+class GreedySwitch(DirectionPolicy):
+    """GS + terminal greedy hand-off once the active set is tiny."""
+    inner: GenericSwitch = dataclasses.field(default_factory=GenericSwitch)
+    tail_frac: float = 0.001
+
+    def decide_push(self, g, frontier, unvisited_edges):
+        return self.inner.decide_push(g, frontier, unvisited_edges)
+
+    def should_handoff(self, g: Graph, active_count: jax.Array) -> jax.Array:
+        return active_count < jnp.maximum(1, int(self.tail_frac * g.n))

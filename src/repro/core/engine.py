@@ -1,0 +1,86 @@
+"""PushPullEngine — the paper's contribution as a composable JAX module.
+
+A *vertex program* is (msg_fn, combine, update_fn):
+
+    msg_fn(src_value, edge_weight) -> message          (⊗ of §7.1)
+    combine ∈ {sum, min, max}                          (⊕ / CRCW-CB)
+    update_fn(old_state, combined_msgs, step) -> (new_state, frontier)
+
+The engine runs it to a fixed point (or `max_steps`) under a
+DirectionPolicy, executing each step as either a push k-relaxation
+(scatter from the frontier) or a pull k-relaxation (gather into all
+vertices), with only the chosen direction evaluated at runtime
+(`lax.cond`). Everything the framework's GNN layers and graph algorithms
+need reduces to this loop; PR/BFS/etc. in `algorithms/` are hand-tuned
+instances with richer carries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..graphs.structure import Graph
+from .cost_model import Cost
+from .direction import DirectionPolicy, Fixed, Direction
+from .primitives import frontier_in_edges, pull_relax, push_relax
+
+__all__ = ["VertexProgram", "PushPullEngine", "EngineResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    combine: str
+    msg_fn: Optional[Callable] = None
+    # update_fn(state, msgs, step) -> (state, frontier, converged)
+    update_fn: Callable = None  # type: ignore[assignment]
+
+
+class EngineResult(NamedTuple):
+    state: jax.Array
+    cost: Cost
+    steps: jax.Array
+    push_steps: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PushPullEngine:
+    program: VertexProgram
+    policy: DirectionPolicy = Fixed(Direction.PULL)
+    max_steps: int = 100
+
+    @partial(jax.jit, static_argnames=("self",))
+    def run(self, g: Graph, init_state: jax.Array,
+            init_frontier: jax.Array) -> EngineResult:
+        prog = self.program
+
+        def cond(st):
+            _state, _frontier, conv, step, *_ = st
+            return (~conv) & (step < self.max_steps)
+
+        def body(st):
+            state, frontier, _conv, step, cost, pushes = st
+            unvisited_edges = frontier_in_edges(g, jnp.ones((g.n,), bool))
+            do_push = self.policy.decide_push(g, frontier, unvisited_edges)
+            msgs, cost = jax.lax.cond(
+                do_push,
+                lambda s, f, c: push_relax(g, s, f, combine=prog.combine,
+                                           msg_fn=prog.msg_fn, cost=c),
+                lambda s, f, c: pull_relax(g, s, combine=prog.combine,
+                                           msg_fn=prog.msg_fn, cost=c),
+                state, frontier, cost)
+            state, frontier, conv = prog.update_fn(state, msgs, step)
+            cost = cost.charge(iterations=1, barriers=1)
+            return (state, frontier, conv, step + 1, cost,
+                    pushes + do_push.astype(jnp.int32))
+
+        init = (init_state, init_frontier, jnp.bool_(False), jnp.int32(0),
+                Cost(), jnp.int32(0))
+        state, _, _, steps, cost, pushes = jax.lax.while_loop(
+            cond, body, init)
+        return EngineResult(state=state, cost=cost, steps=steps,
+                            push_steps=pushes)

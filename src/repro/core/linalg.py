@@ -1,0 +1,84 @@
+"""Algebraic (semiring) formulation — paper §7.1.
+
+  pull  ≡ CSR SpMV: each output row privately reduces A's row — great for
+          dense x, cannot exploit x's sparsity;
+  push  ≡ CSC SpMSpV: iterate only the columns where x is nonzero, scatter-
+          combine into y — exploits x sparsity, needs combining writes.
+
+`Semiring` carries (⊕, ⊗, 0̄). plus-times gives PR; min-plus gives SSSP
+relaxation; or-and gives BFS reachability. Both products return the same
+vector; they differ in layout, access order, and Cost — which is the whole
+point of the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..graphs.structure import Graph
+from ..sparse.segment import segment_max, segment_min, segment_sum
+from .cost_model import Cost
+from .primitives import frontier_out_edges
+
+__all__ = ["Semiring", "PLUS_TIMES", "MIN_PLUS", "OR_AND",
+           "spmv_pull", "spmspv_push"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    combine: str                      # 'sum' | 'min' | 'max' segment reduce
+    mul: Callable[[jax.Array, jax.Array], jax.Array]
+    zero: float
+
+    def segment_reduce(self, vals, ids, n):
+        fn = {"sum": segment_sum, "min": segment_min, "max": segment_max}[
+            self.combine]
+        return fn(vals, ids, n)
+
+
+PLUS_TIMES = Semiring("plus_times", "sum", lambda x, w: x * w, 0.0)
+MIN_PLUS = Semiring("min_plus", "min", lambda x, w: x + w, jnp.inf)
+OR_AND = Semiring("or_and", "max", lambda x, w: x, 0.0)
+
+
+def spmv_pull(g: Graph, x: jax.Array, sr: Semiring = PLUS_TIMES,
+              cost: Cost = Cost()) -> tuple[jax.Array, Cost]:
+    """y = A ⊗ x in CSR (pull) order: y[v] = ⊕_{u in N_in(v)} x[u] ⊗ w."""
+    vals = sr.mul(jnp.take(x, g.coo_src, axis=0, mode="fill",
+                           fill_value=float(sr.zero)), g.coo_w)
+    y = sr.segment_reduce(vals, g.coo_dst, g.n)
+    if sr.combine in ("min", "max") and jnp.issubdtype(y.dtype, jnp.floating):
+        y = jnp.where(jnp.isfinite(y), y, jnp.asarray(sr.zero, y.dtype))
+    cost = cost.charge(reads=jnp.asarray(g.m, jnp.int64),
+                       writes=jnp.asarray(g.n, jnp.int64))
+    return y, cost
+
+
+def spmspv_push(g: Graph, x: jax.Array, nonzero: jax.Array,
+                sr: Semiring = PLUS_TIMES,
+                cost: Cost = Cost()) -> tuple[jax.Array, Cost]:
+    """y = A ⊗ x in CSC (push) order, exploiting x's sparsity mask.
+
+    Only columns with ``nonzero[u]`` contribute; combining writes are
+    charged per touched edge (int payload -> atomics, float -> locks).
+    """
+    xe = jnp.take(x, g.push_src, axis=0, mode="fill",
+                  fill_value=float(sr.zero))
+    active = jnp.take(nonzero, g.push_src, axis=0, mode="fill",
+                      fill_value=False)
+    vals = sr.mul(xe, g.push_w)
+    vals = jnp.where(active, vals, jnp.asarray(sr.zero, vals.dtype))
+    if sr.combine == "min":
+        vals = jnp.where(active, vals, jnp.asarray(jnp.inf, vals.dtype))
+    y = sr.segment_reduce(vals, g.push_dst, g.n)
+    if sr.combine in ("min", "max") and jnp.issubdtype(y.dtype, jnp.floating):
+        y = jnp.where(jnp.isfinite(y), y, jnp.asarray(sr.zero, y.dtype))
+    k = frontier_out_edges(g, nonzero)
+    cost = cost.charge(reads=k).charge_combining_writes(
+        k, float_data=jnp.issubdtype(x.dtype, jnp.floating))
+    return y, cost

@@ -1,0 +1,172 @@
+"""k-relaxation / k-filter as JAX primitives (paper §4 'Cost Derivations').
+
+The paper reduces every algorithm to two primitives:
+
+  * **k-relaxation** — propagate updates along k edges. Push: from the k
+    active sources to their neighbors (combining writes). Pull: into each
+    destination from its neighbors (private accumulation).
+  * **k-filter** — compact the set of updated vertices (only needed when
+    pushing; pulling inspects every vertex anyway).
+
+Here both directions are dense-frontier JAX ops with identical *results*
+and different *memory-access structure*; each returns (value, Cost) where
+the Cost charges exactly what the paper's Table 1 counts:
+
+  push: reads = Σ out_deg(frontier); combining writes = same (atomics for
+        int payloads, locks for float payloads — CPUs lack float atomics).
+  pull: reads = Σ in_deg(touched dst) (all m when dst set is dense);
+        writes = |touched dst|, zero atomics/locks.
+
+TPU note: on static-shape hardware the dense-masked formulation touches
+all m lanes regardless; the Cost model charges the *algorithmic* counts
+(what a frontier-compacted CPU/DM implementation moves), which is what the
+roofline's collective term consumes. Wall-clock CPU benchmarks measure the
+dense formulation; kernels/coo_push.py exploits frontier block sparsity.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..graphs.structure import Graph
+from ..sparse.segment import segment_max, segment_min, segment_sum
+from .cost_model import Cost
+
+__all__ = [
+    "push_relax", "pull_relax", "pull_relax_ell", "k_filter",
+    "frontier_out_edges", "frontier_in_edges", "COMBINE_FNS",
+    "combine_identity",
+]
+
+COMBINE_FNS = {
+    "sum": segment_sum,
+    "max": segment_max,
+    "min": segment_min,
+}
+
+
+def combine_identity(combine: str, dtype) -> jax.Array:
+    """Reduce identity: what an edge contributes when masked out, and what
+    an empty segment holds after the reduce (callers test against it)."""
+    if combine == "sum":
+        return jnp.zeros((), dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        val = jnp.inf if combine == "min" else -jnp.inf
+        return jnp.asarray(val, dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.asarray(info.max if combine == "min" else info.min, dtype)
+
+
+def frontier_out_edges(g: Graph, frontier: jax.Array) -> jax.Array:
+    """int64 count of out-edges incident to the frontier = push work."""
+    return jnp.sum(jnp.where(frontier, g.out_deg, 0).astype(jnp.int64))
+
+
+def frontier_in_edges(g: Graph, touched: jax.Array) -> jax.Array:
+    """int64 count of in-edges of touched destinations = pull work."""
+    return jnp.sum(jnp.where(touched, g.in_deg, 0).astype(jnp.int64))
+
+
+def _edge_messages(values: jax.Array, src: jax.Array, w: jax.Array,
+                   msg_fn: Optional[Callable]) -> jax.Array:
+    """Per-edge message = msg_fn(value[src], w); default value*1."""
+    x = jnp.take(values, src, axis=0, mode="fill", fill_value=0)
+    if msg_fn is None:
+        return x
+    return msg_fn(x, w)
+
+
+def push_relax(g: Graph, values: jax.Array, frontier: jax.Array,
+               combine: str = "sum",
+               msg_fn: Optional[Callable] = None,
+               cost: Cost = Cost()) -> tuple[jax.Array, Cost]:
+    """Push k-relaxation over the push-major (CSC) edge order.
+
+    values: float/int [n] or [n, d] source payloads.
+    frontier: bool[n]; only edges whose src is active contribute.
+    Returns combined updates per destination, [n] or [n, d].
+    """
+    active_e = jnp.take(frontier, g.push_src, axis=0, mode="fill",
+                        fill_value=False)
+    msgs = _edge_messages(values, g.push_src, g.push_w, msg_fn)
+    ident = combine_identity(combine, msgs.dtype)
+    if msgs.ndim > 1:
+        active_b = active_e.reshape((-1,) + (1,) * (msgs.ndim - 1))
+    else:
+        active_b = active_e
+    msgs = jnp.where(active_b, msgs, ident)
+    out = COMBINE_FNS[combine](msgs, g.push_dst, g.n)
+    k = frontier_out_edges(g, frontier)
+    width = 1 if values.ndim == 1 else values.shape[-1]
+    cost = cost.charge(reads=k * width).charge_combining_writes(
+        k * width, float_data=jnp.issubdtype(values.dtype, jnp.floating))
+    return out, cost
+
+
+def pull_relax(g: Graph, values: jax.Array, touched: Optional[jax.Array] = None,
+               combine: str = "sum",
+               msg_fn: Optional[Callable] = None,
+               cost: Cost = Cost()) -> tuple[jax.Array, Cost]:
+    """Pull k-relaxation over the pull-major (CSR) edge order.
+
+    Each destination privately combines messages from ALL of its
+    in-neighbors; ``touched`` (bool[n]) restricts which destinations are
+    updated (their reads are still charged — pull must scan to know).
+    """
+    msgs = _edge_messages(values, g.coo_src, g.coo_w, msg_fn)
+    out = COMBINE_FNS[combine](msgs, g.coo_dst, g.n)
+    if touched is None:
+        k = jnp.asarray(g.m, jnp.int64)
+        wr = jnp.asarray(g.n, jnp.int64)
+    else:
+        tb = touched.reshape((-1,) + (1,) * (out.ndim - 1))
+        # masked-out destinations hold the reduce identity (= "no update")
+        out = jnp.where(tb, out, combine_identity(combine, out.dtype))
+        k = frontier_in_edges(g, touched)
+        wr = jnp.sum(touched.astype(jnp.int64))
+    width = 1 if values.ndim == 1 else values.shape[-1]
+    cost = cost.charge(reads=k * width, writes=wr * width)
+    return out, cost
+
+
+def pull_relax_ell(g: Graph, values: jax.Array,
+                   combine: str = "sum",
+                   msg_fn: Optional[Callable] = None,
+                   cost: Cost = Cost()) -> tuple[jax.Array, Cost]:
+    """Pull relaxation in ELL layout — dense [n, d_ell] gather+reduce.
+    Mathematically equals pull_relax with touched=None; this is the layout
+    the `ell_spmv` Pallas kernel tiles (rectangular VMEM blocks)."""
+    v_pad = jnp.pad(values, [(0, 1)] + [(0, 0)] * (values.ndim - 1))
+    gathered = jnp.take(v_pad, g.ell_idx, axis=0)  # [n, d_ell, ...]
+    if msg_fn is not None:
+        w = g.ell_w
+        if gathered.ndim == 3:
+            w = w[..., None]
+        gathered = msg_fn(gathered, w)
+    valid = (g.ell_idx < g.n)
+    if gathered.ndim == 3:
+        valid = valid[..., None]
+    ident = combine_identity(combine, gathered.dtype)
+    gathered = jnp.where(valid, gathered, ident)
+    if combine == "sum":
+        out = gathered.sum(axis=1)
+    elif combine == "max":
+        out = gathered.max(axis=1)
+    else:
+        out = gathered.min(axis=1)
+    width = 1 if values.ndim == 1 else values.shape[-1]
+    cost = cost.charge(reads=jnp.asarray(g.m, jnp.int64) * width,
+                       writes=jnp.asarray(g.n, jnp.int64) * width)
+    return out, cost
+
+
+def k_filter(updated: jax.Array, cost: Cost = Cost()) -> tuple[jax.Array, Cost]:
+    """k-filter: extract the updated-vertex set. Dense-mask world: identity
+    on the mask, but charges the prefix-sum cost O(min(k, n)) the paper
+    assigns (push only — pull checks every vertex anyway)."""
+    k = jnp.sum(updated.astype(jnp.int64))
+    return updated, cost.charge(reads=k, writes=k, barriers=1)

@@ -1,0 +1,32 @@
+"""Acceleration strategies (paper §5) — index + shared helpers.
+
+Implementations live with their algorithms; this module is the map:
+
+  PA  Partition-Awareness   -> graphs.partition.pa_split (the split) +
+                               algorithms.pagerank.pagerank_pa (Algorithm 8)
+                               + dist.collectives.pa_exchange (DM variant)
+  FE  Frontier-Exploit      -> algorithms.coloring.fe_coloring
+                               graphs.sampling (GraphSAGE fanout = FE)
+  GS  Generic-Switch        -> direction.GenericSwitch (BFS/engine) +
+                               fe_coloring(use_gs=True)
+  GrS Greedy-Switch         -> direction.GreedySwitch + greedy_tail below
+  CR  Conflict-Removal      -> algorithms.coloring.conflict_removal_coloring
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..graphs.structure import Graph
+from .cost_model import Cost
+from .algorithms.coloring import greedy_sequential
+
+__all__ = ["greedy_tail_coloring"]
+
+
+def greedy_tail_coloring(g: Graph, colors, C: int, cost: Cost):
+    """GrS terminal hand-off for coloring: finish all still-uncolored
+    vertices with the sequential greedy scheme (conflict-free)."""
+    mask = colors == 0
+    colors, cost = greedy_sequential(g, colors, mask, C, cost)
+    return colors, cost.charge(iterations=1)

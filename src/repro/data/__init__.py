@@ -1,0 +1,5 @@
+from .pipeline import (token_batches, recsys_batches, molecule_batches,
+                       Prefetcher, prefetch)
+
+__all__ = ["token_batches", "recsys_batches", "molecule_batches",
+           "Prefetcher", "prefetch"]

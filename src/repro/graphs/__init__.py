@@ -1,0 +1,13 @@
+from .structure import Graph, build_graph, pad_values
+from .generators import (kronecker, erdos_renyi, road_grid, ring, star,
+                         standin, STANDIN_SPECS)
+from .partition import Partition, partition_1d, PartitionedEdges, pa_split
+from .sampling import SampledBlocks, sample_neighbors, sample_blocks
+
+__all__ = [
+    "Graph", "build_graph", "pad_values",
+    "kronecker", "erdos_renyi", "road_grid", "ring", "star", "standin",
+    "STANDIN_SPECS",
+    "Partition", "partition_1d", "PartitionedEdges", "pa_split",
+    "SampledBlocks", "sample_neighbors", "sample_blocks",
+]

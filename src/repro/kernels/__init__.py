@@ -1,0 +1,5 @@
+from .ops import pull_spmv, push_combine, flash_attention, cin_layer
+from . import ref
+
+__all__ = ["pull_spmv", "push_combine", "flash_attention", "cin_layer",
+           "ref"]

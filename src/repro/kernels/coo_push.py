@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: frontier-masked push relaxation (segment combine).
+
+Paper hot spot: the push k-relaxation — active sources scatter combined
+updates into destination slots (CSC SpMSpV, §7.1). On CPU this is an
+atomic per edge; the TPU adaptation replaces atomics with **tile-serial
+combining**: edges arrive sorted by destination, the grid walks edge
+tiles *sequentially*, and each tile accumulates into an output vector
+held resident across grid steps. Combining inside a tile uses a one-hot
+matmul (MXU-friendly CRCW-CB combine); cross-tile conflicts are resolved
+by the sequential grid — deterministic, atomic-free.
+
+Window invariant: ``block_e`` consecutive dst-sorted edges touch at most
+``block_e`` distinct destinations, so a window of ``block_e + block_n``
+anchored at the tile's first destination block always covers the tile.
+
+Frontier masking implements the SpMSpV sparsity: edges whose source is
+inactive contribute the identity. The accumulator is kept whole (fits
+VMEM for the kernel-benchmark sizes; a production variant would shard
+nodes over cores — see DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["coo_push_pallas"]
+
+
+def _kernel(x_ref, active_ref, src_ref, dst_ref, w_ref, dstblk_ref,
+            acc_ref, *, n: int, block_e: int, block_n: int, win: int):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    src = src_ref[...]
+    dst = dst_ref[...]
+    w = w_ref[...]
+    valid = src < n
+    safe_src = jnp.where(valid, src, 0)
+    x = x_ref[safe_src]
+    act = active_ref[safe_src] > 0
+    msg = jnp.where(valid & act, x * w, 0.0)
+    base = dstblk_ref[0]
+    rel = dst - base                       # in [0, win) by construction
+    ok = (rel >= 0) & (rel < win)
+    rel = jnp.clip(rel, 0, win - 1)
+    msg = jnp.where(ok, msg, 0.0)
+    # CRCW-CB combine inside the tile: one-hot matmul (MXU path on TPU)
+    onehot = (rel[None, :] == jnp.arange(win)[:, None]).astype(jnp.float32)
+    local = onehot @ msg                   # [win]
+    window = jax.lax.dynamic_slice(acc_ref[...], (base,), (win,))
+    acc_ref[...] = jax.lax.dynamic_update_slice(
+        acc_ref[...], window + local, (base,))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "block_e", "block_n", "interpret"))
+def coo_push_pallas(x: jax.Array, active: jax.Array, src: jax.Array,
+                    dst: jax.Array, w: jax.Array, n: int,
+                    block_e: int = 512, block_n: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    """Push-combine sum over dst-sorted COO edges.
+
+    x: f32[n] source payloads; active: bool[n] frontier; src/dst: i32[m]
+    (sorted by dst); w: f32[m]. Returns f32[n] (sum semiring).
+    """
+    m = src.shape[0]
+    win = block_e + block_n
+    m_pad = -(-m // block_e) * block_e
+    srcp = jnp.pad(src, (0, m_pad - m), constant_values=n)
+    dstp = jnp.pad(dst, (0, m_pad - m), constant_values=n - 1)
+    wp = jnp.pad(w, (0, m_pad - m))
+    n_pad = -(-n // block_n) * block_n + win
+    first_dst = dstp.reshape(-1, block_e)[:, 0]
+    anchors = ((first_dst // block_n) * block_n).astype(jnp.int32)
+    grid = (m_pad // block_e,)
+    acc = pl.pallas_call(
+        functools.partial(_kernel, n=n, block_e=block_e, block_n=block_n,
+                          win=win),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda e: (0,)),
+            pl.BlockSpec(active.shape, lambda e: (0,)),
+            pl.BlockSpec((block_e,), lambda e: (e,)),
+            pl.BlockSpec((block_e,), lambda e: (e,)),
+            pl.BlockSpec((block_e,), lambda e: (e,)),
+            pl.BlockSpec((1,), lambda e: (e,)),
+        ],
+        out_specs=pl.BlockSpec((n_pad,), lambda e: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(x, active.astype(jnp.int32), srcp, dstp, wp, anchors)
+    return acc[:n]

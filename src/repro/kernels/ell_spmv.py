@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: ELL-format pull relaxation (gather + combine).
+
+Paper hot spot: the pull k-relaxation — every destination vertex privately
+combines messages from its in-neighbors (CSR SpMV, §7.1). TPU adaptation
+(DESIGN.md §9): CSR row-pointer chasing is hostile to VMEM tiling, so the
+graph substrate materializes an ELL view — a rectangular [n, d_ell]
+padded neighbor matrix — and the kernel becomes a dense-shaped
+gather+reduce with sentinel masking:
+
+    out[v] = combine_{j < d_ell} x[ell_idx[v, j]] * ell_w[v, j]
+
+Grid: one program per (node-block); the padded value vector x lives in
+ANY/HBM and is gathered per tile; indices/weights stream through VMEM
+blocks of shape [block_n, d_ell]. The gather itself uses dynamic indexing
+into the x ref — irregular reads stay inside the tile (the paper's
+"communication" axis), while writes are private per block (zero
+synchronization — the pull property).
+
+Supports combine in {sum, max, min} over f32 payloads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ell_spmv_pallas"]
+
+
+def _kernel(x_ref, idx_ref, w_ref, out_ref, *, combine: str, n: int,
+            block_n: int, d_ell: int):
+    # idx_ref/w_ref: [block_n, d_ell] VMEM tiles; x_ref: [n+1] in ANY/VMEM
+    idx = idx_ref[...]
+    w = w_ref[...]
+    valid = idx < n
+    safe = jnp.where(valid, idx, 0)
+    gathered = x_ref[safe]                  # [block_n, d_ell] gather
+    msgs = gathered * w
+    if combine == "sum":
+        out = jnp.where(valid, msgs, 0.0).sum(axis=1)
+    elif combine == "max":
+        out = jnp.where(valid, msgs, -jnp.inf).max(axis=1)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    else:
+        out = jnp.where(valid, msgs, jnp.inf).min(axis=1)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("combine", "block_n", "interpret"))
+def ell_spmv_pallas(x_padded: jax.Array, ell_idx: jax.Array,
+                    ell_w: jax.Array, combine: str = "sum",
+                    block_n: int = 256, interpret: bool = True
+                    ) -> jax.Array:
+    """x_padded: f32[n+1] (sentinel row 0.0 at index n);
+    ell_idx: i32[n, d_ell]; ell_w: f32[n, d_ell]. Returns f32[n]."""
+    n, d_ell = ell_idx.shape
+    n_pad = -(-n // block_n) * block_n
+    idx = jnp.pad(ell_idx, ((0, n_pad - n), (0, 0)), constant_values=n)
+    w = jnp.pad(ell_w, ((0, n_pad - n), (0, 0)))
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, combine=combine, n=n, block_n=block_n,
+                          d_ell=d_ell),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x_padded.shape, lambda i: (0,)),   # full vector
+            pl.BlockSpec((block_n, d_ell), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, d_ell), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(x_padded, idx, w)
+    return out[:n]

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: blocked online-softmax attention (FlashAttention).
+
+The decode/prefill hot spot of the LM cells. Grid (batch*heads, q_blocks);
+the kv loop runs inside the kernel body with running (m, l, o) statistics
+held in VMEM scratch — the [T, T] score matrix never exists. Supports
+causal masking, sliding window, and gemma2 logit soft-capping.
+
+BlockSpec tiling: q/o blocks [block_q, d]; k/v stream in [block_k, d]
+tiles via an inner fori_loop over kv blocks (all KV of one (b, h) is
+mapped into the kernel; MXU-aligned block sizes: multiples of 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+            seq_len: int, window: int, softcap: float, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # [block_q, d]
+    d = q.shape[-1]
+    n_kv = seq_len // block_k
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+
+    def body(ki, carry):
+        m, l, o = carry
+        k = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k),
+                            pl.dslice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k),
+                            pl.dslice(None))).astype(jnp.float32)
+        s = q @ k.T                                   # [block_q, block_k]
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        o_new = o * corr[:, None] + p @ v
+        return m_new, l_new, o_new
+
+    m0 = jnp.full((block_q,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    o0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, o = jax.lax.fori_loop(0, n_kv, body, (m0, l0, o0))
+    o_ref[0] = (o / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal_window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal_window: int = 1 << 30,
+                           softcap: float = 0.0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q,k,v: [B, H, T, d] (kv heads pre-broadcast to H). Causal, optional
+    sliding window + softcap. Returns [B, H, T, d] in q.dtype."""
+    B, H, T, d = q.shape
+    bq = min(block_q, T)
+    bk = min(block_k, T)
+    T_pad = -(-T // max(bq, bk)) * max(bq, bk)
+    if T_pad != T:
+        pad = ((0, 0), (0, 0), (0, T_pad - T), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    qf = q.reshape(B * H, T_pad, d)
+    kf = k.reshape(B * H, T_pad, d)
+    vf = v.reshape(B * H, T_pad, d)
+    grid = (B * H, T_pad // bq)
+    scale = d ** -0.5
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=bq, block_k=bk, seq_len=T_pad,
+                          window=causal_window, softcap=softcap,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, T_pad, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, T_pad, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T_pad, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, T_pad, d)[:, :, :T]

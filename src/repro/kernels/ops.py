@@ -1,0 +1,59 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+`interpret` defaults to True (this container is CPU-only; on real TPUs
+pass interpret=False — the kernels are written against TPU BlockSpec/VMEM
+semantics). Wrappers adapt framework-level structures (Graph, GQA heads)
+to kernel-level layouts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..graphs.structure import Graph
+from .cin import cin_layer_pallas
+from .coo_push import coo_push_pallas
+from .ell_spmv import ell_spmv_pallas
+from .flash_attention import flash_attention_pallas
+
+__all__ = ["pull_spmv", "push_combine", "flash_attention", "cin_layer"]
+
+
+def pull_spmv(g: Graph, x: jax.Array, combine: str = "sum",
+              interpret: bool = True) -> jax.Array:
+    """Pull k-relaxation via the ELL kernel. x: f32[n] -> f32[n]."""
+    x_pad = jnp.pad(x.astype(jnp.float32), (0, 1))
+    return ell_spmv_pallas(x_pad, g.ell_idx, g.ell_w, combine=combine,
+                           interpret=interpret)
+
+
+def push_combine(g: Graph, x: jax.Array, active: jax.Array,
+                 interpret: bool = True) -> jax.Array:
+    """Push k-relaxation (sum) via the COO kernel over dst-sorted edges."""
+    return coo_push_pallas(x.astype(jnp.float32), active, g.coo_src,
+                           g.coo_dst, g.coo_w, g.n, interpret=interpret)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal_window: int = 1 << 30, softcap: float = 0.0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """GQA-aware flash attention. q: [B, T, H, d]; k/v: [B, T, Hk, d]
+    (broadcast to H inside). Returns [B, T, H, d]."""
+    B, T, H, d = q.shape
+    Hk = k.shape[2]
+    group = H // Hk
+    kb = jnp.repeat(k, group, axis=2)
+    vb = jnp.repeat(v, group, axis=2)
+    out = flash_attention_pallas(
+        q.transpose(0, 2, 1, 3), kb.transpose(0, 2, 1, 3),
+        vb.transpose(0, 2, 1, 3), causal_window=causal_window,
+        softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+def cin_layer(xk: jax.Array, x0: jax.Array, w: jax.Array,
+              interpret: bool = True) -> jax.Array:
+    return cin_layer_pallas(xk, x0, w, interpret=interpret)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ell_spmv_ref", "coo_push_ref", "flash_attention_ref",
+           "cin_layer_ref"]
+
+
+def ell_spmv_ref(x_padded, ell_idx, ell_w, combine: str = "sum"):
+    n = ell_idx.shape[0]
+    gathered = x_padded[jnp.minimum(ell_idx, n)] * ell_w
+    valid = ell_idx < n
+    if combine == "sum":
+        return jnp.where(valid, gathered, 0.0).sum(axis=1)
+    if combine == "max":
+        out = jnp.where(valid, gathered, -jnp.inf).max(axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    out = jnp.where(valid, gathered, jnp.inf).min(axis=1)
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def coo_push_ref(x, active, src, dst, w, n):
+    ok = src < n
+    msg = jnp.where(ok & active[jnp.minimum(src, n - 1)],
+                    x[jnp.minimum(src, n - 1)] * w, 0.0)
+    return jax.ops.segment_sum(msg, jnp.minimum(dst, n - 1),
+                               num_segments=n)
+
+
+def flash_attention_ref(q, k, v, causal_window: int = 1 << 30,
+                        softcap: float = 0.0):
+    """q,k,v: [B, H, T, d]; plain materialized-scores attention."""
+    B, H, T, d = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(T)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - causal_window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def cin_layer_ref(xk, x0, w):
+    z = jnp.einsum("bid,bjd->bijd", xk.astype(jnp.float32),
+                   x0.astype(jnp.float32))
+    return jnp.einsum("hij,bijd->bhd", w.astype(jnp.float32), z
+                      ).astype(xk.dtype)

@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every assigned (arch × shape) cell
+on the production meshes and dump memory/cost analysis + collective stats.
+
+MUST keep the two lines above first — jax locks the device count at first
+init, so no repro/jax import may precede them.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+        --shape train_4k --mesh single --out results.json
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax  # noqa: E402  (after XLA_FLAGS on purpose)
+
+from repro.configs.registry import all_cells, build_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.roofline.analysis import (collective_bytes_from_hlo,  # noqa: E402
+                                     roofline_report)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             direction: str = "pull", zero: str = "pull",
+             overrides=None, want_text: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, direction=direction, zero=zero,
+                      overrides=overrides)
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate)
+    with mesh:
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    n_dev = mesh.devices.size
+
+    def _get(obj, name):
+        v = getattr(obj, name, None)
+        return int(v) if v is not None else None
+
+    result = {
+        "cell": f"{arch}@{shape}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "direction": direction,
+        "zero": zero,
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": _get(mem, "argument_size_in_bytes"),
+            "output_bytes": _get(mem, "output_size_in_bytes"),
+            "temp_bytes": _get(mem, "temp_size_in_bytes"),
+            "generated_code_bytes": _get(mem, "generated_code_size_in_bytes"),
+            "alias_bytes": _get(mem, "alias_size_in_bytes"),
+        },
+        "cost": {
+            "flops": float(cost.get("flops", 0.0)) if cost else None,
+            "bytes_accessed": (float(cost.get("bytes accessed", 0.0))
+                               if cost else None),
+        },
+        "collectives": coll,
+    }
+    # scan-over-layers cells: cost_analysis counts the loop body once
+    cfg_meta = cell.meta.get("cfg")
+    loop_factor = getattr(cfg_meta, "n_layers", 1) \
+        if type(cfg_meta).__name__ == "TransformerConfig" else 1
+    result["roofline"] = roofline_report(result, loop_factor=loop_factor)
+    if want_text:
+        result["hlo_head"] = hlo[:4000]
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--direction", default="pull")
+    ap.add_argument("--zero", default="pull")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = all_cells()
+    if args.list:
+        for a, s in cells:
+            print(f"{a}@{s}")
+        return 0
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    if not cells:
+        print("no matching cells", file=sys.stderr)
+        return 2
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    results, failures = [], []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}@{shape} [{'multi' if mp else 'single'}]"
+            try:
+                r = run_cell(arch, shape, mp, direction=args.direction,
+                             zero=args.zero)
+                results.append(r)
+                mb = (r["memory"]["argument_bytes"] or 0) / (1 << 20)
+                print(f"OK   {tag:55s} lower={r['t_lower_s']:6.1f}s "
+                      f"compile={r['t_compile_s']:6.1f}s "
+                      f"args/dev={mb:9.1f}MiB "
+                      f"coll={r['collectives']['total_bytes']/(1<<20):9.1f}MiB",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — report, keep going
+                failures.append({"cell": tag, "error": repr(e),
+                                 "trace": traceback.format_exc()[-2000:]})
+                print(f"FAIL {tag}: {e!r}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "failures": failures}, f,
+                      indent=1)
+    print(f"\n{len(results)} ok, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

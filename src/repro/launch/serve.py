@@ -1,0 +1,56 @@
+"""Serving launcher: batched decode for an LM arch (smoke config on CPU;
+the full config follows the decode cells' shardings on a pod).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b \
+        --requests 8 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCH_FAMILY, smoke_config
+from repro.models.transformer import init_params
+from repro.serve import ServeConfig, ServeLoop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    choices=[a for a, f in ARCH_FAMILY.items()
+                             if f == "lm"])
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--cache", choices=["bf16", "int8", "f32"],
+                    default="bf16")
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    loop = ServeLoop(params, cfg,
+                     ServeConfig(max_len=args.max_len, batch=args.slots,
+                                 cache_kind=args.cache))
+    rids = [loop.submit([1 + i, 5 + i, 9 + i])
+            for i in range(args.requests)]
+    t0 = time.perf_counter()
+    steps = 0
+    while (loop.active.any() or loop.queue) and steps < 10_000:
+        loop.step(max_new=args.max_new)
+        steps += 1
+    dt = time.perf_counter() - t0
+    done = sum(1 for r in rids if len(loop.outputs[r]) >= args.max_new)
+    total_toks = sum(len(v) for v in loop.outputs.values())
+    print(f"{args.arch} ({cfg.name}): {done}/{args.requests} requests, "
+          f"{total_toks} tokens in {steps} steps / {dt:.2f}s "
+          f"({total_toks/max(dt,1e-9):.1f} tok/s, {args.slots} slots, "
+          f"{args.cache} cache)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

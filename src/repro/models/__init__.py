@@ -1,0 +1,27 @@
+from .common import (rms_norm, layer_norm, softcap, mlp_init, mlp_apply,
+                     dense_init, dense_apply, embed_init, param_count,
+                     tree_size_bytes)
+from .attention import AttnConfig, attn_init, attn_apply, rope
+from .transformer import (TransformerConfig, init_params, forward, lm_loss,
+                          decode_step, init_kv_cache)
+from .moe import MoEConfig, moe_init, moe_apply
+from .gnn import (GNNConfig, egnn_init, egnn_apply, gin_init, gin_apply,
+                  sage_init, sage_apply, sage_apply_blocks,
+                  graphcast_init, graphcast_apply)
+from .recsys import (XDeepFMConfig, xdeepfm_init, xdeepfm_apply, cin_apply,
+                     retrieval_score)
+
+__all__ = [
+    "rms_norm", "layer_norm", "softcap", "mlp_init", "mlp_apply",
+    "dense_init", "dense_apply", "embed_init", "param_count",
+    "tree_size_bytes",
+    "AttnConfig", "attn_init", "attn_apply", "rope",
+    "TransformerConfig", "init_params", "forward", "lm_loss",
+    "decode_step", "init_kv_cache",
+    "MoEConfig", "moe_init", "moe_apply",
+    "GNNConfig", "egnn_init", "egnn_apply", "gin_init", "gin_apply",
+    "sage_init", "sage_apply", "sage_apply_blocks",
+    "graphcast_init", "graphcast_apply",
+    "XDeepFMConfig", "xdeepfm_init", "xdeepfm_apply", "cin_apply",
+    "retrieval_score",
+]

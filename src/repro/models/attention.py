@@ -1,0 +1,253 @@
+"""Attention: GQA + RoPE, sliding-window/global alternation, logit
+soft-capping (gemma2), QKV bias (qwen), and decode paths over KV caches
+(bf16 / int8-quantized / sliding-window ring).
+
+Shapes: activations [B, T, D]; heads split as [B, T, H, Dh]. All einsums
+keep the head axis explicit so TP sharding rules can target it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dense_apply, softcap
+
+__all__ = ["AttnConfig", "attn_init", "attn_apply", "rope",
+           "decode_attn_apply", "KVCacheSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 500000.0
+    qkv_bias: bool = False            # qwen1.5
+    window: Optional[int] = None      # sliding window (gemma2 local layers)
+    logit_softcap: Optional[float] = None  # gemma2
+    query_scale: Optional[float] = None
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.n_heads * cfg.head_dim,
+                         dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, cfg.d_model, cfg.n_kv_heads * cfg.head_dim,
+                         dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, cfg.d_model, cfg.n_kv_heads * cfg.head_dim,
+                         dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.n_heads * cfg.head_dim, cfg.d_model, dtype),
+    }
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; x: [..., T, H, Dh], positions: [..., T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -jnp.log(jnp.asarray(theta, jnp.float32))
+        * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    y1 = (x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin)
+    y2 = (x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin)
+    return jnp.concatenate([y1.astype(dt), y2.astype(dt)], axis=-1)
+
+
+def _scores_mask(Tq: int, Tk: int, offset, window: Optional[int]):
+    """Causal (+ optional sliding window) mask [Tq, Tk]; offset = absolute
+    position of query 0 minus key 0."""
+    q_pos = jnp.arange(Tq, dtype=jnp.int32)[:, None] + offset
+    k_pos = jnp.arange(Tk, dtype=jnp.int32)[None, :]
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > (q_pos - window)
+    return mask
+
+
+def _sdpa(q, k, v, mask, cfg: AttnConfig):
+    """q:[B,Tq,H,Dh] k,v:[B,Tk,Hk,Dh] grouped-query attention core.
+    mask: [Tq, Tk] (shared) or any shape broadcastable to
+    [B, Hk, group, Tq, Tk] (per-row decode masks)."""
+    B, Tq, H, Dh = q.shape
+    Hk = k.shape[2]
+    group = H // Hk
+    scale = cfg.query_scale if cfg.query_scale is not None else Dh ** -0.5
+    qg = q.reshape(B, Tq, Hk, group, Dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cfg.logit_softcap is not None:
+        logits = softcap(logits, cfg.logit_softcap)
+    if mask.ndim == 2:
+        mask = mask[None, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Tq, H, Dh).astype(q.dtype)
+
+
+def blockwise_sdpa(q, k, v, cfg: AttnConfig, window, q_chunk: int = 512,
+                   kv_chunk: int = 1024):
+    """Streaming (flash-style) attention in pure jnp: online softmax over
+    KV chunks, scanned over Q chunks. Never materializes [T, T] scores —
+    the prefill_32k/long-context cells depend on this. `window` is a
+    traced int32 scalar (big value = global); causal.
+
+    This is also the ref oracle shape for kernels/flash_attention.py.
+    """
+    B, T, H, Dh = q.shape
+    Hk = k.shape[2]
+    group = H // Hk
+    scale = cfg.query_scale if cfg.query_scale is not None else Dh ** -0.5
+    qc = min(q_chunk, T)
+    kc = min(kv_chunk, T)
+    nq, nk = -(-T // qc), -(-T // kc)
+    Tq_pad, Tk_pad = nq * qc, nk * kc
+    qp = jnp.pad(q, ((0, 0), (0, Tq_pad - T), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tk_pad - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tk_pad - T), (0, 0), (0, 0)))
+    # keep q/k/v in their storage dtype: the MXU does bf16 x bf16 -> f32
+    # natively (preferred_element_type), so f32 copies would only burn HBM
+    qg = qp.reshape(B, nq, qc, Hk, group, Dh)
+    kg = kp.reshape(B, nk, kc, Hk, Dh)
+    vg = vp.reshape(B, nk, kc, Hk, Dh)
+
+    def q_block(_, qi):
+        qb = qg[:, qi]                               # [B, qc, Hk, g, Dh]
+        q_pos = qi * qc + jnp.arange(qc, dtype=jnp.int32)
+
+        def kv_block(carry, ki):
+            m, l, o = carry
+            kb = kg[:, ki]                           # [B, kc, Hk, Dh]
+            vb = vg[:, ki]
+            k_pos = ki * kc + jnp.arange(kc, dtype=jnp.int32)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if cfg.logit_softcap is not None:
+                s = softcap(s, cfg.logit_softcap)
+            mask = ((k_pos[None, :] <= q_pos[:, None])
+                    & (k_pos[None, :] > q_pos[:, None] - window)
+                    & (k_pos[None, :] < T))
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            o_new = (o * corr[..., None]
+                     + jnp.einsum("bhgqk,bkhd->bhgqd",
+                                  p.astype(vb.dtype), vb,
+                                  preferred_element_type=jnp.float32))
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hk, group, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hk, group, qc), jnp.float32)
+        o0 = jnp.zeros((B, Hk, group, qc, Dh), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0),
+                                    jnp.arange(nk))
+        out = o / jnp.maximum(l, 1e-30)[..., None]   # [B,Hk,g,qc,Dh]
+        return None, out.transpose(0, 3, 1, 2, 4)    # [B,qc,Hk,g,Dh]
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # outs: [nq, B, qc, Hk, g, Dh] -> [B, T, H, Dh]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq_pad, H, Dh)
+    return out[:, :T].astype(q.dtype)
+
+
+def attn_apply(p, cfg: AttnConfig, x: jax.Array,
+               positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full (prefill/training) self-attention. x: [B, T, D]."""
+    B, T, D = x.shape
+    if positions is None:
+        positions = jnp.arange(T, dtype=jnp.int32)[None, :]
+    q = dense_apply(p["wq"], x).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    k = dense_apply(p["wk"], x).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = dense_apply(p["wv"], x).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    mask = _scores_mask(T, T, jnp.int32(0), cfg.window)
+    out = _sdpa(q, k, v, mask, cfg)
+    return dense_apply(p["wo"], out.reshape(B, T, -1))
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    """Static description of a layer's KV cache.
+
+    kind: 'bf16' (plain), 'int8' (per-(token,head) scaled), or the cache
+    length may be the sliding window for local layers (ring indexing).
+    """
+    length: int
+    kind: str = "bf16"
+
+
+def quantize_kv(x: jax.Array):
+    """int8 symmetric per-(B, T, H) quantization; x [B,T,Hk,Dh]."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def decode_attn_apply(p, cfg: AttnConfig, x: jax.Array, cache: dict,
+                      cur_len: jax.Array) -> tuple[jax.Array, dict]:
+    """One-token decode step against a KV cache.
+
+    x: [B, 1, D]; cache holds 'k','v' [B, S, Hk, Dh] (+ 'k_scale','v_scale'
+    for int8). ``cur_len``: int32 scalar OR int32[B] per-slot lengths
+    (continuous batching). For windowed layers the cache length S is the
+    window and writes wrap (ring buffer); RoPE positions stay absolute.
+    """
+    B, one, D = x.shape
+    S = cache["k"].shape[1]
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    pos = cur[:, None]
+    q = dense_apply(p["wq"], x).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    k = dense_apply(p["wk"], x).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = dense_apply(p["wv"], x).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    slot = jnp.mod(cur, S) if cfg.window is not None else jnp.minimum(
+        cur, S - 1)
+    rows = jnp.arange(B)
+    int8 = "k_scale" in cache
+    cache = dict(cache)
+    if int8:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache["k"] = cache["k"].at[rows, slot].set(kq[:, 0])
+        cache["v"] = cache["v"].at[rows, slot].set(vq[:, 0])
+        cache["k_scale"] = cache["k_scale"].at[rows, slot].set(ks[:, 0])
+        cache["v_scale"] = cache["v_scale"].at[rows, slot].set(vs[:, 0])
+        k_all = dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
+        v_all = dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
+    else:
+        cache["k"] = cache["k"].at[rows, slot].set(
+            k[:, 0].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[rows, slot].set(
+            v[:, 0].astype(cache["v"].dtype))
+        k_all = cache["k"].astype(x.dtype)
+        v_all = cache["v"].astype(x.dtype)
+
+    # validity per (row, cache slot): handles ring wrap + unfilled tail
+    slots = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if cfg.window is not None:
+        valid = (slots <= slot[:, None]) | (cur[:, None] >= S)
+    else:
+        valid = slots <= cur[:, None]
+    out = _sdpa(q, k_all, v_all, valid[:, None, None, None, :], cfg)
+    return dense_apply(p["wo"], out.reshape(B, 1, -1)), cache

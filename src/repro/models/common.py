@@ -1,0 +1,103 @@
+"""Shared model building blocks (pure JAX, explicit dtypes everywhere).
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Each module is
+(init_fn, apply_fn) style without a framework dependency, so sharding rules
+can address parameters by path.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Dense", "rms_norm", "layer_norm", "gelu", "silu",
+           "dense_init", "dense_apply", "embed_init", "mlp_init",
+           "mlp_apply", "softcap", "param_count", "tree_size_bytes"]
+
+Params = Any
+
+
+def _he(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = jnp.sqrt(jnp.asarray(2.0 / max(1, fan_in), jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               bias: bool = False) -> Params:
+    p = {"w": _he(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+class Dense:
+    """Tiny functional linear layer namespace."""
+    init = staticmethod(dense_init)
+    apply = staticmethod(dense_apply)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def mlp_init(key, dims: list[int], dtype=jnp.float32, bias: bool = True
+             ) -> list[Params]:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [dense_init(k, dims[i], dims[i + 1], dtype, bias=bias)
+            for i, k in enumerate(keys)]
+
+
+def mlp_apply(layers: list[Params], x: jax.Array,
+              act: Callable = jax.nn.relu, final_act: bool = False
+              ) -> jax.Array:
+    for i, p in enumerate(layers):
+        x = dense_apply(p, x)
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out32 = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out32.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    out32 = ((x32 - mu) * jax.lax.rsqrt(var + eps)
+             * scale.astype(jnp.float32) + bias.astype(jnp.float32))
+    return out32.astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+gelu = jax.nn.gelu
+silu = jax.nn.silu
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def tree_size_bytes(params: Params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

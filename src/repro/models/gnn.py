@@ -1,0 +1,308 @@
+"""GNN architectures: EGNN, GIN, GraphSAGE (full + sampled), GraphCast-EPD.
+
+Message passing is built on the paper's machinery: with every vertex
+active, a layer is one k-relaxation — **pull** reduces the pull-major
+(CSR) edge order per destination, **push** scatter-combines the push-major
+(CSC) order. Identical math, different access structure; `direction`
+selects it per layer and the Cost/roofline machinery sees the difference.
+
+Edge messages that need BOTH endpoints (EGNN, GraphCast) are computed
+edge-parallel (gather src + gather dst -> edge MLP -> segment reduce);
+`direction` then picks which sorted edge order the reduction runs over —
+exactly the CSR/CSC dichotomy of §7.1 applied to an edge-featured MPNN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..graphs.structure import Graph
+from ..graphs.sampling import SampledBlocks
+from ..sparse.segment import segment_mean, segment_sum
+from .common import mlp_apply, mlp_init, layer_norm
+
+__all__ = ["GNNConfig",
+           "egnn_init", "egnn_apply", "gin_init", "gin_apply",
+           "gin_apply_mp",
+           "sage_init", "sage_apply", "sage_apply_blocks",
+           "graphcast_init", "graphcast_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    arch: str
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    d_out: int
+    direction: str = "pull"          # 'pull' | 'push' edge-reduce order
+    aggregator: str = "sum"          # gin: sum; sage: mean
+    gin_eps_learnable: bool = True
+    n_vars: int = 227                # graphcast
+    fanouts: tuple[int, ...] = (25, 10)   # sage sampling
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+def _edge_order(g: Graph, direction: str):
+    """(src, dst) edge ids in the direction's memory order."""
+    if direction == "push":
+        return g.push_src, g.push_dst
+    return g.coo_src, g.coo_dst
+
+
+def _reduce(vals, dst, n, how="sum"):
+    return (segment_sum(vals, dst, n) if how == "sum"
+            else segment_mean(vals, dst, n))
+
+
+# ---------------------------------------------------------------- EGNN --
+def egnn_init(key, cfg: GNNConfig):
+    dt = cfg.jdtype
+    keys = jax.random.split(key, cfg.n_layers * 3 + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        ke, kx, kh = keys[3 * i: 3 * i + 3]
+        layers.append({
+            # phi_e(h_i, h_j, ||xi-xj||^2) -> message
+            "phi_e": mlp_init(ke, [2 * d + 1, d, d], dt),
+            # phi_x: message -> scalar coordinate gate
+            "phi_x": mlp_init(kx, [d, d, 1], dt),
+            # phi_h(h_i, agg) -> h update
+            "phi_h": mlp_init(kh, [2 * d, d, d], dt),
+        })
+    return {"encode": mlp_init(keys[-2], [cfg.d_in, d], dt),
+            "decode": mlp_init(keys[-1], [d, cfg.d_out], dt),
+            "layers": layers}
+
+
+def egnn_apply(params, cfg: GNNConfig, g: Graph, h: jax.Array,
+               x: jax.Array):
+    """h: [n, d_in] node features; x: [n, 3] coordinates (E(n) equivariant
+    coordinate updates). Returns (node_out [n, d_out], x')."""
+    n = g.n
+    src, dst = _edge_order(g, cfg.direction)
+    h = mlp_apply(params["encode"], h, act=jax.nn.silu, final_act=True)
+    for lp in params["layers"]:
+        hs = jnp.take(h, src, axis=0)
+        hd = jnp.take(h, dst, axis=0)
+        xs = jnp.take(x, src, axis=0)
+        xd = jnp.take(x, dst, axis=0)
+        diff = xd - xs
+        r2 = jnp.sum(diff * diff, axis=-1, keepdims=True).astype(h.dtype)
+        m = mlp_apply(lp["phi_e"], jnp.concatenate([hd, hs, r2], -1),
+                      act=jax.nn.silu, final_act=True)
+        gate = mlp_apply(lp["phi_x"], m, act=jax.nn.silu)      # [m, 1]
+        # coordinate update: mean over neighbors keeps scale stable
+        x = x + _reduce((diff.astype(h.dtype) * gate), dst, n, "mean"
+                        ).astype(x.dtype)
+        agg = _reduce(m, dst, n, "sum")
+        h = h + mlp_apply(lp["phi_h"], jnp.concatenate([h, agg], -1),
+                          act=jax.nn.silu)
+    return mlp_apply(params["decode"], h), x
+
+
+# ----------------------------------------------------------------- GIN --
+def gin_init(key, cfg: GNNConfig):
+    dt = cfg.jdtype
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        d_in = cfg.d_in if i == 0 else d
+        layers.append({
+            "mlp": mlp_init(keys[i], [d_in, d, d], dt),
+            "eps": jnp.zeros((), jnp.float32),
+        })
+    return {"layers": layers,
+            "readout": mlp_init(keys[-1], [d, cfg.d_out], dt)}
+
+
+def gin_apply(params, cfg: GNNConfig, g: Graph, h: jax.Array,
+              graph_ids: Optional[jax.Array] = None,
+              num_graphs: int = 1):
+    """Sum-aggregating GIN; graph_ids enables batched-small-graph readout
+    (the `molecule` shape)."""
+    src, dst = _edge_order(g, cfg.direction)
+    h = h.astype(cfg.jdtype)     # bf16 config halves exchange payloads
+    for lp in params["layers"]:
+        msgs = jnp.take(h, src, axis=0)
+        agg = segment_sum(msgs, dst, g.n)
+        eps = lp["eps"] if cfg.gin_eps_learnable else 0.0
+        scale = jnp.asarray(1.0 + eps, h.dtype)  # keep bf16 payloads bf16
+        h = mlp_apply(lp["mlp"], scale * h + agg,
+                      act=jax.nn.relu, final_act=True)
+    if graph_ids is not None:
+        pooled = segment_sum(h, graph_ids, num_graphs)
+    else:
+        pooled = h
+    return mlp_apply(params["readout"], pooled)
+
+
+def gin_apply_mp(params, cfg: GNNConfig, h: jax.Array, e_src: jax.Array,
+                 e_dst: jax.Array, mesh) -> jax.Array:
+    """GIN with the paper's explicit pull exchange (DESIGN.md §6):
+    edges arrive grouped by destination OWNER ([P, cap], sentinel-padded —
+    the PA layout from graphs.partition), so each layer is exactly
+
+        all_gather(h)  +  owner-local gather/segment-combine
+
+    — one collective per layer instead of GSPMD's gather-all_gather PLUS
+    scatter-all_reduce. h: [n, d] row-sharded over every mesh axis.
+    """
+    import functools
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+    n = h.shape[0]
+    nparts = 1
+    for a in axes:
+        nparts *= mesh.shape[a]
+    shard = n // nparts
+    h = h.astype(cfg.jdtype)
+
+    def _flat_idx():
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a).astype(
+                jnp.int32)
+        return idx
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(axes, None), P(axes, None), P(axes, None)),
+        out_specs=P(axes, None), check_vma=False)
+    def exchange(hb, sb, db):
+        full = jax.lax.all_gather(hb, axes, tiled=True)     # [n, d]
+        src = sb.reshape(-1)
+        dst = db.reshape(-1)
+        ok = (src < n) & (dst < n)
+        msg = jnp.where(ok[:, None],
+                        full[jnp.clip(src, 0, n - 1)], 0)
+        base = _flat_idx() * shard
+        ldst = jnp.where(ok, jnp.clip(dst - base, 0, shard - 1), shard - 1)
+        guard = jnp.where(ok[:, None], msg, 0)
+        return segment_sum(guard, ldst, shard)
+
+    for lp in params["layers"]:
+        agg = exchange(h, e_src, e_dst)
+        eps = lp["eps"] if cfg.gin_eps_learnable else 0.0
+        scale = jnp.asarray(1.0 + eps, h.dtype)
+        h = mlp_apply(lp["mlp"], scale * h + agg,
+                      act=jax.nn.relu, final_act=True)
+    return mlp_apply(params["readout"], h)
+
+
+# ----------------------------------------------------------- GraphSAGE --
+def sage_init(key, cfg: GNNConfig):
+    dt = cfg.jdtype
+    keys = jax.random.split(key, 2 * cfg.n_layers)
+    layers = []
+    for i in range(cfg.n_layers):
+        d_in = cfg.d_in if i == 0 else cfg.d_hidden
+        d_out = cfg.d_out if i == cfg.n_layers - 1 else cfg.d_hidden
+        layers.append({
+            "w_self": mlp_init(keys[2 * i], [d_in, d_out], dt),
+            "w_neigh": mlp_init(keys[2 * i + 1], [d_in, d_out], dt),
+        })
+    return {"layers": layers}
+
+
+def sage_apply(params, cfg: GNNConfig, g: Graph, h: jax.Array):
+    """Full-graph GraphSAGE-mean."""
+    src, dst = _edge_order(g, cfg.direction)
+    h = h.astype(cfg.jdtype)
+    for i, lp in enumerate(params["layers"]):
+        msgs = jnp.take(h, src, axis=0)
+        agg = segment_mean(msgs, dst, g.n)
+        h_new = (mlp_apply(lp["w_self"], h)
+                 + mlp_apply(lp["w_neigh"], agg))
+        h = jax.nn.relu(h_new) if i < len(params["layers"]) - 1 else h_new
+    return h
+
+
+def sage_apply_blocks(params, cfg: GNNConfig, blocks: SampledBlocks,
+                      feats: jax.Array):
+    """Sampled minibatch GraphSAGE (the paper's Frontier-Exploit applied to
+    training): hop-k node features [n_k, d]; aggregate children -> parents
+    layer by layer. `feats` holds features for the deepest hop ordering
+    concatenated per hop (list aligned with blocks.node_ids)."""
+    L = len(params["layers"])
+    assert blocks.num_hops == L
+    # feats: tuple of per-hop features, index 0 = seeds .. L = deepest hop
+    h_per_hop = list(feats)
+    for i, lp in enumerate(params["layers"]):
+        # layer i refreshes hops 0 .. L-i-1 from their children; deeper
+        # hops are no longer needed afterwards (standard minibatch SAGE)
+        new_h = []
+        for k in range(L - i):
+            child_h = h_per_hop[k + 1]
+            parent_h = h_per_hop[k]
+            fanout = blocks.fanouts[k]
+            n_parent = parent_h.shape[0]
+            child_ok = blocks.valid[k + 1].reshape(n_parent, fanout)
+            ch = child_h.reshape(n_parent, fanout, -1)
+            denom = jnp.maximum(child_ok.sum(-1, keepdims=True), 1)
+            agg = (ch * child_ok[..., None]).sum(1) / denom
+            h_new = (mlp_apply(lp["w_self"], parent_h)
+                     + mlp_apply(lp["w_neigh"], agg))
+            new_h.append(jax.nn.relu(h_new) if i < L - 1 else h_new)
+        h_per_hop = new_h
+    return h_per_hop[0]
+
+
+# ------------------------------------------------------------ GraphCast --
+def graphcast_init(key, cfg: GNNConfig):
+    """Encoder-processor-decoder deep MPNN (GraphCast-style, adapted: the
+    provided graph plays the multi-mesh role; see DESIGN.md §10)."""
+    dt = cfg.jdtype
+    d = cfg.d_hidden
+    keys = jax.random.split(key, 2 * cfg.n_layers + 4)
+    proc = []
+    for i in range(cfg.n_layers):
+        proc.append({
+            "edge_mlp": mlp_init(keys[2 * i], [3 * d, d, d], dt),
+            "node_mlp": mlp_init(keys[2 * i + 1], [2 * d, d, d], dt),
+            "ln_e": (jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32)),
+            "ln_n": (jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32)),
+        })
+    return {
+        "node_enc": mlp_init(keys[-4], [cfg.n_vars, d, d], dt),
+        "edge_enc": mlp_init(keys[-3], [1, d, d], dt),
+        "proc": proc,
+        "node_dec": mlp_init(keys[-2], [d, d, cfg.n_vars], dt),
+    }
+
+
+def graphcast_apply(params, cfg: GNNConfig, g: Graph, node_vars: jax.Array):
+    """node_vars: [n, n_vars] -> next-step prediction [n, n_vars]."""
+    src, dst = _edge_order(g, cfg.direction)
+    dt = cfg.jdtype
+    h = mlp_apply(params["node_enc"], node_vars.astype(dt),
+                  act=jax.nn.silu, final_act=True)
+    if cfg.direction == "push":
+        w = g.push_w
+    else:
+        w = g.coo_w
+    e = mlp_apply(params["edge_enc"], w[:, None].astype(dt),
+                  act=jax.nn.silu, final_act=True)
+    for lp in params["proc"]:
+        hs = jnp.take(h, src, axis=0)
+        hd = jnp.take(h, dst, axis=0)
+        e_in = jnp.concatenate([e, hs, hd], axis=-1)
+        e_upd = mlp_apply(lp["edge_mlp"], e_in, act=jax.nn.silu)
+        e = layer_norm(e + e_upd, *lp["ln_e"])
+        agg = segment_sum(e, dst, g.n)
+        n_upd = mlp_apply(lp["node_mlp"], jnp.concatenate([h, agg], -1),
+                          act=jax.nn.silu)
+        h = layer_norm(h + n_upd, *lp["ln_n"])
+    return node_vars + mlp_apply(params["node_dec"], h,
+                                 act=jax.nn.silu).astype(node_vars.dtype)

@@ -1,0 +1,341 @@
+"""Mixture-of-Experts FFN with push/pull dispatch (paper technique applied
+to MoE — DESIGN.md §4).
+
+Token→expert routing is a bipartite graph per microbatch. The paper's
+dichotomy maps onto the two standard dispatch schedules:
+
+  * **push dispatch** (default): tokens are scattered into per-expert
+    capacity buffers (one_hot combine matmul / segment-style scatter);
+    on a sharded mesh the buffers travel by all_to_all — the combining
+    "remote write" of §5-PA. Combine back is the transpose.
+  * **pull dispatch**: each expert *gathers* its assigned token ids
+    (argsort by expert) and writes back only its owned slice — reads
+    instead of scatters.
+
+Both produce identical outputs; the dry-run/roofline chooses per cell.
+Shared experts (deepseek) run densely for every token — they are the
+"local partition" that never pays dispatch (PA analogy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import BATCH, hint
+from .common import dense_init, dense_apply, silu
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply", "moe_apply_ep"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    dispatch: str = "push"            # 'push' | 'pull'
+    router_dtype: str = "float32"
+    # EP combine psum payload: 'f32' (exact) or 'bf16' (halves the
+    # collective bytes; each token sums <= top_k expert contributions,
+    # so precision loss is benign) — hillclimb lever
+    combine_dtype: str = "f32"
+    # EP schedule: 'psum' — every model rank dispatches every (replicated)
+    # token to its local experts, psum combines (pull-style: redundant
+    # reads, no routing traffic); 'a2a' — ranks split the token sequence,
+    # route via all_to_all, return via all_to_all (+ all_gather) — the
+    # paper's MP combined-alltoall push, 16x less dispatch memory traffic
+    ep_mode: str = "psum"
+
+
+def _expert_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),
+        "wg": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    kr, ke, ks = jax.random.split(key, 3)
+    params = {
+        "router": dense_init(kr, cfg.d_model, cfg.n_experts, jnp.float32),
+        # experts stacked on a leading axis -> shardable over 'model' (EP)
+        "experts": jax.vmap(
+            lambda k: _expert_init(k, cfg.d_model, cfg.d_ff_expert, dtype)
+        )(jax.random.split(ke, cfg.n_experts)),
+    }
+    if cfg.n_shared:
+        params["shared"] = jax.vmap(
+            lambda k: _expert_init(k, cfg.d_model, cfg.d_ff_expert, dtype)
+        )(jax.random.split(ks, cfg.n_shared))
+    return params
+
+
+def _expert_ffn(p, x):
+    """SwiGLU expert; p leaves have a leading expert axis when vmapped."""
+    return dense_apply({"w": p["wo"]["w"]},
+                       silu(dense_apply({"w": p["wg"]["w"]}, x))
+                       * dense_apply({"w": p["wi"]["w"]}, x))
+
+
+def moe_apply(params, cfg: MoEConfig, x: jax.Array,
+              return_aux: bool = False):
+    """x: [B, T, D] -> [B, T, D] (+ aux dict with load-balance loss)."""
+    B, T, D = x.shape
+    S = B * T
+    xf = hint(x.reshape(S, D), BATCH, None)
+    E, K = cfg.n_experts, cfg.top_k
+
+    logits = dense_apply(params["router"], xf.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [S, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # [S, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(cfg.capacity_factor * S * K / E))
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)      # [S, K, E]
+    pos_in_e = (jnp.cumsum(onehot.reshape(S * K, E), axis=0) - 1)
+    pos_in_e = (pos_in_e.reshape(S, K, E) * onehot).sum(-1)    # [S, K]
+    keep = pos_in_e < cap
+
+    if cfg.dispatch == "push":
+        # scatter tokens into [E, cap, D] buffers via combine matmul — the
+        # all_to_all payload on a sharded mesh
+        disp = (jax.nn.one_hot(gate_idx, E, dtype=xf.dtype)[..., :, None]
+                * jax.nn.one_hot(pos_in_e, cap, dtype=xf.dtype)[..., None, :]
+                )                                              # [S,K,E,cap]
+        disp = disp * keep[..., None, None].astype(xf.dtype)
+        buf = jnp.einsum("skec,sd->ecd", disp, xf)             # [E, cap, D]
+        out_e = jax.vmap(_expert_ffn)(params["experts"], buf)  # [E, cap, D]
+        comb = disp * gate_vals[..., None, None].astype(xf.dtype)
+        yf = jnp.einsum("skec,ecd->sd", comb, out_e)
+    else:
+        # pull: experts gather their token ids (argsort by expert id)
+        flat_e = gate_idx.reshape(-1)                          # [S*K]
+        order = jnp.argsort(flat_e, stable=True)
+        # slot j of expert e = j-th smallest order index with expert e
+        tok_of_slot = (order // K).reshape(1, -1)              # token ids
+        e_sorted = flat_e[order]
+        # mark slot boundaries per expert: slots are contiguous after sort
+        slot_rank = jnp.arange(S * K) - jnp.searchsorted(
+            e_sorted, jnp.arange(E), side="left")[e_sorted]
+        gathered = jnp.take(xf, order // K, axis=0)            # [S*K, D]
+        in_cap = slot_rank < cap
+        # cap+1 slots: overflow writes land in the sacrificial last slot so
+        # they can never clobber a legitimate (e, cap-1) entry
+        buf = jnp.zeros((E, cap + 1, D), xf.dtype)
+        buf = buf.at[e_sorted, jnp.minimum(slot_rank, cap)].set(
+            jnp.where(in_cap[:, None], gathered, 0.0))
+        buf = hint(buf[:, :cap], "model", None, None)  # expert-parallel
+        out_e = jax.vmap(_expert_ffn)(params["experts"], buf)
+        out_e = hint(out_e, "model", None, None)
+        # write back: each (token,k) pulls its expert output slot
+        slot_of_sk = jnp.zeros((S * K,), jnp.int32).at[order].set(
+            jnp.minimum(slot_rank, cap - 1).astype(jnp.int32))
+        ok_of_sk = jnp.zeros((S * K,), bool).at[order].set(in_cap)
+        picked = out_e[flat_e, slot_of_sk]                     # [S*K, D]
+        picked = jnp.where(ok_of_sk[:, None], picked, 0.0)
+        yf = (picked.reshape(S, K, D)
+              * gate_vals[..., None].astype(xf.dtype)
+              * keep[..., None].astype(xf.dtype)).sum(axis=1)
+
+    if cfg.n_shared:
+        shared_out = jax.vmap(lambda p: _expert_ffn(p, xf))(params["shared"])
+        yf = yf + shared_out.sum(axis=0)
+
+    y = yf.reshape(B, T, D).astype(x.dtype)
+    if not return_aux:
+        return y
+    # Switch-style load-balance loss
+    density = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32),
+                       axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = {"lb_loss": E * jnp.sum(density * router_mean),
+           "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y, aux
+
+
+def _local_pull_dispatch(params_router, experts_block, cfg: MoEConfig,
+                         xf: jax.Array, e_base, E_local: int):
+    """Shard-local pull dispatch: route xf [S, D] to the E_local experts
+    owned by this shard, run them, return this shard's partial output.
+    Everything here is device-local — the paper's PA 'local arrays'."""
+    S, D = xf.shape
+    K = cfg.top_k
+    logits = dense_apply(params_router, xf.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    cap = max(1, int(cfg.capacity_factor * S * K / cfg.n_experts))
+
+    local = (gate_idx >= e_base) & (gate_idx < e_base + E_local)
+    flat_e = jnp.where(local, gate_idx - e_base, E_local).reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    first = jnp.searchsorted(e_sorted, jnp.arange(E_local + 1), side="left")
+    slot_rank = jnp.arange(S * K) - first[jnp.minimum(e_sorted, E_local)]
+    gathered = jnp.take(xf, order // K, axis=0)
+    in_cap = (slot_rank < cap) & (e_sorted < E_local)
+    buf = jnp.zeros((E_local + 1, cap + 1, D), xf.dtype)
+    buf = buf.at[jnp.minimum(e_sorted, E_local),
+                 jnp.clip(slot_rank, 0, cap)].set(
+        jnp.where(in_cap[:, None], gathered, 0.0))
+    out_e = jax.vmap(_expert_ffn)(experts_block, buf[:E_local, :cap])
+    slot_of_sk = jnp.zeros((S * K,), jnp.int32).at[order].set(
+        jnp.clip(slot_rank, 0, cap - 1).astype(jnp.int32))
+    ok_of_sk = jnp.zeros((S * K,), bool).at[order].set(in_cap)
+    e_of_sk = jnp.where(local, gate_idx - e_base, 0).reshape(-1)
+    picked = out_e[jnp.clip(e_of_sk, 0, E_local - 1), slot_of_sk]
+    picked = jnp.where(ok_of_sk[:, None], picked, 0.0)
+    return (picked.reshape(S, K, D)
+            * gate_vals[..., None].astype(xf.dtype)).sum(axis=1)
+
+
+def _a2a_dispatch_block(router_p, experts_block, xf, cfg: MoEConfig,
+                        tp: int, E_local: int, shared_p=None):
+    """Sequence-split all_to_all EP (inside shard_map over 'model').
+
+    xf: [S, D] tokens (replicated over 'model'). This rank routes ONLY its
+    S/tp slice; tokens travel to expert owners via all_to_all and return
+    the same way; an all_gather reassembles the replicated activations.
+    """
+    S, D = xf.shape
+    K = cfg.top_k
+    E = cfg.n_experts
+    m_idx = jax.lax.axis_index("model")
+    S_m = S // tp
+    xm = jax.lax.dynamic_slice(xf, (m_idx * S_m, 0), (S_m, D))
+    logits = dense_apply(router_p, xm.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # [S_m, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    cap = max(1, int(cfg.capacity_factor * S_m * K / E))   # per (rank, e)
+
+    seg = gate_idx.reshape(-1)                             # [S_m*K] in [0,E)
+    order = jnp.argsort(seg, stable=True)
+    seg_s = seg[order]
+    first = jnp.searchsorted(seg_s, jnp.arange(E + 1), side="left")
+    slot = jnp.arange(S_m * K) - first[seg_s]
+    in_cap = slot < cap
+    gathered = jnp.take(xm, order // K, axis=0)
+    send = jnp.zeros((E, cap + 1, D), xf.dtype)
+    send = send.at[seg_s, jnp.minimum(slot, cap)].set(
+        jnp.where(in_cap[:, None], gathered, 0.0))
+    send = send[:, :cap].reshape(tp, E_local, cap, D)
+    # tokens -> expert owners (the combined 'MP' push of the paper)
+    recv = jax.lax.all_to_all(send, "model", split_axis=0, concat_axis=0,
+                              tiled=False)                 # [tp, E_l, cap, D]
+    bufs = recv.transpose(1, 0, 2, 3).reshape(E_local, tp * cap, D)
+    out_e = jax.vmap(_expert_ffn)(experts_block, bufs)
+    back = out_e.reshape(E_local, tp, cap, D).transpose(1, 0, 2, 3)
+    got = jax.lax.all_to_all(back, "model", split_axis=0, concat_axis=0,
+                             tiled=False)                  # [tp, E_l, cap, D]
+    # got[r, e, s] = output for the token this rank queued at (r*E_l+e, s)
+    slot_of = jnp.zeros((S_m * K,), jnp.int32).at[order].set(
+        jnp.clip(slot, 0, cap - 1).astype(jnp.int32))
+    ok_of = jnp.zeros((S_m * K,), bool).at[order].set(in_cap)
+    r_of = (gate_idx // E_local).reshape(-1)
+    e_of = (gate_idx % E_local).reshape(-1)
+    picked = got[r_of, e_of, slot_of]
+    picked = jnp.where(ok_of[:, None], picked, 0.0)
+    ym = (picked.reshape(S_m, K, D)
+          * gate_vals[..., None].astype(xf.dtype)).sum(axis=1)
+    if shared_p is not None:
+        # shared experts on the sequence slice too: 1/tp of the redundant
+        # replicated work+traffic; the all_gather reassembles everything
+        sh = jax.vmap(lambda p: _expert_ffn(p, xm))(shared_p)
+        ym = ym + sh.sum(axis=0)
+    if cfg.combine_dtype == "bf16":
+        ym = ym.astype(jnp.bfloat16)
+    return jax.lax.all_gather(ym, "model", tiled=True).astype(xf.dtype)
+
+
+def moe_apply_ep(params, cfg: MoEConfig, x: jax.Array) -> jax.Array:
+    """Expert-parallel MoE: tokens stay data-sharded (replicated over
+    'model'), experts shard over 'model'; each device dispatches its local
+    tokens to its local experts and a psum over 'model' combines expert
+    contributions. All routing/sort work is shard-local — the GSPMD
+    global-argsort trap (an all-gather of every token) never appears.
+
+    Falls back to moe_apply when no activation mesh is installed.
+    """
+    from ..dist.sharding import _ACT_MESH  # set by cell builders
+    mesh = _ACT_MESH
+    if mesh is None or "model" not in mesh.axis_names:
+        return moe_apply(params, cfg, x)
+    tp = mesh.shape["model"]
+    if cfg.n_experts % tp != 0:
+        return moe_apply(params, cfg, x)
+    E_local = cfg.n_experts // tp
+    B, T, D = x.shape
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsz = 1
+    for a in batch:
+        bsz *= mesh.shape[a]
+    if B % bsz != 0:
+        batch = ()   # tiny decode batches: replicate tokens over data
+
+    # per-shard token count must split over 'model' for the a2a schedule
+    bsz_eff = 1
+    for a in batch:
+        bsz_eff *= mesh.shape[a]
+    S_shard = (B // max(1, bsz_eff)) * T
+    use_a2a = cfg.ep_mode == "a2a" and S_shard % tp == 0 and S_shard >= tp
+
+    shared_in_block = use_a2a and cfg.n_shared > 0
+
+    @partial_shard_map(mesh,
+                       in_specs=(P(), P("model"), P(), P(batch, None, None)),
+                       out_specs=P(batch, None, None))
+    def block(router_p, experts_block, shared_p, xb):
+        Bl, Tl, Dl = xb.shape
+        xf = xb.reshape(Bl * Tl, Dl)
+        if use_a2a:
+            yf = _a2a_dispatch_block(
+                router_p, experts_block, xf, cfg, tp, E_local,
+                shared_p=shared_p if shared_in_block else None)
+            return yf.reshape(Bl, Tl, Dl)
+        m_idx = jax.lax.axis_index("model")
+        e_base = m_idx * E_local
+        yf = _local_pull_dispatch(router_p, experts_block, cfg, xf,
+                                  e_base, E_local)
+        if cfg.combine_dtype == "bf16":
+            yf = jax.lax.psum(yf.astype(jnp.bfloat16), "model")
+        else:
+            yf = jax.lax.psum(yf, "model")
+        return yf.astype(xb.dtype).reshape(Bl, Tl, Dl)
+
+    shared_arg = params.get("shared") if cfg.n_shared else None
+    if shared_arg is None:
+        shared_arg = {"wi": {"w": jnp.zeros((0,), x.dtype)},
+                      "wg": {"w": jnp.zeros((0,), x.dtype)},
+                      "wo": {"w": jnp.zeros((0,), x.dtype)}}
+    y = block(params["router"], params["experts"], shared_arg, x
+              ).astype(x.dtype)
+    if cfg.n_shared and not shared_in_block:
+        # shared experts = the PA 'local partition': dense, never dispatched
+        xf = x.reshape(B * T, D)
+        shared_out = jax.vmap(lambda p: _expert_ffn(p, xf))(params["shared"])
+        y = y + shared_out.sum(axis=0).reshape(B, T, D).astype(x.dtype)
+    return y
+
+
+def partial_shard_map(mesh, in_specs, out_specs):
+    def deco(f):
+        # check_vma=False: the a2a path's replication over 'model' (via
+        # all_gather of axis_index-dependent slices) is correct but not
+        # statically inferable by the varying-manual-axes checker
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    return deco

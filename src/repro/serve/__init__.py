@@ -1,0 +1,3 @@
+from .decode import ServeConfig, ServeLoop, greedy_decode
+
+__all__ = ["ServeConfig", "ServeLoop", "greedy_decode"]

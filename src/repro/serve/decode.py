@@ -1,0 +1,114 @@
+"""Serving: batched autoregressive decode over the transformer stack.
+
+`ServeLoop` batches concurrent requests into one jitted decode step
+(continuous batching at the step granularity: finished slots are refilled
+between steps). The KV cache kind (bf16/int8) and its sharding (batch- vs
+sequence-sharded — flash-decoding) come from the cell config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.transformer import (TransformerConfig, decode_step,
+                                  init_kv_cache)
+
+__all__ = ["ServeConfig", "ServeLoop", "greedy_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int
+    batch: int
+    cache_kind: str = "bf16"       # 'bf16' | 'int8' | 'f32'
+    temperature: float = 0.0       # 0 = greedy
+
+
+def greedy_decode(params, cfg: TransformerConfig, prompt: jax.Array,
+                  num_steps: int, cache_kind: str = "bf16"):
+    """Teacher-free rollout: feeds the prompt token by token, then samples
+    greedily. prompt: [B, T0]. Returns tokens [B, T0 + num_steps]."""
+    B, T0 = prompt.shape
+    cache = init_kv_cache(cfg, B, T0 + num_steps, kind=cache_kind)
+    toks = prompt
+
+    step_fn = jax.jit(
+        lambda p, t, c, i: decode_step(p, cfg, t, c, i))
+
+    logits = None
+    for t in range(T0):
+        logits, cache = step_fn(params, toks[:, t:t + 1], cache,
+                                jnp.int32(t))
+    for s in range(num_steps):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        toks = jnp.concatenate([toks, nxt], axis=1)
+        logits, cache = step_fn(params, nxt, cache,
+                                jnp.int32(T0 + s))
+    return toks
+
+
+class ServeLoop:
+    """Step-granular continuous batching over a fixed slot budget."""
+
+    def __init__(self, params, cfg: TransformerConfig, scfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.cache = init_kv_cache(cfg, scfg.batch, scfg.max_len,
+                                   kind=scfg.cache_kind)
+        self.cur_tok = jnp.zeros((scfg.batch, 1), jnp.int32)
+        self.lengths = np.zeros((scfg.batch,), np.int64)
+        self.active = np.zeros((scfg.batch,), bool)
+        self.outputs: dict[int, list[int]] = {}
+        self.queue: list[tuple[int, list[int]]] = []
+        self._next_rid = 0
+        self._step = jax.jit(
+            lambda p, t, c, i: decode_step(p, cfg, t, c, i))
+
+    def submit(self, prompt_tokens: list[int]) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append((rid, prompt_tokens))
+        self.outputs[rid] = []
+        return rid
+
+    def _admit(self):
+        for slot in range(self.scfg.batch):
+            if not self.active[slot] and self.queue:
+                rid, prompt = self.queue.pop(0)
+                self.active[slot] = True
+                self.lengths[slot] = 0
+                self._slot_rid = getattr(self, "_slot_rid", {})
+                self._slot_rid[slot] = (rid, prompt)
+                self.cur_tok = self.cur_tok.at[slot, 0].set(prompt[0])
+
+    def step(self, max_new: int = 32):
+        """One decode step for every active slot (single jitted call —
+        the whole point of batched serving). Per-slot cache positions."""
+        self._admit()
+        if not self.active.any():
+            return
+        cur = jnp.asarray(self.lengths, jnp.int32)
+        logits, self.cache = self._step(
+            self.params, self.cur_tok, self.cache, cur)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for slot in range(self.scfg.batch):
+            if not self.active[slot]:
+                continue
+            rid, prompt = self._slot_rid[slot]
+            self.lengths[slot] += 1
+            pos = int(self.lengths[slot])
+            if pos < len(prompt):             # still prefilling
+                tok = prompt[pos]
+            else:
+                tok = int(nxt[slot])
+                self.outputs[rid].append(tok)
+            self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
+            if (len(self.outputs[rid]) >= max_new
+                    or self.lengths[slot] >= self.scfg.max_len - 1):
+                self.active[slot] = False

@@ -1,0 +1,9 @@
+from .segment import (segment_sum, segment_max, segment_min, segment_mean,
+                      segment_softmax, segment_logsumexp, count_segments)
+from .embedding import embedding_bag, one_hot_matmul_lookup
+
+__all__ = [
+    "segment_sum", "segment_max", "segment_min", "segment_mean",
+    "segment_softmax", "segment_logsumexp", "count_segments",
+    "embedding_bag", "one_hot_matmul_lookup",
+]

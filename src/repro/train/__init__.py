@@ -1,0 +1,11 @@
+from .optimizer import OptConfig, OptState, init_opt, apply_updates, warmup_cosine
+from .loop import LoopConfig, TrainLoop, Watchdog
+from .losses import bce_with_logits, mse, softmax_xent_dense
+from . import checkpoint
+
+__all__ = [
+    "OptConfig", "OptState", "init_opt", "apply_updates", "warmup_cosine",
+    "LoopConfig", "TrainLoop", "Watchdog",
+    "bce_with_logits", "mse", "softmax_xent_dense",
+    "checkpoint",
+]

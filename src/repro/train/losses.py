@@ -1,0 +1,28 @@
+"""Task losses shared by examples / launchers / smoke tests."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bce_with_logits", "mse", "softmax_xent_dense"]
+
+
+def bce_with_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Numerically stable sigmoid cross-entropy, mean over batch."""
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def mse(pred: jax.Array, target: jax.Array) -> jax.Array:
+    d = pred.astype(jnp.float32) - target.astype(jnp.float32)
+    return jnp.mean(d * d)
+
+
+def softmax_xent_dense(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Plain CE for small-vocab heads (GNN node classification)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

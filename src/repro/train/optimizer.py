@@ -1,0 +1,98 @@
+"""Optimizers in pure JAX (no optax dependency): AdamW + SGD-momentum,
+global-norm clipping, and warmup-cosine schedule.
+
+State is a pytree shaped like params, so the same sharding rules apply —
+ZeRO-'pull' shards optimizer moments across 'data' for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "OptState", "init_opt", "apply_updates",
+           "warmup_cosine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    momentum: float = 0.9       # sgd
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init_opt(params: Any, cfg: OptConfig) -> OptState:
+    zeros = lambda: jax.tree.map(  # noqa: E731
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    mu = zeros()
+    nu = zeros() if cfg.kind == "adamw" else jax.tree.map(
+        lambda p: jnp.zeros((), jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def warmup_cosine(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / max(1, cfg.warmup_steps)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params: Any, grads: Any, state: OptState, cfg: OptConfig
+                  ) -> tuple[Any, OptState]:
+    step = state.step + 1
+    lr = warmup_cosine(cfg, step)
+
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    if cfg.kind == "adamw":
+        mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                          state.nu, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay and p.ndim >= 2:   # decay matrices only
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, OptState(step=step, mu=mu, nu=nu)
+
+    # sgd + momentum
+    mu = jax.tree.map(lambda m, g: cfg.momentum * m + g, state.mu, grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, mu)
+    return new_params, OptState(step=step, mu=mu, nu=state.nu)

@@ -1,0 +1,42 @@
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore", message=".*x64.*")
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+from hypothesis import settings, HealthCheck
+
+settings.register_profile(
+    "ci", max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow,
+                           HealthCheck.data_too_large])
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graphs import erdos_renyi
+    return erdos_renyi(120, 4.0, seed=11, weighted=True)
+
+
+@pytest.fixture(scope="session")
+def power_graph():
+    from repro.graphs import kronecker
+    return kronecker(8, edge_factor=6, seed=7, weighted=True)
+
+
+@pytest.fixture(scope="session")
+def nx_of():
+    import networkx as nx
+
+    def build(g):
+        G = nx.Graph()
+        G.add_nodes_from(range(g.n))
+        for s, d, w in zip(np.asarray(g.coo_src), np.asarray(g.coo_dst),
+                           np.asarray(g.coo_w)):
+            G.add_edge(int(s), int(d), weight=float(w))
+        return G
+
+    return build

@@ -1,0 +1,192 @@
+"""Algorithm correctness vs networkx + paper counter structure (Table 1)."""
+
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core.algorithms import (bfs, betweenness_centrality,
+                                   boman_coloring, boruvka_mst,
+                                   conflict_removal_coloring, fe_coloring,
+                                   pagerank, pagerank_pa, sssp_delta,
+                                   triangle_count, validate_coloring)
+from repro.core.direction import Direction, Fixed, GenericSwitch, GreedySwitch
+
+UNREACHED = 2147483647
+
+
+# ---------------------------------------------------------------- PR ----
+def test_pagerank_push_pull_ell_agree(small_graph):
+    g = small_graph
+    rs = [pagerank(g, 15, direction=d, use_ell=e).ranks
+          for d, e in (("push", False), ("pull", False), ("pull", True))]
+    for r in rs[1:]:
+        np.testing.assert_allclose(np.asarray(rs[0]), np.asarray(r),
+                                   atol=1e-6)
+
+
+def test_pagerank_matches_networkx(small_graph, nx_of):
+    g = small_graph
+    G = nx_of(g)
+    want = nx.pagerank(G, alpha=0.85, max_iter=200, weight=None)
+    got = np.asarray(pagerank(g, 100, direction="pull").ranks)
+    for v in range(g.n):
+        assert abs(got[v] - want[v]) < 2e-4
+
+
+def test_pagerank_counter_structure(small_graph):
+    g = small_graph
+    push = pagerank(g, 10, direction="push").cost
+    pull = pagerank(g, 10, direction="pull").cost
+    # Table 1: pull-PR has zero atomics/locks; push-PR O(Lm) locks (floats)
+    assert int(pull.atomics) == 0 and int(pull.locks) == 0
+    assert int(push.locks) == 10 * g.m
+
+
+def test_pagerank_pa_reduces_combining_writes(power_graph):
+    g = power_graph
+    base = pagerank(g, 5, direction="push")
+    pa = pagerank_pa(g, num_parts=4, iters=5)
+    np.testing.assert_allclose(np.asarray(base.ranks), np.asarray(pa.ranks),
+                               atol=1e-6)
+    # PA: only cut edges pay combining writes (paper bound [0, 2m])
+    assert int(pa.cost.locks) < int(base.cost.locks)
+
+
+# --------------------------------------------------------------- BFS ----
+@pytest.mark.parametrize("policy", [Fixed(Direction.PUSH),
+                                    Fixed(Direction.PULL),
+                                    GenericSwitch()])
+def test_bfs_distances(small_graph, nx_of, policy):
+    g = small_graph
+    G = nx_of(g)
+    res = bfs(g, 3, policy)
+    want = np.full(g.n, UNREACHED)
+    for k, v in nx.single_source_shortest_path_length(G, 3).items():
+        want[k] = v
+    assert np.array_equal(np.asarray(res.dist), want)
+
+
+def test_bfs_parent_tree_valid(small_graph):
+    g = small_graph
+    res = bfs(g, 0, Fixed(Direction.PUSH))
+    dist = np.asarray(res.dist)
+    parent = np.asarray(res.parent)
+    nbrs = set(zip(np.asarray(g.coo_src).tolist(),
+                   np.asarray(g.coo_dst).tolist()))
+    for v in range(g.n):
+        if dist[v] not in (0, UNREACHED):
+            p = parent[v]
+            assert dist[p] == dist[v] - 1
+            assert (p, v) in nbrs
+
+
+def test_bfs_counters(small_graph):
+    g = small_graph
+    push = bfs(g, 0, Fixed(Direction.PUSH)).cost
+    pull = bfs(g, 0, Fixed(Direction.PULL)).cost
+    # push: O(m) CAS atomics; pull: none but more reads (Table 1)
+    assert int(push.atomics) > 0
+    assert int(pull.atomics) == 0
+    assert int(pull.reads) > int(push.reads)
+
+
+def test_direction_optimization_switches(power_graph):
+    res = bfs(power_graph, 0, GenericSwitch())
+    # on a power-law graph the optimizer must use both directions
+    assert 0 < int(res.push_steps) < int(res.levels)
+
+
+# -------------------------------------------------------------- SSSP ----
+@pytest.mark.parametrize("direction", ["push", "pull"])
+def test_sssp_delta(small_graph, nx_of, direction):
+    g = small_graph
+    G = nx_of(g)
+    res = sssp_delta(g, 2, delta=2.5, direction=direction)
+    want = np.full(g.n, np.inf)
+    for k, v in nx.single_source_dijkstra_path_length(G, 2).items():
+        want[k] = v
+    np.testing.assert_allclose(np.asarray(res.dist), want, atol=1e-4)
+
+
+def test_sssp_counters(small_graph):
+    g = small_graph
+    push = sssp_delta(g, 0, 2.5, direction="push").cost
+    pull = sssp_delta(g, 0, 2.5, direction="pull").cost
+    assert int(push.locks) > 0            # CAS on float distances
+    assert int(pull.locks) == 0
+    assert int(pull.reads) > int(push.reads)
+
+
+# ---------------------------------------------------------------- TC ----
+def test_triangle_count(small_graph, nx_of):
+    g = small_graph
+    G = nx_of(g)
+    want_total = sum(nx.triangles(G).values()) // 3
+    per_v = nx.triangles(G)
+    for d in ("push", "pull"):
+        res = triangle_count(g, d)
+        assert int(res.total) == want_total
+        got = np.asarray(res.per_vertex)
+        assert all(got[v] == per_v[v] for v in range(g.n))
+    # atomics: push counts per discovered wedge; pull zero
+    assert int(triangle_count(g, "pull").cost.atomics) == 0
+    assert int(triangle_count(g, "push").cost.atomics) > 0
+
+
+# --------------------------------------------------------------- MST ----
+def test_boruvka_mst(small_graph, nx_of):
+    g = small_graph
+    G = nx_of(g)
+    F = nx.minimum_spanning_tree(G)
+    want = sum(d["weight"] for _, _, d in F.edges(data=True))
+    for d in ("push", "pull"):
+        res = boruvka_mst(g, d)
+        assert np.isclose(float(res.weight), want, rtol=1e-5)
+    assert int(boruvka_mst(g, "pull").cost.atomics) == 0
+    assert int(boruvka_mst(g, "push").cost.atomics) > 0
+
+
+# ---------------------------------------------------------------- BC ----
+def test_betweenness(nx_of):
+    from repro.graphs import erdos_renyi
+    g = erdos_renyi(50, 3.5, seed=4)
+    G = nx_of(g)
+    ref = nx.betweenness_centrality(G, normalized=False)
+    want = np.array([ref[i] for i in range(g.n)]) * 2  # nx halves undirected
+    for d in ("push", "pull"):
+        res = betweenness_centrality(g, d, num_sources=g.n)
+        np.testing.assert_allclose(np.asarray(res.bc), want, atol=1e-3)
+    # Madduri successor trick: pull turns float locks into reads
+    assert int(betweenness_centrality(g, "pull", num_sources=8).cost.locks) == 0
+    assert int(betweenness_centrality(g, "push", num_sources=8).cost.locks) > 0
+
+
+# ---------------------------------------------------------- coloring ----
+@pytest.mark.parametrize("direction", ["push", "pull"])
+def test_boman_coloring_valid(small_graph, direction):
+    res = boman_coloring(small_graph, num_parts=8, C=64,
+                         direction=direction)
+    assert bool(validate_coloring(small_graph, res.colors))
+    assert int(res.num_colors) <= 64
+    assert np.all(np.asarray(res.colors) > 0)
+
+
+def test_coloring_counter_structure(small_graph):
+    push = boman_coloring(small_graph, 8, 64, direction="push").cost
+    pull = boman_coloring(small_graph, 8, 64, direction="pull").cost
+    assert int(pull.atomics) == 0
+
+
+def test_fe_and_cr_coloring(small_graph):
+    g = small_graph
+    key = jax.random.PRNGKey(0)
+    fe = fe_coloring(g, key, direction="push")
+    assert bool(validate_coloring(g, fe.colors))
+    gs = fe_coloring(g, key, use_gs=True)
+    assert bool(validate_coloring(g, gs.colors))
+    cr = conflict_removal_coloring(g, num_parts=8, C=64)
+    assert bool(validate_coloring(g, cr.colors))
+    assert int(cr.iterations) == 1
+    assert int(cr.cost.atomics) == 0     # CR removes conflicts entirely

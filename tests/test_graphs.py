@@ -1,0 +1,113 @@
+"""Graph substrate: structure invariants, generators, partitioner, sampler."""
+
+import numpy as np
+import jax.numpy as jnp
+import jax
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.graphs import (build_graph, erdos_renyi, kronecker, ring,
+                          road_grid, star, standin, partition_1d, pa_split,
+                          sample_blocks)
+
+
+def test_build_graph_layout_consistency(small_graph):
+    g = small_graph
+    # pull-major sorted by dst; push-major sorted by src
+    assert np.all(np.diff(np.asarray(g.coo_dst)) >= 0)
+    assert np.all(np.diff(np.asarray(g.push_src)) >= 0)
+    # same multiset of edges in both orders
+    a = set(zip(np.asarray(g.coo_src).tolist(),
+                np.asarray(g.coo_dst).tolist()))
+    b = set(zip(np.asarray(g.push_src).tolist(),
+                np.asarray(g.push_dst).tolist()))
+    assert a == b
+    # CSR pointers match degree counts
+    assert np.all(np.diff(np.asarray(g.in_ptr)) == np.asarray(g.in_deg))
+    assert np.all(np.diff(np.asarray(g.out_ptr)) == np.asarray(g.out_deg))
+
+
+def test_ell_covers_all_in_edges(small_graph):
+    g = small_graph
+    idx = np.asarray(g.ell_idx)
+    valid = idx < g.n
+    assert valid.sum() == g.m
+    # per-row valid count == in-degree
+    assert np.all(valid.sum(1) == np.asarray(g.in_deg))
+
+
+def test_weights_symmetric_per_pair(small_graph):
+    g = small_graph
+    src, dst, w = (np.asarray(g.coo_src), np.asarray(g.coo_dst),
+                   np.asarray(g.coo_w))
+    lookup = {(s, d): ww for s, d, ww in zip(src, dst, w)}
+    for (s, d), ww in lookup.items():
+        assert lookup[(d, s)] == ww
+
+
+@pytest.mark.parametrize("gen", [
+    lambda: erdos_renyi(200, 3.0, seed=1, weighted=True),
+    lambda: kronecker(7, 4, seed=2, weighted=True),
+    lambda: road_grid(12, weighted=True),
+    lambda: ring(50, weighted=True),
+    lambda: star(33),
+])
+def test_generators_simple_symmetric(gen):
+    g = gen()
+    src, dst = np.asarray(g.coo_src), np.asarray(g.coo_dst)
+    assert np.all(src != dst), "no self loops"
+    pairs = set(zip(src.tolist(), dst.tolist()))
+    assert len(pairs) == g.m, "no duplicate directed edges"
+    assert all((d, s) in pairs for s, d in pairs), "symmetric"
+
+
+def test_standins_exist():
+    for name in ("orc", "pok", "ljn", "am", "rca"):
+        g = standin(name, scale=1.0 / 512)
+        assert g.n >= 256 and g.m > 0
+
+
+def test_partition_awareness_split(power_graph):
+    g = power_graph
+    part = partition_1d(g.n, 4)
+    local, remote, stats = pa_split(g, part)
+    # every edge lands in exactly one bucket
+    assert int(local.count.sum() + remote.count.sum()) == g.m
+    assert stats["cut_edges"] == int(remote.count.sum())
+    # local edges: same owner; remote: different
+    for p in range(4):
+        ls = np.asarray(local.src[p])[: int(local.count[p])]
+        ld = np.asarray(local.dst[p])[: int(local.count[p])]
+        assert np.all(part.owner_np(ls) == part.owner_np(ld))
+        assert np.all(part.owner_np(ls) == p)
+        rs = np.asarray(remote.src[p])[: int(remote.count[p])]
+        rd = np.asarray(remote.dst[p])[: int(remote.count[p])]
+        assert np.all(part.owner_np(rs) != part.owner_np(rd))
+
+
+def test_sampler_shapes_and_validity(small_graph):
+    g = small_graph
+    seeds = jnp.arange(16, dtype=jnp.int32)
+    blocks = sample_blocks(g, seeds, (4, 3), jax.random.PRNGKey(0))
+    assert blocks.node_ids[0].shape == (16,)
+    assert blocks.node_ids[1].shape == (64,)
+    assert blocks.node_ids[2].shape == (192,)
+    # sampled children are real in-neighbors of their parents
+    ids1 = np.asarray(blocks.node_ids[1]).reshape(16, 4)
+    ok1 = np.asarray(blocks.valid[1]).reshape(16, 4)
+    in_ptr = np.asarray(g.in_ptr)
+    nbr = np.asarray(g.coo_src)
+    for i in range(16):
+        neigh = set(nbr[in_ptr[i]: in_ptr[i + 1]].tolist())
+        for j in range(4):
+            if ok1[i, j]:
+                assert int(ids1[i, j]) in neigh
+
+
+@given(n=st.integers(17, 200), p=st.integers(1, 9))
+def test_partition_covers(n, p):
+    part = partition_1d(n, p)
+    owners = part.owner_np(np.arange(n))
+    assert owners.min() >= 0 and owners.max() <= p - 1
+    # contiguous blocks
+    assert np.all(np.diff(owners) >= 0)

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graphs import erdos_renyi, ring, star
+from repro.kernels import (cin_layer, flash_attention, pull_spmv,
+                           push_combine)
+from repro.kernels import ref as R
+from repro.kernels.ell_spmv import ell_spmv_pallas
+from repro.kernels.coo_push import coo_push_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.cin import cin_layer_pallas
+
+
+@pytest.mark.parametrize("combine", ["sum", "max", "min"])
+@pytest.mark.parametrize("maker,n", [
+    (lambda n: erdos_renyi(n, 5.0, seed=1, weighted=True), 200),
+    (lambda n: ring(n, weighted=True), 130),
+    (lambda n: star(n), 100),
+])
+def test_ell_spmv_sweep(maker, n, combine):
+    g = maker(n)
+    x = jax.random.normal(jax.random.PRNGKey(0), (g.n,), jnp.float32)
+    out = pull_spmv(g, x, combine)
+    want = R.ell_spmv_ref(jnp.pad(x, (0, 1)), g.ell_idx, g.ell_w, combine)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_n", [64, 256])
+def test_ell_spmv_blocks(block_n):
+    g = erdos_renyi(150, 4.0, seed=2, weighted=True)
+    x = jnp.pad(jax.random.normal(jax.random.PRNGKey(1), (g.n,)), (0, 1)
+                ).astype(jnp.float32)
+    out = ell_spmv_pallas(x, g.ell_idx, g.ell_w, "sum", block_n=block_n)
+    want = R.ell_spmv_ref(x, g.ell_idx, g.ell_w, "sum")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("frac", [0.0, 0.3, 1.0])
+@pytest.mark.parametrize("maker,n", [
+    (lambda n: erdos_renyi(n, 6.0, seed=3, weighted=True), 180),
+    (lambda n: ring(n, weighted=True), 90),     # degree-2: window stress
+    (lambda n: star(n), 120),                   # hub: combining stress
+])
+def test_coo_push_sweep(maker, n, frac):
+    g = maker(n)
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (g.n,), jnp.float32)
+    active = (jax.random.uniform(key, (g.n,)) < frac) if frac < 1.0 \
+        else jnp.ones((g.n,), bool)
+    out = push_combine(g, x, active)
+    want = R.coo_push_ref(x, active, g.coo_src, g.coo_dst, g.coo_w, g.n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_e,block_n", [(128, 64), (512, 256)])
+def test_coo_push_blocks(block_e, block_n):
+    g = erdos_renyi(220, 2.0, seed=5, weighted=True)
+    x = jnp.ones((g.n,), jnp.float32)
+    act = jnp.ones((g.n,), bool)
+    out = coo_push_pallas(x, act, g.coo_src, g.coo_dst, g.coo_w, g.n,
+                          block_e=block_e, block_n=block_n)
+    want = R.coo_push_ref(x, act, g.coo_src, g.coo_dst, g.coo_w, g.n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_push_kernel_equals_framework_pull(small_graph):
+    """Cross-check the two kernels against each other: same relaxation."""
+    g = small_graph
+    x = jax.random.normal(jax.random.PRNGKey(7), (g.n,), jnp.float32)
+    push = push_combine(g, x, jnp.ones((g.n,), bool))
+    pull = pull_spmv(g, x, "sum")
+    np.testing.assert_allclose(np.asarray(push), np.asarray(pull),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,H,Hk,d", [(96, 4, 2, 32), (130, 2, 2, 64),
+                                      (64, 8, 1, 16)])
+def test_flash_attention_sweep(T, H, Hk, d, dtype):
+    key = jax.random.PRNGKey(0)
+    B = 2
+    q = jax.random.normal(key, (B, T, H, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, Hk, d),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, Hk, d),
+                          jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=64)
+    kb = jnp.repeat(k, H // Hk, axis=2).transpose(0, 2, 1, 3)
+    vb = jnp.repeat(v, H // Hk, axis=2).transpose(0, 2, 1, 3)
+    want = R.flash_attention_ref(q.transpose(0, 2, 1, 3), kb, vb
+                                 ).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window,softcap", [(17, 0.0), (1 << 30, 20.0),
+                                            (9, 30.0)])
+def test_flash_attention_window_softcap(window, softcap):
+    key = jax.random.PRNGKey(3)
+    B, T, H, d = 1, 80, 2, 32
+    q = jax.random.normal(key, (B, T, H, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, d))
+    out = flash_attention(q, k, v, causal_window=window, softcap=softcap,
+                          block_q=16, block_k=16)
+    want = R.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal_window=window,
+        softcap=softcap).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("B,Hp,F,H,D", [(32, 8, 6, 12, 10), (65, 16, 8, 8, 4),
+                                        (128, 200, 39, 200, 10)])
+def test_cin_sweep(B, Hp, F, H, D):
+    key = jax.random.PRNGKey(1)
+    xk = jax.random.normal(key, (B, Hp, D), jnp.float32)
+    x0 = jax.random.normal(jax.random.fold_in(key, 1), (B, F, D))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (H, Hp, F)) * 0.1
+    out = cin_layer(xk, x0, w)
+    want = R.cin_layer_ref(xk, x0, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_cin_block_boundary():
+    # B not a multiple of block_b exercises padding
+    key = jax.random.PRNGKey(2)
+    xk = jax.random.normal(key, (37, 5, 6), jnp.float32)
+    x0 = jax.random.normal(jax.random.fold_in(key, 1), (37, 4, 6))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (7, 5, 4))
+    out = cin_layer_pallas(xk, x0, w, block_b=16)
+    want = R.cin_layer_ref(xk, x0, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,254 @@
+"""Model-layer tests: transformer variants, MoE dispatch, GNNs, recsys."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import AttnConfig, _sdpa, blockwise_sdpa
+from repro.models.gnn import (GNNConfig, egnn_apply, egnn_init, gin_apply,
+                              gin_init, graphcast_apply, graphcast_init,
+                              sage_apply, sage_apply_blocks, sage_init)
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.recsys import (XDeepFMConfig, cin_apply, retrieval_score,
+                                 xdeepfm_apply, xdeepfm_init)
+from repro.models.transformer import (TransformerConfig, decode_step,
+                                      forward, init_kv_cache, init_params,
+                                      lm_loss, prefill)
+from repro.graphs import erdos_renyi, sample_blocks
+from repro.sparse import embedding_bag
+
+KEY = jax.random.PRNGKey(0)
+
+TINY = TransformerConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                         n_kv_heads=2, d_ff=128, vocab=101, dtype="float32",
+                         loss_chunk=8, attn_impl="naive")
+
+
+def test_blockwise_equals_naive_attention():
+    B, T, H, Hk, Dh = 2, 45, 8, 4, 16
+    cfg = AttnConfig(d_model=H * Dh, n_heads=H, n_kv_heads=Hk, head_dim=Dh)
+    q = jax.random.normal(KEY, (B, T, H, Dh))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, T, Hk, Dh))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, T, Hk, Dh))
+    qp = jnp.arange(T)[:, None]
+    kp = jnp.arange(T)[None, :]
+    ref = _sdpa(q, k, v, kp <= qp, cfg)
+    out = blockwise_sdpa(q, k, v, cfg, jnp.int32(1 << 30), 16, 8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_decode_matches_forward_exactly():
+    p = init_params(KEY, TINY)
+    toks = jax.random.randint(KEY, (2, 12), 0, TINY.vocab)
+    cache = init_kv_cache(TINY, 2, 12, kind="f32")
+    for t in range(12):
+        logits, cache = decode_step(p, TINY, toks[:, t:t + 1], cache,
+                                    jnp.int32(t))
+    hs = forward(p, TINY, toks)
+    ref = hs[:, -1].astype(jnp.float32) @ p["unembed"]["w"]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               atol=1e-4)
+
+
+def test_prefill_matches_decode_cache():
+    p = init_params(KEY, TINY)
+    toks = jax.random.randint(KEY, (2, 10), 0, TINY.vocab)
+    logits_p, cache_p = prefill(p, TINY, toks, cache_kind="f32")
+    cache_d = init_kv_cache(TINY, 2, 10, kind="f32")
+    for t in range(10):
+        logits_d, cache_d = decode_step(p, TINY, toks[:, t:t + 1], cache_d,
+                                        jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache_p["k"]),
+                               np.asarray(cache_d["k"]), atol=1e-5)
+
+
+def test_gemma2_ring_cache_decode():
+    cfg = dataclasses.replace(TINY, n_layers=4, local_window=4,
+                              attn_softcap=50.0, final_softcap=30.0,
+                              embed_scale=True, vocab=97)
+    p = init_params(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(KEY, (2, 14), 0, 97)
+    cache = init_kv_cache(cfg, 2, 14, kind="f32")
+    assert cache["local"]["k"].shape[2] == 4       # ring = window
+    for t in range(14):
+        logits, cache = decode_step(p, cfg, toks[:, t:t + 1], cache,
+                                    jnp.int32(t))
+    hs = forward(p, cfg, toks)
+    from repro.models.common import softcap
+    ref = softcap(hs[:, -1].astype(jnp.float32) @ p["unembed"]["w"], 30.0)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               atol=2e-4)
+
+
+def test_gemma2_prefill_ring_layout():
+    cfg = dataclasses.replace(TINY, n_layers=2, local_window=4, vocab=97)
+    p = init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (1, 11), 0, 97)
+    logits_p, cache_p = prefill(p, cfg, toks, cache_kind="f32")
+    cache_d = init_kv_cache(cfg, 1, 11, kind="f32")
+    logits_d = None
+    for t in range(11):
+        logits_d, cache_d = decode_step(p, cfg, toks[:, t:t + 1], cache_d,
+                                        jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(cache_p["local"]["k"]),
+                               np.asarray(cache_d["local"]["k"]), atol=1e-5)
+
+
+def test_int8_cache_bounded_error():
+    p = init_params(KEY, TINY)
+    toks = jax.random.randint(KEY, (2, 10), 0, TINY.vocab)
+    cache8 = init_kv_cache(TINY, 2, 10, kind="int8")
+    cachef = init_kv_cache(TINY, 2, 10, kind="f32")
+    for t in range(10):
+        l8, cache8 = decode_step(p, TINY, toks[:, t:t + 1], cache8,
+                                 jnp.int32(t))
+        lf, cachef = decode_step(p, TINY, toks[:, t:t + 1], cachef,
+                                 jnp.int32(t))
+    rel = float(jnp.abs(l8 - lf).max() / (jnp.abs(lf).max() + 1e-9))
+    assert rel < 0.05
+
+
+def test_moe_push_pull_dispatch_equal():
+    cfg = MoEConfig(d_model=32, d_ff_expert=16, n_experts=8, top_k=2,
+                    n_shared=1)
+    params = moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 10, 32))
+    y_push = moe_apply(params, cfg, x)
+    y_pull = moe_apply(params, dataclasses.replace(cfg, dispatch="pull"), x)
+    np.testing.assert_allclose(np.asarray(y_push), np.asarray(y_pull),
+                               atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = MoEConfig(d_model=16, d_ff_expert=8, n_experts=4, top_k=2,
+                    capacity_factor=0.25)
+    params = moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 32, 16))
+    _, aux = moe_apply(params, cfg, x, return_aux=True)
+    assert float(aux["dropped_frac"]) > 0.0
+    assert float(aux["lb_loss"]) > 0.0
+
+
+def test_lm_loss_grads_finite_all_variants():
+    for cfg in (TINY,
+                dataclasses.replace(TINY, attn_impl="blockwise", q_chunk=8,
+                                    kv_chunk=8),
+                dataclasses.replace(
+                    TINY, moe=MoEConfig(d_model=64, d_ff_expert=32,
+                                        n_experts=4, top_k=2))):
+        p = init_params(KEY, cfg)
+        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+        loss, grads = jax.value_and_grad(
+            lambda pp: lm_loss(pp, cfg, toks, toks))(p)
+        assert bool(jnp.isfinite(loss))
+        assert all(bool(jnp.all(jnp.isfinite(g)))
+                   for g in jax.tree.leaves(grads))
+
+
+# ------------------------------------------------------------- GNNs -----
+def test_gnn_push_pull_equal():
+    g = erdos_renyi(80, 4.0, seed=9, weighted=True)
+    h = jax.random.normal(KEY, (g.n, 8))
+    for init_fn, apply_fn, kw in (
+            (gin_init, gin_apply, {}),
+            (sage_init, sage_apply, {})):
+        cfg = GNNConfig(arch="x", n_layers=2, d_hidden=16, d_in=8, d_out=4)
+        p = init_fn(KEY, cfg)
+        a = apply_fn(p, cfg, g, h, **kw)
+        b = apply_fn(p, dataclasses.replace(cfg, direction="push"), g, h,
+                     **kw)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_egnn_equivariance():
+    g = erdos_renyi(60, 4.0, seed=10, weighted=True)
+    cfg = GNNConfig(arch="egnn", n_layers=2, d_hidden=16, d_in=6, d_out=3)
+    p = egnn_init(KEY, cfg)
+    h = jax.random.normal(KEY, (g.n, 6))
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (g.n, 3))
+    out1, x1 = egnn_apply(p, cfg, g, h, x)
+    th = 1.1
+    R = jnp.array([[np.cos(th), -np.sin(th), 0],
+                   [np.sin(th), np.cos(th), 0], [0, 0, 1.0]])
+    t = jnp.array([2.0, -1.0, 0.5])
+    out2, x2 = egnn_apply(p, cfg, g, h, x @ R.T + t)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(x1 @ R.T + t), np.asarray(x2),
+                               atol=1e-3)
+
+
+def test_sage_blocks_runs():
+    g = erdos_renyi(100, 5.0, seed=12)
+    cfg = GNNConfig(arch="sage", n_layers=2, d_hidden=16, d_in=8, d_out=4,
+                    fanouts=(4, 3))
+    p = sage_init(KEY, cfg)
+    seeds = jnp.arange(8, dtype=jnp.int32)
+    blocks = sample_blocks(g, seeds, (4, 3), KEY)
+    h = jax.random.normal(KEY, (g.n, 8))
+    hp = jnp.pad(h, ((0, 1), (0, 0)))
+    feats = tuple(hp[jnp.minimum(ids, g.n)] for ids in blocks.node_ids)
+    out = sage_apply_blocks(p, cfg, blocks, feats)
+    assert out.shape == (8, 4)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_graphcast_residual_prediction():
+    g = erdos_renyi(70, 4.0, seed=13, weighted=True)
+    cfg = GNNConfig(arch="graphcast", n_layers=3, d_hidden=16, d_in=0,
+                    d_out=0, n_vars=5)
+    p = graphcast_init(KEY, cfg)
+    nv = jax.random.normal(KEY, (g.n, 5))
+    out = graphcast_apply(p, cfg, g, nv)
+    assert out.shape == (g.n, 5)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ----------------------------------------------------------- recsys -----
+def test_embedding_bag_oracle():
+    V, d = 30, 4
+    table = jax.random.normal(KEY, (V, d))
+    ids = jnp.array([3, 5, 5, 29, 0, 7], jnp.int32)
+    bags = jnp.array([0, 0, 1, 1, 2, 2], jnp.int32)
+    for comb in ("sum", "mean", "max"):
+        out = embedding_bag(table, ids, bags, 3, combiner=comb)
+        tab = np.asarray(table)
+        want = []
+        for b in range(3):
+            rows = tab[np.asarray(ids)[np.asarray(bags) == b]]
+            want.append({"sum": rows.sum(0), "mean": rows.mean(0),
+                         "max": rows.max(0)}[comb])
+        np.testing.assert_allclose(np.asarray(out), np.stack(want),
+                                   atol=1e-5)
+
+
+def test_embedding_bag_padding_ids():
+    table = jnp.ones((10, 2))
+    ids = jnp.array([1, 10, 11], jnp.int32)   # 10,11 out of range = pad
+    bags = jnp.array([0, 0, 1], jnp.int32)
+    out = embedding_bag(table, ids, bags, 2, combiner="sum")
+    np.testing.assert_allclose(np.asarray(out), [[1, 1], [0, 0]])
+
+
+def test_xdeepfm_structure():
+    cfg = XDeepFMConfig(n_fields=5, vocab_per_field=40, embed_dim=4,
+                        cin_layers=(6, 6), mlp_dims=(8,))
+    p = xdeepfm_init(KEY, cfg)
+    ids = jax.random.randint(KEY, (16, 5), 0, 40)
+    logits = xdeepfm_apply(p, cfg, ids)
+    assert logits.shape == (16,)
+    # CIN oracle cross-check (first layer)
+    x0 = jnp.stack([p["tables"][f][ids[:, f]] for f in range(5)], axis=1)
+    feat = cin_apply(p["cin"], x0)
+    assert feat.shape == (16, 12)
+    u = jax.random.randint(KEY, (1, 2), 0, 40)
+    c = jax.random.randint(KEY, (64, 3), 0, 40)
+    sc = retrieval_score(p, cfg, u, c)
+    assert sc.shape == (64,)
