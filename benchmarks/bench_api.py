@@ -1,0 +1,55 @@
+"""API smoke benchmark: ``repro.api.solve`` across backends × policies.
+
+Times the unified dispatch point on the stand-in power-law graph and
+emits one JSON payload per (algorithm, policy, backend) cell via
+``common.emit`` — the regression anchor for every future backend that
+plugs into the registry.
+
+    PYTHONPATH=src python -m benchmarks.run --only api_solve
+"""
+
+from __future__ import annotations
+
+import json
+
+from .common import emit, graph, timeit
+
+
+def run():
+    import jax
+    from repro import api
+    from repro.core import (DenseBackend, Direction, DistributedBackend,
+                            EllBackend, Fixed, GenericSwitch)
+
+    g = graph("orc", weighted=True)
+    backends = [("dense", DenseBackend()), ("ell", EllBackend()),
+                ("dist1", DistributedBackend.prepare(g))]
+    policies = [("push", Fixed(Direction.PUSH)),
+                ("pull", Fixed(Direction.PULL)),
+                ("gs", GenericSwitch())]
+    cases = [("pagerank", {"iters": 10}), ("bfs", {"root": 0}),
+             ("wcc", {}), ("pr_delta", {"tol": 1e-6})]
+
+    for alg, kw in cases:
+        for pname, policy in policies:
+            for bname, backend in backends:
+                def fn():
+                    r = api.solve(g, alg, policy=policy, backend=backend,
+                                  **kw)
+                    jax.block_until_ready(r.cost.reads)
+                    return r
+                us = timeit(fn)
+                r = fn()
+                payload = json.dumps({
+                    "algorithm": alg, "policy": pname, "backend": bname,
+                    "steps": int(r.steps), "push_steps": int(r.push_steps),
+                    "reads": int(r.cost.reads),
+                    "combining_writes": int(r.cost.atomics)
+                                        + int(r.cost.locks),
+                    "collective_bytes": int(r.cost.collective_bytes),
+                })
+                emit(f"api_{alg}_{pname}_{bname}", us, payload)
+
+
+if __name__ == "__main__":
+    run()

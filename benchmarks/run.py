@@ -12,6 +12,7 @@ import sys
 import time
 
 SUITES = [
+    ("api_solve", "bench_api"),
     ("table1_counters", "bench_counters"),
     ("table3_pagerank", "bench_pagerank"),
     ("table3_tc", "bench_tc"),

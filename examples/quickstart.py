@@ -43,6 +43,17 @@ def main():
     print(f"\ntriangles: {int(tc.total):,} (pull atomics="
           f"{int(tc.cost.atomics)})")
 
+    # --- The unified API: one solve(), pluggable policy × backend -------
+    from repro import api
+    from repro.core import EllBackend
+    r = api.solve(g, "pagerank", iters=10, backend=EllBackend())
+    assert np.allclose(np.asarray(r.state), np.asarray(pull.ranks),
+                       atol=1e-6)
+    w = api.solve(g, "wcc", policy=GenericSwitch())
+    print(f"\napi.solve: algorithms={api.algorithms()}")
+    print(f"  pagerank@ELL == pagerank@dense; wcc converged in "
+          f"{int(w.steps)} steps ({int(w.push_steps)} push)")
+
     # --- Pallas kernels (TPU-target, interpret-validated) ---------------
     from repro.kernels import pull_spmv
     y = pull_spmv(g, jnp.ones((g.n,)), "sum")

@@ -1,0 +1,170 @@
+"""repro.api — one k-relaxation API for every graph workload.
+
+The paper's claim is that every graph algorithm reduces to one abstract
+primitive (k-relaxation) with push and pull as interchangeable
+implementations. This module is that claim as an interface:
+
+    from repro import api
+    from repro.core import Fixed, Direction, GenericSwitch
+    from repro.core.backend import EllBackend
+
+    r = api.solve(g, "pagerank", iters=30)                  # GS policy
+    r = api.solve(g, "bfs", root=0, policy=Fixed(Direction.PUSH))
+    r = api.solve(g, "pagerank", backend=EllBackend())      # ELL layout
+
+Every algorithm is a :class:`~repro.core.engine.VertexProgram` executed
+by the :class:`~repro.core.engine.PushPullEngine`; ``policy`` chooses the
+direction per step (Fixed / GenericSwitch / GreedySwitch) and ``backend``
+chooses the memory system (Dense / ELL / Distributed) — any algorithm
+runs under any (policy × backend) pair and returns the same states.
+
+``solve`` returns a :class:`RunResult` with a unified surface:
+``state`` (algorithm-specific pytree), ``cost`` (paper Table-1
+counters), ``steps``, ``push_steps``, ``converged``.
+
+New algorithms register an :class:`AlgorithmSpec`; engines are cached per
+(algorithm, policy, backend, static-kwargs, graph shape) so repeated
+solves hit the jit cache like the hand-rolled loops they replaced.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+
+from .core.algorithms.bfs import bfs_init, bfs_program
+from .core.algorithms.pagerank import pagerank_init, pagerank_program
+from .core.algorithms.pr_delta import (pr_delta_finalize, pr_delta_init,
+                                       pr_delta_program)
+from .core.algorithms.wcc import wcc_init, wcc_program
+from .core.backend import (DenseBackend, DistributedBackend, EllBackend,
+                           ExchangeBackend)
+from .core.cost_model import Cost
+from .core.direction import (Direction, DirectionPolicy, Fixed,
+                             GenericSwitch, GreedySwitch)
+from .core.engine import PushPullEngine, VertexProgram
+from .graphs.structure import Graph
+
+__all__ = ["RunResult", "AlgorithmSpec", "register", "algorithms", "solve",
+           "DenseBackend", "EllBackend", "DistributedBackend",
+           "ExchangeBackend", "Fixed", "GenericSwitch", "GreedySwitch",
+           "Direction"]
+
+
+class RunResult(NamedTuple):
+    """Unified result of ``solve``: the algorithm's state pytree plus the
+    engine's run metadata."""
+    state: Any
+    cost: Cost
+    steps: jax.Array
+    push_steps: jax.Array
+    converged: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgorithmSpec:
+    """How an algorithm plugs into the engine.
+
+    build(g, **static_kw) -> (VertexProgram, default_max_steps) — must
+        close over static graph attributes only (n, m), never arrays, so
+        engines cache across graphs of one shape.
+    init(g, **kw) -> (init_state, init_frontier).
+    finalize(state) -> public state pytree.
+    runtime_keys: kwargs consumed only by ``init`` (e.g. ``root``),
+        excluded from the engine cache key.
+    """
+    name: str
+    build: Callable
+    init: Callable
+    finalize: Callable = staticmethod(lambda state: state)
+    default_policy: DirectionPolicy = GenericSwitch()
+    runtime_keys: tuple = ()
+
+
+_REGISTRY: dict[str, AlgorithmSpec] = {}
+# Built engines keyed by (algorithm, policy, backend, static kwargs, graph
+# shape). Bounded FIFO: a DistributedBackend key pins graph-sized edge
+# arrays, so stale entries must be evictable in long-lived processes.
+_ENGINE_CACHE: dict = {}
+_ENGINE_CACHE_MAX = 128
+
+
+def register(spec: AlgorithmSpec) -> AlgorithmSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def algorithms() -> list[str]:
+    """Names accepted by ``solve``."""
+    return sorted(_REGISTRY)
+
+
+def get_spec(name: str) -> AlgorithmSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown algorithm {name!r}; registered: {algorithms()}"
+        ) from None
+
+
+def solve(g: Graph, algorithm: str, *,
+          policy: Optional[DirectionPolicy] = None,
+          backend: Optional[ExchangeBackend] = None,
+          max_steps: Optional[int] = None, **kw) -> RunResult:
+    """Run ``algorithm`` on ``g`` under a direction policy and an
+    exchange backend. Algorithm-specific kwargs (``root``, ``iters``,
+    ``damp``, ``tol``, ...) pass through ``**kw``."""
+    spec = get_spec(algorithm)
+    policy = spec.default_policy if policy is None else policy
+    backend = DenseBackend() if backend is None else backend
+    static_kw = {k: v for k, v in kw.items() if k not in spec.runtime_keys}
+
+    key: Optional[tuple]
+    try:
+        # key on the spec itself: re-registering a name invalidates
+        # cached engines built from the old spec
+        key = (algorithm, spec, policy, backend,
+               tuple(sorted(static_kw.items())),
+               g.n, g.m, g.d_ell, max_steps)
+        hash(key)
+    except TypeError:
+        key = None
+    engine = _ENGINE_CACHE.get(key) if key is not None else None
+    if engine is None:
+        program, default_steps = spec.build(g, **static_kw)
+        engine = PushPullEngine(
+            program=program, policy=policy,
+            max_steps=default_steps if max_steps is None else max_steps,
+            backend=backend)
+        if key is not None:
+            while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
+                _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
+            _ENGINE_CACHE[key] = engine
+
+    init_state, init_frontier = spec.init(g, **kw)
+    res = engine.run(g, init_state, init_frontier)
+    return RunResult(state=spec.finalize(res.state), cost=res.cost,
+                     steps=res.steps, push_steps=res.push_steps,
+                     converged=res.converged)
+
+
+# ---------------------------------------------------------------------
+# Built-in registrations: the paper's core workloads.
+register(AlgorithmSpec(
+    name="bfs", build=bfs_program, init=bfs_init,
+    runtime_keys=("root",)))
+
+register(AlgorithmSpec(
+    name="pagerank", build=pagerank_program, init=pagerank_init,
+    default_policy=Fixed(Direction.PULL)))
+
+register(AlgorithmSpec(
+    name="wcc", build=wcc_program, init=wcc_init))
+
+register(AlgorithmSpec(
+    name="pr_delta", build=pr_delta_program, init=pr_delta_init,
+    finalize=pr_delta_finalize,
+    default_policy=Fixed(Direction.PUSH)))

@@ -1,5 +1,7 @@
 """Core push-pull machinery (the paper's contribution)."""
 
+from .backend import (DenseBackend, DistributedBackend, EllBackend,
+                      ExchangeBackend)
 from .cost_model import Cost, zero_cost
 from .direction import (Direction, DirectionPolicy, Fixed, GenericSwitch,
                         GreedySwitch)
@@ -11,6 +13,7 @@ from .primitives import (push_relax, pull_relax, pull_relax_ell, k_filter,
                          combine_identity)
 
 __all__ = [
+    "ExchangeBackend", "DenseBackend", "EllBackend", "DistributedBackend",
     "Cost", "zero_cost",
     "Direction", "DirectionPolicy", "Fixed", "GenericSwitch", "GreedySwitch",
     "PushPullEngine", "VertexProgram", "EngineResult",

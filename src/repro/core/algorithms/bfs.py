@@ -10,11 +10,14 @@ auto: GenericSwitch — the Beamer direction-optimizing rule, the paper's
 Parents are chosen with a combining-min over candidate parent ids, which
 makes the result deterministic and direction-independent (same BFS tree
 levels; parent = min-id neighbor in the previous level).
+
+The algorithm is expressed as a :class:`~repro.core.engine.VertexProgram`
+and registered with ``repro.api`` as ``"bfs"``; :func:`bfs` is the thin
+legacy wrapper around ``repro.api.solve``.
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -23,10 +26,9 @@ import jax.numpy as jnp
 from ...graphs.structure import Graph
 from ..cost_model import Cost
 from ..direction import DirectionPolicy, Fixed, Direction
-from ..primitives import (frontier_in_edges, frontier_out_edges, k_filter,
-                          push_relax, pull_relax)
+from ..engine import VertexProgram
 
-__all__ = ["bfs", "BFSResult"]
+__all__ = ["bfs", "BFSResult", "bfs_program", "bfs_init"]
 
 _UNREACHED = jnp.int32(2147483647)
 
@@ -39,64 +41,51 @@ class BFSResult(NamedTuple):
     push_steps: jax.Array  # int32 how many levels ran in push mode
 
 
-def _step_push(g: Graph, visited, frontier, cost):
-    """next-frontier flags + parent candidates via push (scatter)."""
-    ids = jnp.arange(g.n, dtype=jnp.int32)
-    cand, cost = push_relax(g, ids, frontier, combine="min", cost=cost)
-    has_parent = cand < g.n  # min over empty segment = int32 max
-    nxt = has_parent & ~visited
-    # k-filter compacts the pushed updates (paper: needed only for push)
-    _, cost = k_filter(nxt, cost)
-    return nxt, jnp.where(nxt, cand, g.n), cost
+def bfs_program(g: Graph) -> tuple[VertexProgram, int]:
+    """Level-synchronous BFS as a vertex program.
 
-
-def _step_pull(g: Graph, visited, frontier, cost):
-    """each unvisited vertex pulls: is any in-neighbor in the frontier?"""
-    ids = jnp.arange(g.n, dtype=jnp.int32)
-    cand_src = jnp.where(frontier, ids, jnp.int32(g.n + 7))
-    cand, cost = pull_relax(g, cand_src, touched=~visited, combine="min",
-                            cost=cost)
-    nxt = (~visited) & (cand < g.n)
-    return nxt, jnp.where(nxt, cand, g.n), cost
-
-
-@partial(jax.jit, static_argnames=("policy",))
-def bfs(g: Graph, root: int | jax.Array, policy: DirectionPolicy = Fixed(Direction.PUSH)
-        ) -> BFSResult:
+    Wire values are candidate parent ids (frontier vertices advertise
+    their own id, everyone else a >n sentinel); combining-min picks the
+    deterministic min-id parent in either direction. Pull only inspects
+    unvisited destinations (paper: the bottom-up scan).
+    """
     n = g.n
+
+    def values_fn(g_, state, frontier):
+        ids = jnp.arange(g_.n, dtype=jnp.int32)
+        return jnp.where(frontier, ids, jnp.int32(g_.n + 7))
+
+    def update(state, msgs, step):
+        visited = state["visited"]
+        nxt = (~visited) & (msgs < n)
+        new = {"dist": jnp.where(nxt, (step + 1).astype(jnp.int32),
+                                 state["dist"]),
+               "parent": jnp.where(nxt, msgs, state["parent"]),
+               "visited": visited | nxt}
+        return new, nxt, ~jnp.any(nxt)
+
+    prog = VertexProgram(combine="min", update_fn=update,
+                         values_fn=values_fn, pull_touched="unvisited",
+                         k_filter_push=True)
+    return prog, n + 1
+
+
+def bfs_init(g: Graph, root=0, **_):
     root = jnp.asarray(root, jnp.int32)
-    dist0 = jnp.full((n,), _UNREACHED, jnp.int32).at[root].set(0)
-    parent0 = jnp.full((n,), n, jnp.int32).at[root].set(root)
+    n = g.n
     frontier0 = jnp.zeros((n,), bool).at[root].set(True)
-    visited0 = frontier0
+    state0 = {
+        "dist": jnp.full((n,), _UNREACHED, jnp.int32).at[root].set(0),
+        "parent": jnp.full((n,), n, jnp.int32).at[root].set(root),
+        "visited": frontier0,
+    }
+    return state0, frontier0
 
-    def cond(state):
-        _, _, frontier, *_ = state
-        return jnp.any(frontier)
 
-    def body(state):
-        dist, parent, frontier, visited, level, cost, pushes = state
-        unvisited_edges = frontier_in_edges(g, ~visited)
-        do_push = policy.decide_push(g, frontier, unvisited_edges)
-
-        # lax.cond executes only the chosen direction at runtime — the
-        # direction switch must not pay for both variants.
-        nxt, par, cost = jax.lax.cond(
-            do_push,
-            lambda v, f, c: _step_push(g, v, f, c),
-            lambda v, f, c: _step_pull(g, v, f, c),
-            visited, frontier, cost)
-
-        parent = jnp.where(nxt, par, parent)
-        dist = jnp.where(nxt, level + 1, dist)
-        visited = visited | nxt
-        cost = cost.charge(iterations=1, barriers=1)
-        return (dist, parent, nxt, visited, level + 1, cost,
-                pushes + do_push.astype(jnp.int32))
-
-    init = (dist0, parent0, frontier0, visited0, jnp.int32(0), Cost(),
-            jnp.int32(0))
-    dist, parent, _, _, level, cost, pushes = jax.lax.while_loop(
-        cond, body, init)
-    return BFSResult(dist=dist, parent=parent, cost=cost, levels=level,
-                     push_steps=pushes)
+def bfs(g: Graph, root: int | jax.Array,
+        policy: DirectionPolicy = Fixed(Direction.PUSH)) -> BFSResult:
+    """Legacy entry point — now a thin wrapper over ``repro.api.solve``."""
+    from ... import api
+    r = api.solve(g, "bfs", policy=policy, root=root)
+    return BFSResult(dist=r.state["dist"], parent=r.state["parent"],
+                     cost=r.cost, levels=r.steps, push_steps=r.push_steps)

@@ -15,7 +15,6 @@ by a barrier — Algorithm 8 verbatim.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -25,9 +24,11 @@ from ...graphs.partition import Partition, pa_split, partition_1d
 from ...graphs.structure import Graph
 from ...sparse.segment import segment_sum
 from ..cost_model import Cost
-from ..primitives import pull_relax, pull_relax_ell, push_relax
+from ..direction import Direction, Fixed
+from ..engine import VertexProgram
 
-__all__ = ["pagerank", "pagerank_pa", "PageRankResult"]
+__all__ = ["pagerank", "pagerank_pa", "PageRankResult",
+           "pagerank_program", "pagerank_init"]
 
 
 class PageRankResult(NamedTuple):
@@ -40,32 +41,44 @@ def _contrib(r: jax.Array, out_deg: jax.Array) -> jax.Array:
     return r / jnp.maximum(out_deg, 1).astype(r.dtype)
 
 
-@partial(jax.jit, static_argnames=("iters", "direction", "use_ell"))
+def pagerank_program(g: Graph, iters: int = 20,
+                     damp: float = 0.85) -> tuple[VertexProgram, int]:
+    """Power iteration as a vertex program: every vertex is active every
+    step; wire values are rank/out-degree contributions."""
+    n = g.n
+    base = (1.0 - damp) / n
+
+    def values_fn(g_, state, frontier):
+        return _contrib(state, g_.out_deg)
+
+    def update(state, msgs, step):
+        return base + damp * msgs, jnp.ones((n,), bool), jnp.bool_(False)
+
+    prog = VertexProgram(combine="sum", update_fn=update,
+                         values_fn=values_fn,
+                         # reading own rank + degree for the contribution
+                         step_charges=(("reads", 2 * n),))
+    return prog, iters
+
+
+def pagerank_init(g: Graph, **_):
+    n = g.n
+    return (jnp.full((n,), 1.0 / n, jnp.float32), jnp.ones((n,), bool))
+
+
 def pagerank(g: Graph, iters: int = 20, damp: float = 0.85,
              direction: str = "pull", use_ell: bool = False) -> PageRankResult:
     """Power iteration; `direction` in {'push','pull'}; `use_ell` selects
-    the ELL (kernel-shaped) pull layout."""
-    n = g.n
-    r0 = jnp.full((n,), 1.0 / n, jnp.float32)
-    base = (1.0 - damp) / n
-    all_v = jnp.ones((n,), bool)
-
-    def body(carry, _):
-        r, cost = carry
-        x = _contrib(r, g.out_deg)
-        if direction == "push":
-            acc, cost = push_relax(g, x, all_v, combine="sum", cost=cost)
-        elif use_ell:
-            acc, cost = pull_relax_ell(g, x, combine="sum", cost=cost)
-        else:
-            acc, cost = pull_relax(g, x, combine="sum", cost=cost)
-        r_new = base + damp * acc
-        # reading own rank + degree for the contribution
-        cost = cost.charge(reads=2 * n, iterations=1, barriers=1)
-        return (r_new, cost), None
-
-    (r, cost), _ = jax.lax.scan(body, (r0, Cost()), None, length=iters)
-    return PageRankResult(ranks=r, cost=cost, iterations=iters)
+    the ELL (kernel-shaped) pull layout. Thin wrapper over
+    ``repro.api.solve`` (policy = Fixed direction, backend = dense/ELL)."""
+    from ... import api
+    from ..backend import DenseBackend, EllBackend
+    policy = Fixed(Direction.PUSH if direction == "push"
+                   else Direction.PULL)
+    backend = EllBackend() if use_ell else DenseBackend()
+    r = api.solve(g, "pagerank", policy=policy, backend=backend,
+                  iters=iters, damp=damp)
+    return PageRankResult(ranks=r.state, cost=r.cost, iterations=iters)
 
 
 def pagerank_pa_prepare(g: Graph, num_parts: int, iters: int = 20,

@@ -11,12 +11,13 @@ push: active vertices scatter residual shares (float combining writes on
       the active edge set only);
 pull: every vertex gathers the active residual shares (reads all m).
 
-Both converge to the same fixpoint as power iteration.
+Both converge to the same fixpoint as power iteration. Registered with
+``repro.api`` as ``"pr_delta"``; :func:`pagerank_delta` is the thin
+legacy wrapper.
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -24,9 +25,11 @@ import jax.numpy as jnp
 
 from ...graphs.structure import Graph
 from ..cost_model import Cost
-from ..primitives import pull_relax, push_relax
+from ..direction import Direction, Fixed
+from ..engine import VertexProgram
 
-__all__ = ["pagerank_delta", "PRDeltaResult"]
+__all__ = ["pagerank_delta", "PRDeltaResult", "pr_delta_program",
+           "pr_delta_init", "pr_delta_finalize"]
 
 
 class PRDeltaResult(NamedTuple):
@@ -36,36 +39,51 @@ class PRDeltaResult(NamedTuple):
     max_residual: jax.Array
 
 
-@partial(jax.jit, static_argnames=("direction", "max_rounds"))
+def pr_delta_program(g: Graph, tol: float = 1e-6,
+                     damp: float = 0.85) -> tuple[VertexProgram, int]:
+    def values_fn(g_, state, frontier):
+        deg = jnp.maximum(g_.out_deg, 1).astype(jnp.float32)
+        return jnp.where(frontier, damp * state["res"] / deg, 0.0)
+
+    def update(state, msgs, step):
+        # `active` equals the frontier the engine just relaxed: the
+        # residual field is untouched since it was derived.
+        active = jnp.abs(state["res"]) > tol
+        rank = state["rank"] + jnp.where(active, state["res"], 0.0)
+        res = jnp.where(active, 0.0, state["res"]) + msgs
+        nxt = jnp.abs(res) > tol
+        return {"rank": rank, "res": res}, nxt, ~jnp.any(nxt)
+
+    def charge_fn(g_, state, frontier):
+        # banking res into rank: one write per active vertex
+        return {"writes": jnp.sum(frontier.astype(jnp.int64))}
+
+    prog = VertexProgram(combine="sum", update_fn=update,
+                         values_fn=values_fn, charge_fn=charge_fn)
+    return prog, 10_000
+
+
+def pr_delta_init(g: Graph, tol: float = 1e-6, damp: float = 0.85, **_):
+    n = g.n
+    state0 = {"rank": jnp.zeros((n,), jnp.float32),
+              "res": jnp.full((n,), (1.0 - damp) / n, jnp.float32)}
+    return state0, jnp.abs(state0["res"]) > tol
+
+
+def pr_delta_finalize(state):
+    return {"ranks": state["rank"] + state["res"],
+            "max_residual": jnp.max(jnp.abs(state["res"]))}
+
+
 def pagerank_delta(g: Graph, tol: float = 1e-6, damp: float = 0.85,
                    direction: str = "push", max_rounds: int = 10_000
                    ) -> PRDeltaResult:
-    n = g.n
-    deg = jnp.maximum(g.out_deg, 1).astype(jnp.float32)
-
-    def cond(st):
-        _r, res, _c, rnd = st
-        return (rnd < max_rounds) & jnp.any(jnp.abs(res) > tol)
-
-    def body(st):
-        rank, res, cost, rnd = st
-        active = jnp.abs(res) > tol
-        share = jnp.where(active, damp * res / deg, 0.0)
-        if direction == "push":
-            delta, cost = push_relax(g, share, active, combine="sum",
-                                     cost=cost)
-        else:
-            delta, cost = pull_relax(
-                g, share, combine="sum", cost=cost)
-        rank = rank + jnp.where(active, res, 0.0)
-        res = jnp.where(active, 0.0, res) + delta
-        cost = cost.charge(iterations=1, barriers=1,
-                           writes=jnp.sum(active.astype(jnp.int64)))
-        return rank, res, cost, rnd + 1
-
-    rank0 = jnp.zeros((n,), jnp.float32)
-    res0 = jnp.full((n,), (1.0 - damp) / n, jnp.float32)
-    rank, res, cost, rounds = jax.lax.while_loop(
-        cond, body, (rank0, res0, Cost(), jnp.int32(0)))
-    return PRDeltaResult(ranks=rank + res, cost=cost, rounds=rounds,
-                         max_residual=jnp.max(jnp.abs(res)))
+    """Legacy entry point — now a thin wrapper over ``repro.api.solve``."""
+    from ... import api
+    policy = Fixed(Direction.PUSH if direction == "push"
+                   else Direction.PULL)
+    r = api.solve(g, "pr_delta", policy=policy, max_steps=max_rounds,
+                  tol=tol, damp=damp)
+    return PRDeltaResult(ranks=r.state["ranks"], cost=r.cost,
+                         rounds=r.steps,
+                         max_residual=r.state["max_residual"])

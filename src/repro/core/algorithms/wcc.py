@@ -1,15 +1,15 @@
-"""Weakly Connected Components — a PushPullEngine instance (min-label
-propagation), showing the engine carries whole algorithms.
+"""Weakly Connected Components — min-label propagation as the canonical
+PushPullEngine instance.
 
 push: changed vertices push their label to neighbors (combining-min; the
       frontier shrinks as labels settle — Frontier-Exploit for free);
 pull: every vertex re-reduces over in-neighbors (no combining writes).
-GenericSwitch direction-optimizes like BFS.
+GenericSwitch direction-optimizes like BFS. Registered with ``repro.api``
+as ``"wcc"``; :func:`wcc` is the thin legacy wrapper.
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -18,9 +18,9 @@ import jax.numpy as jnp
 from ...graphs.structure import Graph
 from ..cost_model import Cost
 from ..direction import Direction, DirectionPolicy, Fixed
-from ..engine import PushPullEngine, VertexProgram
+from ..engine import VertexProgram
 
-__all__ = ["wcc", "WCCResult"]
+__all__ = ["wcc", "WCCResult", "wcc_program", "wcc_init"]
 
 
 class WCCResult(NamedTuple):
@@ -30,19 +30,26 @@ class WCCResult(NamedTuple):
     steps: jax.Array
 
 
-@partial(jax.jit, static_argnames=("policy", "max_steps"))
-def wcc(g: Graph, policy: DirectionPolicy = Fixed(Direction.PULL),
-        max_steps: int = 10_000) -> WCCResult:
+def wcc_program(g: Graph,
+                max_steps: int = 10_000) -> tuple[VertexProgram, int]:
     def update(state, msgs, step):
         new = jnp.minimum(state, msgs)
         frontier = new < state
         return new, frontier, ~jnp.any(frontier)
 
-    prog = VertexProgram(combine="min", update_fn=update)
-    eng = PushPullEngine(program=prog, policy=policy, max_steps=max_steps)
-    init = jnp.arange(g.n, dtype=jnp.int32)
-    res = eng.run(g, init, jnp.ones((g.n,), bool))
-    roots = res.state == jnp.arange(g.n, dtype=jnp.int32)
-    return WCCResult(labels=res.state,
+    return VertexProgram(combine="min", update_fn=update), max_steps
+
+
+def wcc_init(g: Graph, **_):
+    return jnp.arange(g.n, dtype=jnp.int32), jnp.ones((g.n,), bool)
+
+
+def wcc(g: Graph, policy: DirectionPolicy = Fixed(Direction.PULL),
+        max_steps: int = 10_000) -> WCCResult:
+    """Legacy entry point — now a thin wrapper over ``repro.api.solve``."""
+    from ... import api
+    r = api.solve(g, "wcc", policy=policy, max_steps=max_steps)
+    roots = r.state == jnp.arange(g.n, dtype=jnp.int32)
+    return WCCResult(labels=r.state,
                      num_components=jnp.sum(roots.astype(jnp.int32)),
-                     cost=res.cost, steps=res.steps)
+                     cost=r.cost, steps=r.steps)

@@ -1,0 +1,201 @@
+"""ExchangeBackend — pluggable k-relaxation execution (paper §4, §6, §7).
+
+The paper's thesis is that push and pull are two *implementations* of one
+abstract primitive; this module adds the third axis: the same primitive
+over different *memory systems*. A backend answers one question — "given
+wire values and a frontier, combine messages per destination" — and the
+engine/API never care how:
+
+  * ``DenseBackend``       — the dense-frontier segment ops
+    (``push_relax`` / ``pull_relax``), shared-memory semantics.
+  * ``EllBackend``         — pull in the ELL (padded-row) layout the
+    Pallas ``ell_spmv`` kernel tiles; push falls back to the COO scatter
+    (ELL is a pull-major layout).
+  * ``DistributedBackend`` — the paper's §6 DM setting: a 1D partition +
+    PA edge split; local edges are plain per-owner writes, remote edges
+    go through ``dist.collectives`` (combined-alltoall push or
+    all_gather pull), with collective bytes charged to the Cost.
+
+``relax`` accepts ``direction`` as a static ``Direction`` or a traced
+boolean (True = push) so direction-switching policies can pick per step
+inside jitted loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..graphs.structure import Graph
+from .cost_model import Cost
+from .direction import Direction
+from .primitives import (combine_identity, frontier_in_edges,
+                         frontier_out_edges, mask_untouched, pull_relax,
+                         pull_relax_ell, push_relax)
+
+__all__ = ["ExchangeBackend", "DenseBackend", "EllBackend",
+           "DistributedBackend"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeBackend:
+    """Protocol: subclasses implement ``push`` and ``pull``; ``relax``
+    dispatches, including runtime (traced-bool) direction switching."""
+
+    def push(self, g: Graph, values: jax.Array, frontier: jax.Array,
+             combine: str, msg_fn: Optional[Callable],
+             cost: Cost) -> tuple[jax.Array, Cost]:
+        raise NotImplementedError
+
+    def pull(self, g: Graph, values: jax.Array,
+             touched: Optional[jax.Array], combine: str,
+             msg_fn: Optional[Callable],
+             cost: Cost) -> tuple[jax.Array, Cost]:
+        raise NotImplementedError
+
+    def relax(self, g: Graph, values: jax.Array, frontier: jax.Array, *,
+              direction, combine: str = "sum",
+              msg_fn: Optional[Callable] = None,
+              touched: Optional[jax.Array] = None,
+              cost: Cost = Cost()) -> tuple[jax.Array, Cost]:
+        if isinstance(direction, Direction):
+            if direction == Direction.PUSH:
+                return self.push(g, values, frontier, combine, msg_fn, cost)
+            return self.pull(g, values, touched, combine, msg_fn, cost)
+        return jax.lax.cond(
+            direction,
+            lambda v, f, c: self.push(g, v, f, combine, msg_fn, c),
+            lambda v, f, c: self.pull(g, v, touched, combine, msg_fn, c),
+            values, frontier, cost)
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseBackend(ExchangeBackend):
+    """Shared-memory dense-frontier segment ops (the seed primitives)."""
+
+    def push(self, g, values, frontier, combine, msg_fn, cost):
+        return push_relax(g, values, frontier, combine=combine,
+                          msg_fn=msg_fn, cost=cost)
+
+    def pull(self, g, values, touched, combine, msg_fn, cost):
+        return pull_relax(g, values, touched=touched, combine=combine,
+                          msg_fn=msg_fn, cost=cost)
+
+
+@dataclasses.dataclass(frozen=True)
+class EllBackend(ExchangeBackend):
+    """Pull in the ELL layout (rectangular VMEM tiles — what the
+    ``ell_spmv`` Pallas kernel consumes); push falls back to COO."""
+
+    def push(self, g, values, frontier, combine, msg_fn, cost):
+        return push_relax(g, values, frontier, combine=combine,
+                          msg_fn=msg_fn, cost=cost)
+
+    def pull(self, g, values, touched, combine, msg_fn, cost):
+        out, cost = pull_relax_ell(g, values, combine=combine,
+                                   msg_fn=msg_fn, cost=cost)
+        if touched is not None:
+            out = mask_untouched(out, touched, combine)
+        return out, cost
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DistributedBackend(ExchangeBackend):
+    """DM k-relaxation over a 1D partition + PA split (paper §6).
+
+    Local edges (both endpoints owned) are plain segment writes; only the
+    cut crosses shards, by the combined-alltoall push or the all_gather
+    pull. Build with :meth:`prepare`; the instance is graph-specific.
+
+    Restriction: messages must be a function of the *wire value only*
+    (``msg_fn(v, w)`` with masked sources carrying the combine identity),
+    which holds for every algorithm in ``repro.api``.
+    """
+    mesh: object = None
+    part: object = None
+    local: object = None          # edges grouped by owner (src==dst owner)
+    remote_by_src: object = None  # cut edges grouped by src owner (push)
+    remote_by_dst: object = None  # cut edges grouped by dst owner (pull)
+    cut_edges: int = 0
+    axis: str = "data"
+
+    # identity-based hash/eq (eq=False): instances hold jnp arrays, and
+    # jit static-arg hashing only needs per-instance identity.
+
+    @classmethod
+    def prepare(cls, g: Graph, mesh=None, num_parts: Optional[int] = None,
+                axis: str = "data") -> "DistributedBackend":
+        from ..graphs.partition import (pa_regroup_by_dst, pa_split,
+                                        partition_1d)
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(), 1), (axis, "model"))
+        if num_parts is None:
+            num_parts = mesh.shape[axis]
+        if num_parts != mesh.shape[axis]:
+            raise ValueError(
+                f"num_parts={num_parts} must equal the mesh '{axis}' axis "
+                f"size ({mesh.shape[axis]}): the exchanges map partitions "
+                "to mesh shards 1:1.")
+        part = partition_1d(g.n, num_parts)
+        local, remote_src, stats = pa_split(g, part)
+        # only the cut needs the pull grouping; the local set and stats
+        # are grouping-independent (local edges share one owner)
+        remote_dst = pa_regroup_by_dst(part, remote_src, g.n)
+        return cls(mesh=mesh, part=part, local=local,
+                   remote_by_src=remote_src, remote_by_dst=remote_dst,
+                   cut_edges=int(stats["cut_edges"]), axis=axis)
+
+    # -- helpers -----------------------------------------------------------
+    def _pad(self, values: jax.Array, fill) -> jax.Array:
+        extra = max(0, self.part.n_padded - values.shape[0])
+        widths = ((0, extra),) + ((0, 0),) * (values.ndim - 1)
+        return jnp.pad(values, widths, constant_values=fill)
+
+    def _wire_msg_fn(self, msg_fn):
+        # primitives treat msg_fn=None as "value, unweighted"; collectives
+        # default to value*weight — normalize to the primitive convention.
+        return msg_fn if msg_fn is not None else (lambda v, w: v)
+
+    # -- ExchangeBackend ---------------------------------------------------
+    def push(self, g, values, frontier, combine, msg_fn, cost):
+        from ..dist.collectives import pa_exchange
+        ident = combine_identity(combine, values.dtype)
+        vpad = self._pad(jnp.where(frontier, values, ident), ident)
+        out, nbytes = pa_exchange(
+            self.mesh, self.part, self.local, self.remote_by_src, vpad,
+            direction="push", msg_fn=self._wire_msg_fn(msg_fn),
+            combine=combine, axis=self.axis)
+        k = frontier_out_edges(g, frontier)
+        cost = cost.charge(reads=k).charge_combining_writes(
+            jnp.minimum(k, self.cut_edges),
+            float_data=jnp.issubdtype(values.dtype, jnp.floating))
+        cost = cost.charge(messages=jnp.minimum(k, self.cut_edges),
+                           collective_bytes=nbytes * self.part.num_parts)
+        return out[:g.n], cost
+
+    def pull(self, g, values, touched, combine, msg_fn, cost):
+        from ..dist.collectives import pa_exchange
+        ident = combine_identity(combine, values.dtype)
+        vpad = self._pad(values, ident)
+        out, nbytes = pa_exchange(
+            self.mesh, self.part, self.local, self.remote_by_dst, vpad,
+            direction="pull", msg_fn=self._wire_msg_fn(msg_fn),
+            combine=combine, axis=self.axis)
+        out = out[:g.n]
+        if touched is not None:
+            out = mask_untouched(out, touched, combine)
+            k = frontier_in_edges(g, touched)
+            wr = jnp.sum(touched.astype(jnp.int64))
+        else:
+            k = jnp.asarray(g.m, jnp.int64)
+            wr = jnp.asarray(g.n, jnp.int64)
+        cost = cost.charge(reads=k, writes=wr,
+                           collective_bytes=nbytes * self.part.num_parts)
+        return out, cost

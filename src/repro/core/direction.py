@@ -54,6 +54,13 @@ class DirectionPolicy:
 class Fixed(DirectionPolicy):
     direction: Direction = Direction.PUSH
 
+    def __post_init__(self):
+        if self.direction == Direction.AUTO:
+            raise ValueError(
+                "Fixed(Direction.AUTO) is not a policy: Fixed always runs "
+                "one direction. Use GenericSwitch() (or GreedySwitch()) "
+                "for automatic direction optimization.")
+
     def decide_push(self, g, frontier, unvisited_edges):
         return jnp.asarray(self.direction == Direction.PUSH)
 

@@ -1,33 +1,42 @@
 """PushPullEngine — the paper's contribution as a composable JAX module.
 
-A *vertex program* is (msg_fn, combine, update_fn):
+A *vertex program* is (msg_fn, combine, update_fn) plus optional hooks:
 
     msg_fn(src_value, edge_weight) -> message          (⊗ of §7.1)
     combine ∈ {sum, min, max}                          (⊕ / CRCW-CB)
-    update_fn(old_state, combined_msgs, step) -> (new_state, frontier)
+    update_fn(old_state, combined_msgs, step) -> (new_state, frontier,
+                                                  converged)
+    values_fn(g, state, frontier) -> wire values       (default: state)
+    tail_fn(g, state, frontier, cost) -> (state, cost) (GreedySwitch
+                                                        hand-off, §5-GrS)
 
-The engine runs it to a fixed point (or `max_steps`) under a
+The engine runs the program to a fixed point (or ``max_steps``) under a
 DirectionPolicy, executing each step as either a push k-relaxation
-(scatter from the frontier) or a pull k-relaxation (gather into all
-vertices), with only the chosen direction evaluated at runtime
-(`lax.cond`). Everything the framework's GNN layers and graph algorithms
-need reduces to this loop; PR/BFS/etc. in `algorithms/` are hand-tuned
-instances with richer carries.
+(scatter from the frontier) or a pull k-relaxation (gather into
+destinations), with only the chosen direction evaluated at runtime
+(``lax.cond``) — and, orthogonally, through a pluggable
+:class:`~repro.core.backend.ExchangeBackend` (dense / ELL / distributed).
+
+The loop carries a real *visited* mask (the union of every frontier so
+far), so ``GenericSwitch``'s growing-phase test sees the actual
+unvisited edge count instead of the total edge count, and push steps pay
+the paper's k-filter compaction. ``state`` may be any pytree.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..graphs.structure import Graph
+from .backend import DenseBackend, ExchangeBackend
 from .cost_model import Cost
-from .direction import DirectionPolicy, Fixed, Direction
-from .primitives import frontier_in_edges, pull_relax, push_relax
+from .direction import Direction, DirectionPolicy, Fixed, GreedySwitch
+from .primitives import frontier_in_edges, k_filter
 
 __all__ = ["VertexProgram", "PushPullEngine", "EngineResult"]
 
@@ -38,13 +47,44 @@ class VertexProgram:
     msg_fn: Optional[Callable] = None
     # update_fn(state, msgs, step) -> (state, frontier, converged)
     update_fn: Callable = None  # type: ignore[assignment]
+    # values_fn(g, state, frontier) -> values put on the wire (default:
+    # state itself — the label-propagation case)
+    values_fn: Optional[Callable] = None
+    # what pull inspects: 'all' destinations, or only the 'unvisited' ones
+    # (BFS-style programs where settled vertices never update again)
+    pull_touched: str = "all"
+    # static per-iteration charges, e.g. (("reads", 2 * n),) for reading
+    # own state + degree when forming contributions
+    step_charges: tuple = ()
+    # dynamic per-iteration charges: charge_fn(g, state, frontier) -> dict
+    # of traced counter increments (state/frontier are pre-update)
+    charge_fn: Optional[Callable] = None
+    # charge the paper's k-filter (frontier compaction) after push steps —
+    # only meaningful for sparse-frontier programs (BFS); dense programs
+    # (PR) never filter, matching the paper's accounting
+    k_filter_push: bool = False
+    # GreedySwitch terminal hand-off (paper §5-GrS): invoked once when the
+    # active set drops below the policy's tail threshold
+    tail_fn: Optional[Callable] = None
 
 
 class EngineResult(NamedTuple):
-    state: jax.Array
+    state: Any
     cost: Cost
     steps: jax.Array
     push_steps: jax.Array
+    converged: jax.Array = jnp.bool_(True)
+
+
+class _Loop(NamedTuple):
+    state: Any
+    frontier: jax.Array
+    visited: jax.Array
+    converged: jax.Array
+    handoff: jax.Array
+    step: jax.Array
+    cost: Cost
+    pushes: jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,35 +92,74 @@ class PushPullEngine:
     program: VertexProgram
     policy: DirectionPolicy = Fixed(Direction.PULL)
     max_steps: int = 100
+    backend: ExchangeBackend = DenseBackend()
 
     @partial(jax.jit, static_argnames=("self",))
-    def run(self, g: Graph, init_state: jax.Array,
+    def run(self, g: Graph, init_state: Any,
             init_frontier: jax.Array) -> EngineResult:
         prog = self.program
+        values_fn = prog.values_fn or (lambda g_, s, f: s)
+        greedy = (isinstance(self.policy, GreedySwitch)
+                  and prog.tail_fn is not None)
+        # Fixed policies dispatch statically: only the chosen direction is
+        # traced/compiled (switching policies pay the lax.cond).
+        fixed_dir = (self.policy.direction
+                     if isinstance(self.policy, Fixed) else None)
 
-        def cond(st):
-            _state, _frontier, conv, step, *_ = st
-            return (~conv) & (step < self.max_steps)
+        def cond(st: _Loop):
+            return (~st.converged) & (~st.handoff) & (st.step < self.max_steps)
 
-        def body(st):
-            state, frontier, _conv, step, cost, pushes = st
-            unvisited_edges = frontier_in_edges(g, jnp.ones((g.n,), bool))
-            do_push = self.policy.decide_push(g, frontier, unvisited_edges)
-            msgs, cost = jax.lax.cond(
-                do_push,
-                lambda s, f, c: push_relax(g, s, f, combine=prog.combine,
-                                           msg_fn=prog.msg_fn, cost=c),
-                lambda s, f, c: pull_relax(g, s, combine=prog.combine,
-                                           msg_fn=prog.msg_fn, cost=c),
-                state, frontier, cost)
-            state, frontier, conv = prog.update_fn(state, msgs, step)
-            cost = cost.charge(iterations=1, barriers=1)
-            return (state, frontier, conv, step + 1, cost,
-                    pushes + do_push.astype(jnp.int32))
+        def body(st: _Loop):
+            unvisited = ~st.visited
+            if fixed_dir is not None:
+                direction = fixed_dir
+                do_push = jnp.bool_(fixed_dir == Direction.PUSH)
+            else:
+                unvisited_edges = frontier_in_edges(g, unvisited)
+                direction = do_push = self.policy.decide_push(
+                    g, st.frontier, unvisited_edges)
+            values = values_fn(g, st.state, st.frontier)
+            touched = unvisited if prog.pull_touched == "unvisited" else None
+            msgs, cost = self.backend.relax(
+                g, values, st.frontier, direction=direction,
+                combine=prog.combine, msg_fn=prog.msg_fn, touched=touched,
+                cost=st.cost)
+            state, frontier, conv = prog.update_fn(st.state, msgs, st.step)
+            if prog.k_filter_push:
+                # push produced a sparse updated set -> k-filter compacts
+                # it (paper: pull inspects every vertex anyway)
+                _, cost = jax.lax.cond(
+                    do_push, k_filter, lambda f, c: (f, c), frontier, cost)
+            cost = cost.charge(iterations=1, barriers=1,
+                               **dict(prog.step_charges))
+            if prog.charge_fn is not None:
+                cost = cost.charge(**prog.charge_fn(g, st.state,
+                                                    st.frontier))
+            handoff = st.handoff
+            if greedy:
+                active = jnp.sum(frontier.astype(jnp.int64))
+                handoff = (~conv) & self.policy.should_handoff(g, active)
+            return _Loop(state=state, frontier=frontier,
+                         visited=st.visited | frontier, converged=conv,
+                         handoff=handoff, step=st.step + 1, cost=cost,
+                         pushes=st.pushes + do_push.astype(jnp.int32))
 
-        init = (init_state, init_frontier, jnp.bool_(False), jnp.int32(0),
-                Cost(), jnp.int32(0))
-        state, _, _, steps, cost, pushes = jax.lax.while_loop(
-            cond, body, init)
-        return EngineResult(state=state, cost=cost, steps=steps,
-                            push_steps=pushes)
+        # an empty initial frontier is already converged (matches the
+        # seed loops, whose cond checked the frontier before any work)
+        init = _Loop(state=init_state, frontier=init_frontier,
+                     visited=init_frontier,
+                     converged=~jnp.any(init_frontier),
+                     handoff=jnp.bool_(False), step=jnp.int32(0),
+                     cost=Cost(), pushes=jnp.int32(0))
+        fin = jax.lax.while_loop(cond, body, init)
+
+        state, cost, converged = fin.state, fin.cost, fin.converged
+        if greedy:
+            state, cost = jax.lax.cond(
+                fin.handoff,
+                lambda s, f, c: prog.tail_fn(g, s, f, c),
+                lambda s, f, c: (s, c),
+                fin.state, fin.frontier, fin.cost)
+            converged = converged | fin.handoff
+        return EngineResult(state=state, cost=cost, steps=fin.step,
+                            push_steps=fin.pushes, converged=converged)

@@ -39,7 +39,7 @@ from .cost_model import Cost
 __all__ = [
     "push_relax", "pull_relax", "pull_relax_ell", "k_filter",
     "frontier_out_edges", "frontier_in_edges", "COMBINE_FNS",
-    "combine_identity",
+    "combine_identity", "mask_untouched",
 ]
 
 COMBINE_FNS = {
@@ -59,6 +59,14 @@ def combine_identity(combine: str, dtype) -> jax.Array:
         return jnp.asarray(val, dtype)
     info = jnp.iinfo(dtype)
     return jnp.asarray(info.max if combine == "min" else info.min, dtype)
+
+
+def mask_untouched(out: jax.Array, touched: jax.Array,
+                   combine: str) -> jax.Array:
+    """Set untouched destinations to the reduce identity (= 'no update');
+    broadcasts a bool[n] mask over [n] or [n, d] outputs."""
+    tb = touched.reshape((-1,) + (1,) * (out.ndim - 1))
+    return jnp.where(tb, out, combine_identity(combine, out.dtype))
 
 
 def frontier_out_edges(g: Graph, frontier: jax.Array) -> jax.Array:
@@ -123,9 +131,7 @@ def pull_relax(g: Graph, values: jax.Array, touched: Optional[jax.Array] = None,
         k = jnp.asarray(g.m, jnp.int64)
         wr = jnp.asarray(g.n, jnp.int64)
     else:
-        tb = touched.reshape((-1,) + (1,) * (out.ndim - 1))
-        # masked-out destinations hold the reduce identity (= "no update")
-        out = jnp.where(tb, out, combine_identity(combine, out.dtype))
+        out = mask_untouched(out, touched, combine)
         k = frontier_in_edges(g, touched)
         wr = jnp.sum(touched.astype(jnp.int64))
     width = 1 if values.ndim == 1 else values.shape[-1]

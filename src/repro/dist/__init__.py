@@ -1,0 +1,23 @@
+"""Distributed-memory layer (paper §6): sharding rules, PA exchanges,
+overlap primitives, and gradient compression.
+
+The graph side consumes ``collectives`` through
+``repro.core.backend.DistributedBackend``; the training side consumes
+``compression``/``overlap`` through ``repro.train.loop``.
+"""
+
+from .compression import (CompressionConfig, compress_tree,
+                          compressed_bytes, init_error_state)
+from .overlap import microbatch_grads, ring_allreduce_psum
+from .sharding import (BATCH, batch_axes, get_activation_mesh, hint,
+                       make_sharding, set_activation_mesh)
+from . import collectives, compression, overlap, sharding
+
+__all__ = [
+    "CompressionConfig", "compress_tree", "compressed_bytes",
+    "init_error_state",
+    "microbatch_grads", "ring_allreduce_psum",
+    "BATCH", "batch_axes", "get_activation_mesh", "hint", "make_sharding",
+    "set_activation_mesh",
+    "collectives", "compression", "overlap", "sharding",
+]

@@ -1,0 +1,166 @@
+"""Sharding rules + activation-sharding hints (DM layer, paper §2.2).
+
+The paper's distributed-memory setting assigns each process a contiguous
+block of vertices (1D decomposition); here the same convention governs how
+tensors spread over a device mesh:
+
+  * batch-like leading dims shard over the flattened ('pod', 'data') axes
+    (whichever exist in the active mesh) — ``batch_axes``/``BATCH``;
+  * model-parallel dims shard over 'model' (Megatron split for
+    transformer blocks, expert-parallel for MoE, table rows for recsys).
+
+``hint`` is the in-model annotation primitive: a no-op until a cell
+builder installs a mesh with ``set_activation_mesh``, after which it
+lowers to ``with_sharding_constraint`` against that mesh. Axis entries
+that don't exist in the mesh or don't divide the dim are dropped, so the
+same model code traces on 1 CPU device and on a pod.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "BATCH", "hint", "set_activation_mesh", "get_activation_mesh",
+    "batch_axes", "make_sharding", "transformer_param_specs",
+    "recsys_param_specs",
+]
+
+# Sentinel axis name: "the flattened batch axes of the active mesh".
+BATCH = "__batch__"
+
+# Installed by cell builders (configs.steps / configs.registry) right
+# before tracing; models read it through `hint` at trace time.
+_ACT_MESH: Optional[Mesh] = None
+
+
+def set_activation_mesh(mesh: Optional[Mesh]) -> None:
+    """Install (or clear, with None) the mesh `hint` annotates against."""
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def get_activation_mesh() -> Optional[Mesh]:
+    return _ACT_MESH
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """The data-parallel axes present in ``mesh`` (flattened in specs)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = (entry,) if isinstance(entry, str) else tuple(entry)
+    size = 1
+    for a in names:
+        size *= mesh.shape[a]
+    return size
+
+
+def _sanitize_entry(mesh: Mesh, entry, dim_size: int):
+    """Keep only mesh axes that exist and evenly divide ``dim_size``."""
+    if entry is None:
+        return None
+    names = (entry,) if isinstance(entry, str) else tuple(entry)
+    names = tuple(a for a in names if a in mesh.axis_names)
+    if not names:
+        return None
+    if dim_size % _axis_size(mesh, names) != 0:
+        return None
+    return names[0] if len(names) == 1 else names
+
+
+def make_sharding(mesh: Mesh, spec: P, shape: tuple) -> NamedSharding:
+    """NamedSharding for ``shape`` with non-dividing axes dropped."""
+    entries = []
+    for dim, size in enumerate(shape):
+        entry = spec[dim] if dim < len(spec) else None
+        entries.append(_sanitize_entry(mesh, entry, size))
+    return NamedSharding(mesh, P(*entries))
+
+
+def hint(x: jax.Array, *axes) -> jax.Array:
+    """Annotate ``x`` with a PartitionSpec against the activation mesh.
+
+    ``axes`` entries: None (replicated), a mesh axis name, a tuple of axis
+    names, or the BATCH sentinel (resolved to ``batch_axes(mesh)``).
+    No-op when no mesh is installed.
+    """
+    mesh = _ACT_MESH
+    if mesh is None:
+        return x
+    resolved = []
+    for entry in axes:
+        if entry == BATCH:
+            ba = batch_axes(mesh)
+            resolved.append(ba if ba else None)
+        else:
+            resolved.append(entry)
+    sharding = make_sharding(mesh, P(*resolved), x.shape)
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+# ------------------------------------------------------- param specs --
+def _zero_axes(mesh: Mesh, zero: str) -> tuple:
+    """ZeRO-style parameter sharding axes.
+
+    'pull' — optimizer/parameter state shards over the data axes and is
+    all-gathered (pulled) at use; 'push' — parameters stay replicated and
+    gradients are pushed (reduce-scattered) only. Mirrors the paper's
+    read-redundancy vs write-combining trade."""
+    return batch_axes(mesh) if zero == "pull" else ()
+
+
+def _spec_for_transformer_leaf(mesh: Mesh, path: tuple, leaf,
+                               zero_ax: tuple) -> NamedSharding:
+    keys = [p.key for p in path if hasattr(p, "key")]
+    shape = leaf.shape
+    nd = len(shape)
+    entries = [None] * nd
+    name = keys[-1] if keys else ""
+    if name == "w":
+        name = keys[-2] if len(keys) >= 2 else ""
+    if name == "embed":
+        entries[0] = "model"                     # [V, D] vocab-parallel
+    elif name in ("wq", "wk", "wv", "wi", "wg", "unembed"):
+        entries[nd - 1] = "model"                # output-dim split
+    elif name == "wo" and nd >= 2:
+        entries[nd - 2] = "model"                # input-dim split
+    elif zero_ax and nd >= 1:
+        entries[0] = zero_ax
+    if zero_ax and nd >= 2 and entries[0] is None and name in (
+            "wq", "wk", "wv", "wi", "wg", "wo"):
+        entries[0] = zero_ax                     # leading L axis over data
+    return make_sharding(mesh, P(*entries), shape)
+
+
+def transformer_param_specs(mesh: Mesh, params: Any,
+                            zero: str = "pull") -> Any:
+    """Megatron-style NamedSharding tree for transformer params.
+
+    Column-parallel wq/wk/wv/wi/wg + embeddings, row-parallel wo,
+    replicated norms; ``zero='pull'`` additionally spreads the stacked
+    layer axis over the data axes when divisible."""
+    zero_ax = _zero_axes(mesh, zero)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_transformer_leaf(mesh, path, leaf,
+                                                      zero_ax), params)
+
+
+def recsys_param_specs(mesh: Mesh, params: Any) -> Any:
+    """xDeepFM: embedding tables row-shard over 'model' (the dominant
+    memory), dense towers replicate."""
+
+    def one(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        entries = [None] * len(leaf.shape)
+        if any(k in ("tables", "table", "embed") for k in keys) and entries:
+            entries[0] = "model"
+        return make_sharding(mesh, P(*entries), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -24,7 +24,8 @@ import numpy as np
 
 from .structure import Graph
 
-__all__ = ["Partition", "partition_1d", "PartitionedEdges", "pa_split"]
+__all__ = ["Partition", "partition_1d", "PartitionedEdges", "pa_split",
+           "pa_regroup_by_dst"]
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -93,14 +94,31 @@ def _pack(rows: list[np.ndarray], cols: list[np.ndarray],
         cap=int(cap), num_parts=P)
 
 
+def pa_regroup_by_dst(part: Partition, edges: PartitionedEdges, n: int,
+                      align: int = 128) -> PartitionedEdges:
+    """Regroup a packed edge set by the *destination* owner — the pull
+    layout `dist.collectives.pull_exchange` consumes. Host-side, sized by
+    the edge set itself (for PA: the cut, not the full graph)."""
+    ok = np.asarray(edges.valid).reshape(-1)
+    src = np.asarray(edges.src).reshape(-1)[ok]
+    dst = np.asarray(edges.dst).reshape(-1)[ok]
+    w = np.asarray(edges.w).reshape(-1)[ok]
+    own_d = part.owner_np(dst)
+    P = part.num_parts
+    rows = [src[own_d == p] for p in range(P)]
+    cols = [dst[own_d == p] for p in range(P)]
+    ws = [w[own_d == p] for p in range(P)]
+    return _pack(rows, cols, ws, P, n, align)
+
+
 def pa_split(g: Graph, part: Partition, align: int = 128
              ) -> tuple[PartitionedEdges, PartitionedEdges, dict]:
     """Partition-Awareness split of ``g`` under ``part``.
 
-    Returns ``(local, remote, stats)`` where both edge sets are grouped by
-    the **source** owner (push layout; a pull consumer regroups by dst via
-    the exchange in `dist.collectives`). ``stats`` reports the cut size —
-    the paper's bound: remote combining writes ∈ [0, 2m].
+    Returns ``(local, remote, stats)`` where both edge sets are grouped
+    by the **source** owner (push layout; pull consumers regroup the cut
+    with `pa_regroup_by_dst`). ``stats`` reports the cut size — the
+    paper's bound: remote combining writes ∈ [0, 2m].
     """
     P = part.num_parts
     src = np.asarray(g.push_src)

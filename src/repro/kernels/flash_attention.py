@@ -34,10 +34,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
 
     def body(ki, carry):
         m, l, o = carry
-        k = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k),
-                            pl.dslice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k),
-                            pl.dslice(None))).astype(jnp.float32)
+        k = k_ref[0, pl.dslice(ki * block_k, block_k), :].astype(
+            jnp.float32)
+        v = v_ref[0, pl.dslice(ki * block_k, block_k), :].astype(
+            jnp.float32)
         s = q @ k.T                                   # [block_q, block_k]
         if softcap > 0:
             s = softcap * jnp.tanh(s / softcap)

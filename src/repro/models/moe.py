@@ -214,7 +214,8 @@ def _a2a_dispatch_block(router_p, experts_block, xf, cfg: MoEConfig,
     E = cfg.n_experts
     m_idx = jax.lax.axis_index("model")
     S_m = S // tp
-    xm = jax.lax.dynamic_slice(xf, (m_idx * S_m, 0), (S_m, D))
+    # index dtypes must match even under x64 (m_idx is int32)
+    xm = jax.lax.dynamic_slice(xf, (m_idx * S_m, jnp.int32(0)), (S_m, D))
     logits = dense_apply(router_p, xm.astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, gate_idx = jax.lax.top_k(probs, K)          # [S_m, K]

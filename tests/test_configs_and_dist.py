@@ -199,6 +199,8 @@ print("moe a2a-ep ok:", bool(onp.allclose(onp.asarray(got_a2a),
 """
 
 
+@pytest.mark.dist
+@pytest.mark.subprocess
 def test_dist_exchanges_multidevice():
     """shard_map exchanges need >1 device: run in a subprocess with 8
     fake host devices."""
