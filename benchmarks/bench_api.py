@@ -3,7 +3,11 @@
 Times the unified dispatch point on the stand-in power-law graph and
 emits one JSON payload per (algorithm, policy, backend) cell via
 ``common.emit`` — the regression anchor for every future backend that
-plugs into the registry.
+plugs into the registry. The phase-structured algorithms (sssp/bc/
+coloring/mst/tc) run on a smaller stand-in, matching their dedicated
+benches: their per-call work is superlinear in degree (TC) or carries
+long sequential sub-phases (coloring), so the full-scale graph would
+turn a smoke test into the benchmark itself.
 
     PYTHONPATH=src python -m benchmarks.run --only api_solve
 """
@@ -21,18 +25,33 @@ def run():
     from repro.core import (DenseBackend, Direction, DistributedBackend,
                             EllBackend, Fixed, GenericSwitch)
 
-    g = graph("orc", weighted=True)
-    backends = [("dense", DenseBackend()), ("ell", EllBackend()),
-                ("dist1", DistributedBackend.prepare(g))]
+    g_big = graph("orc", weighted=True)
+    g_small = graph("orc", weighted=True, scale=1.0 / 4096)
+    # TC's all-pairs intersection is O(m·d_ell²): use the sparse
+    # road-network stand-in, like bench_tc
+    g_sparse = graph("rca", weighted=True, scale=1.0 / 1024)
+    backends = {"dense": DenseBackend(), "ell": EllBackend(),
+                "dist1": DistributedBackend.prepare(g_big)}
     policies = [("push", Fixed(Direction.PUSH)),
                 ("pull", Fixed(Direction.PULL)),
                 ("gs", GenericSwitch())]
-    cases = [("pagerank", {"iters": 10}), ("bfs", {"root": 0}),
-             ("wcc", {}), ("pr_delta", {"tol": 1e-6})]
+    cases = [("pagerank", {"iters": 10}, g_big),
+             ("bfs", {"root": 0}, g_big),
+             ("wcc", {}, g_big),
+             ("pr_delta", {"tol": 1e-6}, g_big),
+             ("sssp_delta", {"source": 0, "delta": 2.0}, g_small),
+             ("betweenness", {"num_sources": 2}, g_small),
+             ("coloring", {"num_parts": 8}, g_small),
+             ("mst_boruvka", {}, g_small),
+             ("triangle_count", {}, g_sparse)]
+    dist_name = {"dense": "dense", "ell": "ell", "dist1": "distributed"}
 
-    for alg, kw in cases:
+    for alg, kw, g in cases:
+        declared = api.get_spec(alg).backends
         for pname, policy in policies:
-            for bname, backend in backends:
+            for bname, backend in backends.items():
+                if dist_name[bname] not in declared:
+                    continue
                 def fn():
                     r = api.solve(g, alg, policy=policy, backend=backend,
                                   **kw)
@@ -43,6 +62,7 @@ def run():
                 payload = json.dumps({
                     "algorithm": alg, "policy": pname, "backend": bname,
                     "steps": int(r.steps), "push_steps": int(r.push_steps),
+                    "epochs": int(r.epochs),
                     "reads": int(r.cost.reads),
                     "combining_writes": int(r.cost.atomics)
                                         + int(r.cost.locks),

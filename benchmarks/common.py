@@ -18,11 +18,15 @@ import numpy as np
 SCALE = 1.0 / 256    # stand-in scale vs paper sizes (CPU container)
 
 ROWS: list[str] = []
+# structured mirror of ROWS, consumed by `benchmarks.run --json PATH`
+RESULTS: list[dict] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     line = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(line)
+    RESULTS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(line, flush=True)
 
 

@@ -1,13 +1,16 @@
 """Benchmark runner: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines (plus human tables).
+Prints ``name,us_per_call,derived`` CSV lines (plus human tables); with
+``--json PATH`` the same rows are written as a machine-readable report,
+so perf trajectories (``BENCH_*.json``) can be produced mechanically.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -27,9 +30,33 @@ SUITES = [
 ]
 
 
+def _json_row(row: dict) -> dict:
+    """A report row; `derived` strings that are JSON payloads (bench_api)
+    come through parsed."""
+    derived = row["derived"]
+    if isinstance(derived, str) and derived[:1] in "{[":
+        try:
+            derived = json.loads(derived)
+        except ValueError:
+            pass
+    return {"name": row["name"], "us_per_call": row["us_per_call"],
+            "derived": derived}
+
+
+def write_json(path: str, failures: list) -> None:
+    from . import common
+    report = {"rows": [_json_row(r) for r in common.RESULTS],
+              "failures": [{"suite": n, "error": e} for n, e in failures]}
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"json report: {path} ({len(report['rows'])} rows)", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the emitted rows as a JSON report")
     args = ap.parse_args()
     failures = []
     for name, mod in SUITES:
@@ -45,6 +72,8 @@ def main() -> None:
             failures.append((name, repr(e)))
             import traceback
             traceback.print_exc()
+    if args.json:
+        write_json(args.json, failures)
     if failures:
         print("\nFAILED:", failures)
         sys.exit(1)

@@ -54,6 +54,27 @@ def main():
     print(f"  pagerank@ELL == pagerank@dense; wcc converged in "
           f"{int(w.steps)} steps ({int(w.push_steps)} push)")
 
+    # --- Phase-structured programs: every paper workload, one solve() ---
+    g2 = kronecker(scale=9, edge_factor=5, seed=2, weighted=True)
+    src = int(np.asarray(g2.out_deg).argmax())   # a connected hub vertex
+    s = api.solve(g2, "sssp_delta", source=src, delta=2.0)
+    print(f"\nsssp_delta: {int(s.epochs)} Δ-buckets, "
+          f"{int(s.steps)} inner relaxations")
+    bc = api.solve(g2, "betweenness", num_sources=4,
+                   policy=Fixed(Direction.PULL))
+    print(f"betweenness: 4 sources (epochs={int(bc.epochs)}), "
+          f"pull locks={int(bc.cost.locks)} (Madduri successor trick)")
+    col = api.solve(g2, "coloring", num_parts=8)
+    print(f"coloring: {int(col.state['num_colors'])} colors in "
+          f"{int(col.epochs)} Boman iterations")
+    mst = api.solve(g2, "mst_boruvka")
+    print(f"mst_boruvka: weight={float(mst.state['weight']):.1f} in "
+          f"{int(mst.epochs)} rounds "
+          f"({int(mst.state['components'])} components)")
+    t = api.solve(g2, "triangle_count")
+    print(f"triangle_count: {int(t.state['total']):,} triangles in "
+          f"{int(t.steps)} edge blocks")
+
     # --- Pallas kernels (TPU-target, interpret-validated) ---------------
     from repro.kernels import pull_spmv
     y = pull_spmv(g, jnp.ones((g.n,)), "sum")

@@ -10,17 +10,23 @@ implementations. This module is that claim as an interface:
 
     r = api.solve(g, "pagerank", iters=30)                  # GS policy
     r = api.solve(g, "bfs", root=0, policy=Fixed(Direction.PUSH))
-    r = api.solve(g, "pagerank", backend=EllBackend())      # ELL layout
+    r = api.solve(g, "sssp_delta", source=0, delta=2.0)     # Δ-stepping
+    r = api.solve(g, "mst_boruvka", backend=EllBackend())   # ELL layout
 
-Every algorithm is a :class:`~repro.core.engine.VertexProgram` executed
-by the :class:`~repro.core.engine.PushPullEngine`; ``policy`` chooses the
+Every algorithm is a :class:`~repro.core.engine.VertexProgram` — or a
+multi-phase :class:`~repro.core.engine.PhaseProgram` (Δ-stepping's bucket
+epochs, Brandes BC's forward/backward pair, Borůvka's find-min/contract
+rounds, Boman coloring's color/fix iterations) — executed by the
+:class:`~repro.core.engine.PushPullEngine`; ``policy`` chooses the
 direction per step (Fixed / GenericSwitch / GreedySwitch) and ``backend``
 chooses the memory system (Dense / ELL / Distributed) — any algorithm
-runs under any (policy × backend) pair and returns the same states.
+runs under any (policy × backend) cell it declares supported and returns
+the same states. Unsupported combinations raise a ``ValueError`` naming
+the combination.
 
 ``solve`` returns a :class:`RunResult` with a unified surface:
 ``state`` (algorithm-specific pytree), ``cost`` (paper Table-1
-counters), ``steps``, ``push_steps``, ``converged``.
+counters), ``steps``, ``push_steps``, ``epochs``, ``converged``.
 
 New algorithms register an :class:`AlgorithmSpec`; engines are cached per
 (algorithm, policy, backend, static-kwargs, graph shape) so repeated
@@ -34,20 +40,34 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 
+from .core.algorithms.betweenness import (betweenness_finalize,
+                                          betweenness_init,
+                                          betweenness_program)
 from .core.algorithms.bfs import bfs_init, bfs_program
+from .core.algorithms.coloring import (coloring_finalize, coloring_init,
+                                       coloring_program)
+from .core.algorithms.mst_boruvka import (mst_finalize, mst_init,
+                                          mst_program)
 from .core.algorithms.pagerank import pagerank_init, pagerank_program
 from .core.algorithms.pr_delta import (pr_delta_finalize, pr_delta_init,
                                        pr_delta_program)
+from .core.algorithms.sssp_delta import (sssp_delta_finalize,
+                                         sssp_delta_init,
+                                         sssp_delta_program)
+from .core.algorithms.triangle_count import (triangle_finalize,
+                                             triangle_init,
+                                             triangle_program)
 from .core.algorithms.wcc import wcc_init, wcc_program
 from .core.backend import (DenseBackend, DistributedBackend, EllBackend,
                            ExchangeBackend)
 from .core.cost_model import Cost
 from .core.direction import (Direction, DirectionPolicy, Fixed,
                              GenericSwitch, GreedySwitch)
-from .core.engine import PushPullEngine, VertexProgram
+from .core.engine import PhaseProgram, PushPullEngine, VertexProgram
 from .graphs.structure import Graph
 
-__all__ = ["RunResult", "AlgorithmSpec", "register", "algorithms", "solve",
+__all__ = ["RunResult", "AlgorithmSpec", "register", "algorithms",
+           "get_spec", "solve",
            "DenseBackend", "EllBackend", "DistributedBackend",
            "ExchangeBackend", "Fixed", "GenericSwitch", "GreedySwitch",
            "Direction"]
@@ -55,32 +75,45 @@ __all__ = ["RunResult", "AlgorithmSpec", "register", "algorithms", "solve",
 
 class RunResult(NamedTuple):
     """Unified result of ``solve``: the algorithm's state pytree plus the
-    engine's run metadata."""
+    engine's run metadata. ``steps`` counts relaxation/local steps across
+    all phases; ``epochs`` counts outer rounds (buckets, sources, Borůvka
+    rounds, coloring iterations — 1 for flat programs)."""
     state: Any
     cost: Cost
     steps: jax.Array
     push_steps: jax.Array
     converged: jax.Array
+    epochs: jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
 class AlgorithmSpec:
     """How an algorithm plugs into the engine.
 
-    build(g, **static_kw) -> (VertexProgram, default_max_steps) — must
-        close over static graph attributes only (n, m), never arrays, so
-        engines cache across graphs of one shape.
+    build(g, *, policy, backend, **static_kw) -> (program,
+        default_max_steps) — ``program`` is a VertexProgram or a
+        PhaseProgram (for phase programs the default bounds *epochs*).
+        Must close over static graph attributes only (n, m), never
+        arrays, so engines cache across graphs of one shape; must raise
+        NotImplementedError/ValueError for (policy, backend) combinations
+        it has no execution path for (``solve`` surfaces these as a
+        ValueError naming the combination).
     init(g, **kw) -> (init_state, init_frontier).
-    finalize(state) -> public state pytree.
+    finalize(g, state) -> public state pytree.
     runtime_keys: kwargs consumed only by ``init`` (e.g. ``root``),
         excluded from the engine cache key.
+    backends: declared-supported backend names (introspection only; the
+        authoritative check lives in ``build``).
+    paper: the paper section this algorithm reproduces.
     """
     name: str
     build: Callable
     init: Callable
-    finalize: Callable = staticmethod(lambda state: state)
+    finalize: Callable = staticmethod(lambda g, state: state)
     default_policy: DirectionPolicy = GenericSwitch()
     runtime_keys: tuple = ()
+    backends: tuple = ("dense", "ell", "distributed")
+    paper: str = ""
 
 
 _REGISTRY: dict[str, AlgorithmSpec] = {}
@@ -115,8 +148,8 @@ def solve(g: Graph, algorithm: str, *,
           backend: Optional[ExchangeBackend] = None,
           max_steps: Optional[int] = None, **kw) -> RunResult:
     """Run ``algorithm`` on ``g`` under a direction policy and an
-    exchange backend. Algorithm-specific kwargs (``root``, ``iters``,
-    ``damp``, ``tol``, ...) pass through ``**kw``."""
+    exchange backend. Algorithm-specific kwargs (``root``, ``source``,
+    ``iters``, ``damp``, ``tol``, ...) pass through ``**kw``."""
     spec = get_spec(algorithm)
     policy = spec.default_policy if policy is None else policy
     backend = DenseBackend() if backend is None else backend
@@ -134,7 +167,14 @@ def solve(g: Graph, algorithm: str, *,
         key = None
     engine = _ENGINE_CACHE.get(key) if key is not None else None
     if engine is None:
-        program, default_steps = spec.build(g, **static_kw)
+        try:
+            program, default_steps = spec.build(
+                g, policy=policy, backend=backend, **static_kw)
+        except (NotImplementedError, ValueError) as e:
+            raise ValueError(
+                f"algorithm {algorithm!r} does not support the "
+                f"combination policy={policy.name} × "
+                f"backend={backend.name}: {e}") from e
         engine = PushPullEngine(
             program=program, policy=policy,
             max_steps=default_steps if max_steps is None else max_steps,
@@ -143,28 +183,59 @@ def solve(g: Graph, algorithm: str, *,
             while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
                 _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
             _ENGINE_CACHE[key] = engine
-
     init_state, init_frontier = spec.init(g, **kw)
     res = engine.run(g, init_state, init_frontier)
-    return RunResult(state=spec.finalize(res.state), cost=res.cost,
+    return RunResult(state=spec.finalize(g, res.state), cost=res.cost,
                      steps=res.steps, push_steps=res.push_steps,
-                     converged=res.converged)
+                     converged=res.converged, epochs=res.epochs)
 
 
 # ---------------------------------------------------------------------
-# Built-in registrations: the paper's core workloads.
+# Built-in registrations: all of the paper's workloads.
 register(AlgorithmSpec(
     name="bfs", build=bfs_program, init=bfs_init,
-    runtime_keys=("root",)))
+    runtime_keys=("root",), paper="§3.3/§4.3 Alg. 3"))
 
 register(AlgorithmSpec(
     name="pagerank", build=pagerank_program, init=pagerank_init,
-    default_policy=Fixed(Direction.PULL)))
+    default_policy=Fixed(Direction.PULL), paper="§3.1/§4.1 Alg. 1"))
 
 register(AlgorithmSpec(
-    name="wcc", build=wcc_program, init=wcc_init))
+    name="wcc", build=wcc_program, init=wcc_init,
+    paper="§3.3 (label propagation)"))
 
 register(AlgorithmSpec(
     name="pr_delta", build=pr_delta_program, init=pr_delta_init,
     finalize=pr_delta_finalize,
-    default_policy=Fixed(Direction.PUSH)))
+    default_policy=Fixed(Direction.PUSH), paper="§3.1 (Whang [60])"))
+
+register(AlgorithmSpec(
+    name="sssp_delta", build=sssp_delta_program, init=sssp_delta_init,
+    finalize=sssp_delta_finalize,
+    default_policy=Fixed(Direction.PUSH),
+    runtime_keys=("source",), backends=("dense", "ell"),
+    paper="§3.4/§4.4 Alg. 4"))
+
+register(AlgorithmSpec(
+    name="betweenness", build=betweenness_program, init=betweenness_init,
+    finalize=betweenness_finalize,
+    default_policy=Fixed(Direction.PULL), backends=("dense", "ell"),
+    paper="§3.5/§4.5 Alg. 5"))
+
+register(AlgorithmSpec(
+    name="coloring", build=coloring_program, init=coloring_init,
+    finalize=coloring_finalize,
+    default_policy=Fixed(Direction.PUSH), backends=("dense", "ell"),
+    paper="§3.6/§4.6 Alg. 6"))
+
+register(AlgorithmSpec(
+    name="mst_boruvka", build=mst_program, init=mst_init,
+    finalize=mst_finalize,
+    default_policy=Fixed(Direction.PULL), backends=("dense", "ell"),
+    paper="§3.7/§4.7 Alg. 7"))
+
+register(AlgorithmSpec(
+    name="triangle_count", build=triangle_program, init=triangle_init,
+    finalize=triangle_finalize,
+    default_policy=Fixed(Direction.PULL), backends=("dense", "ell"),
+    paper="§3.2/§4.2 Alg. 2"))

@@ -1,11 +1,12 @@
 """Core push-pull machinery (the paper's contribution)."""
 
 from .backend import (DenseBackend, DistributedBackend, EllBackend,
-                      ExchangeBackend)
-from .cost_model import Cost, zero_cost
+                      ExchangeBackend, require_backend)
+from .cost_model import Cost, zero_cost, counter, counter_dtype
 from .direction import (Direction, DirectionPolicy, Fixed, GenericSwitch,
                         GreedySwitch)
-from .engine import PushPullEngine, VertexProgram, EngineResult
+from .engine import (PushPullEngine, VertexProgram, EngineResult, Phase,
+                     PhaseProgram)
 from .linalg import (Semiring, PLUS_TIMES, MIN_PLUS, OR_AND, spmv_pull,
                      spmspv_push)
 from .primitives import (push_relax, pull_relax, pull_relax_ell, k_filter,
@@ -14,9 +15,11 @@ from .primitives import (push_relax, pull_relax, pull_relax_ell, k_filter,
 
 __all__ = [
     "ExchangeBackend", "DenseBackend", "EllBackend", "DistributedBackend",
-    "Cost", "zero_cost",
+    "require_backend",
+    "Cost", "zero_cost", "counter", "counter_dtype",
     "Direction", "DirectionPolicy", "Fixed", "GenericSwitch", "GreedySwitch",
-    "PushPullEngine", "VertexProgram", "EngineResult",
+    "PushPullEngine", "VertexProgram", "EngineResult", "Phase",
+    "PhaseProgram",
     "Semiring", "PLUS_TIMES", "MIN_PLUS", "OR_AND", "spmv_pull",
     "spmspv_push",
     "push_relax", "pull_relax", "pull_relax_ell", "k_filter",

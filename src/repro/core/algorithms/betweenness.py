@@ -11,23 +11,31 @@ Two phases per source s:
      successor trick [39] — each v pulls from its successors, turning
      float locks into plain reads (the paper's key BC observation).
 
-bc(v) = Σ_{s≠v} δ_s(v); exact when `sources` covers V, else the standard
-sampled approximation (Bader et al.).
+The two phases are literally a forward/backward :class:`~repro.core
+.engine.Phase` pair inside one :class:`~repro.core.engine.PhaseProgram`:
+the forward phase records its trace (level, σ) in the carry, the backward
+phase's ``enter_fn`` seeds the deepest level from that trace, and the
+engine's epoch loop walks the sources. bc(v) = Σ_{s≠v} δ_s(v); exact when
+the epoch count covers V, else the standard sampled approximation (Bader
+et al.). Registered with ``repro.api`` as ``"betweenness"``;
+:func:`betweenness_centrality` is the thin legacy wrapper.
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from ...graphs.structure import Graph
+from ..backend import DenseBackend, EllBackend, require_backend
 from ..cost_model import Cost
-from ..primitives import pull_relax, push_relax
+from ..direction import Direction, Fixed
+from ..engine import Phase, PhaseProgram, VertexProgram
 
-__all__ = ["betweenness_centrality", "BCResult"]
+__all__ = ["betweenness_centrality", "BCResult", "betweenness_program",
+           "betweenness_init", "betweenness_finalize"]
 
 _UNREACHED = jnp.int32(2147483647)
 
@@ -38,93 +46,125 @@ class BCResult(NamedTuple):
     max_level: jax.Array
 
 
-def _forward(g: Graph, source, direction: str, cost: Cost):
-    """Level + sigma computation (one source)."""
+def betweenness_program(g: Graph, num_sources: int = 8,
+                        source_offset: int = 0, policy=None, backend=None
+                        ) -> tuple[PhaseProgram, int]:
+    """Brandes BC as a forward/backward phase pair, one source per epoch.
+
+    Graph must be symmetric (undirected), mirroring the paper's SM
+    experiments (N_in = N_out, so push on the same edge list is the
+    reverse-edge scatter)."""
+    require_backend("betweenness", backend, DenseBackend, EllBackend)
     n = g.n
-    level = jnp.full((n,), _UNREACHED, jnp.int32).at[source].set(0)
-    sigma = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
-    frontier = jnp.zeros((n,), bool).at[source].set(True)
-    visited = frontier
 
-    def cond(st):
-        return jnp.any(st[2])
+    # -- phase 1: forward BFS accumulating σ ------------------------------
+    def fwd_enter(g_, state, frontier, epoch):
+        s = ((epoch + jnp.int32(source_offset)) % n).astype(jnp.int32)
+        ids = jnp.arange(n, dtype=jnp.int32)
+        state = dict(state)
+        state["src"] = s
+        state["level"] = jnp.where(ids == s, 0, _UNREACHED)
+        state["sigma"] = jnp.where(ids == s, 1.0, 0.0).astype(jnp.float32)
+        state["visited"] = ids == s
+        state["delta"] = jnp.zeros((n,), jnp.float32)
+        state["lvl"] = jnp.int32(0)
+        return state, ids == s
 
-    def body(st):
-        level_a, sigma_a, frontier_a, visited_a, lvl, cost_a = st
-        if direction == "push":
-            acc, cost_a = push_relax(
-                g, jnp.where(frontier_a, sigma_a, 0.0), frontier_a,
-                combine="sum", cost=cost_a)
-        else:
-            acc, cost_a = pull_relax(
-                g, jnp.where(frontier_a, sigma_a, 0.0), touched=~visited_a,
-                combine="sum", cost=cost_a)
-        nxt = (~visited_a) & (acc > 0)
-        sigma_a = jnp.where(nxt, acc, sigma_a)
-        level_a = jnp.where(nxt, lvl + 1, level_a)
-        visited_a = visited_a | nxt
-        cost_a = cost_a.charge(iterations=1, barriers=1)
-        return level_a, sigma_a, nxt, visited_a, lvl + 1, cost_a
+    def fwd_values(g_, state, frontier):
+        return jnp.where(frontier, state["sigma"], 0.0)
 
-    level, sigma, _, _, lvl, cost = jax.lax.while_loop(
-        cond, body, (level, sigma, frontier, visited, jnp.int32(0), cost))
-    return level, sigma, lvl, cost
+    def fwd_update(state, msgs, step):
+        visited = state["visited"]
+        nxt = (~visited) & (msgs > 0)
+        state = dict(state)
+        state["sigma"] = jnp.where(nxt, msgs, state["sigma"])
+        state["level"] = jnp.where(nxt, (step + 1).astype(jnp.int32),
+                                   state["level"])
+        state["visited"] = visited | nxt
+        return state, nxt, ~jnp.any(nxt)
+
+    forward = VertexProgram(combine="sum", update_fn=fwd_update,
+                            values_fn=fwd_values, pull_touched="unvisited")
+
+    # -- phase 2: backward dependency accumulation, deepest level first ---
+    def bwd_enter(g_, state, frontier, epoch):
+        level = state["level"]
+        max_level = jnp.max(jnp.where(level == _UNREACHED, 0, level))
+        state = dict(state)
+        state["lvl"] = max_level
+        state["ml"] = jnp.maximum(state["ml"], max_level)
+        return state, (level == max_level) & (max_level > 0)
+
+    def bwd_values(g_, state, frontier):
+        # contribution of each vertex w at the current level to its
+        # predecessors: (1 + δ(w)) / σ(w)  (the σ(v) factor lands at v)
+        safe_sigma = jnp.maximum(state["sigma"], 1e-30)
+        return jnp.where(frontier, (1.0 + state["delta"]) / safe_sigma,
+                         0.0)
+
+    def bwd_touched(g_, state, frontier, visited):
+        # Madduri successor trick: predecessors pull from successors
+        return state["level"] == state["lvl"] - 1
+
+    def bwd_update(state, msgs, step):
+        lvl = state["lvl"]
+        v_mask = state["level"] == lvl - 1
+        state = dict(state)
+        state["delta"] = state["delta"] + jnp.where(
+            v_mask, state["sigma"] * msgs, 0.0)
+        new_lvl = lvl - 1
+        state["lvl"] = new_lvl
+        frontier = (state["level"] == new_lvl) & (new_lvl >= 1)
+        return state, frontier, ~jnp.any(frontier)
+
+    backward = VertexProgram(combine="sum", update_fn=bwd_update,
+                             values_fn=bwd_values, touched_fn=bwd_touched)
+
+    # -- per-source epilogue: fold δ_s into bc ----------------------------
+    def epoch_exit(g_, state, frontier, epoch):
+        ids = jnp.arange(n, dtype=jnp.int32)
+        contrib = jnp.where(ids == state["src"], 0.0, state["delta"])
+        contrib = jnp.where(state["level"] == _UNREACHED, 0.0, contrib)
+        state = dict(state)
+        state["bc"] = state["bc"] + contrib
+        return state, frontier
+
+    pp = PhaseProgram(
+        phases=(Phase(program=forward, max_steps=n + 1, name="forward",
+                      enter_fn=fwd_enter),
+                Phase(program=backward, max_steps=n + 1, name="backward",
+                      enter_fn=bwd_enter)),
+        epoch_exit_fn=epoch_exit)
+    return pp, num_sources
 
 
-def _backward(g: Graph, level, sigma, max_level, direction: str, cost: Cost):
-    """Dependency accumulation, deepest level first."""
+def betweenness_init(g: Graph, **_):
     n = g.n
-    delta = jnp.zeros((n,), jnp.float32)
-    safe_sigma = jnp.maximum(sigma, 1e-30)
-
-    def cond(st):
-        return st[1] > 0
-
-    def body(st):
-        delta_a, lvl, cost_a = st
-        # contribution of each vertex w at level `lvl` to predecessors:
-        #   (σ(v)/σ(w)) (1 + δ(w)) for edge (v,w), level(v) = lvl-1
-        w_mask = level == lvl
-        payload = jnp.where(w_mask, (1.0 + delta_a) / safe_sigma, 0.0)
-        if direction == "push":
-            # w pushes payload to in-neighbors v (scatter on reverse edges:
-            # use pull-major edges w=dst -> v=src flipped via push_relax on
-            # the reversed orientation; graph is symmetric so N_in = N_out)
-            acc, cost_a = push_relax(g, payload, w_mask, combine="sum",
-                                     cost=cost_a)
-        else:
-            # Madduri successor trick: each v pulls from successors w
-            v_mask = level == (lvl - 1)
-            acc, cost_a = pull_relax(g, payload, touched=v_mask,
-                                     combine="sum", cost=cost_a)
-        v_mask = level == (lvl - 1)
-        delta_a = delta_a + jnp.where(v_mask, sigma * acc, 0.0)
-        cost_a = cost_a.charge(iterations=1, barriers=1)
-        return delta_a, lvl - 1, cost_a
-
-    delta, _, cost = jax.lax.while_loop(cond, body, (delta, max_level, cost))
-    return delta, cost
+    state0 = {
+        "bc": jnp.zeros((n,), jnp.float32),
+        "ml": jnp.int32(0),
+        "src": jnp.int32(0),
+        "lvl": jnp.int32(0),
+        "level": jnp.full((n,), _UNREACHED, jnp.int32),
+        "sigma": jnp.zeros((n,), jnp.float32),
+        "visited": jnp.zeros((n,), bool),
+        "delta": jnp.zeros((n,), jnp.float32),
+    }
+    return state0, jnp.zeros((n,), bool)
 
 
-@partial(jax.jit, static_argnames=("direction", "num_sources"))
+def betweenness_finalize(g: Graph, state):
+    return {"bc": state["bc"], "max_level": state["ml"]}
+
+
 def betweenness_centrality(g: Graph, direction: str = "pull",
                            num_sources: int = 8,
                            source_offset: int = 0) -> BCResult:
-    """Brandes BC over `num_sources` sources (ids offset..offset+k-1
-    modulo n). Graph must be symmetric (undirected), mirroring the paper's
-    SM experiments."""
-    n = g.n
-    sources = (jnp.arange(num_sources, dtype=jnp.int32) + source_offset) % n
-
-    def per_source(carry, s):
-        bc, cost, ml = carry
-        level, sigma, max_level, cost = _forward(g, s, direction, cost)
-        delta, cost = _backward(g, level, sigma, max_level, direction, cost)
-        contrib = jnp.where(jnp.arange(n) == s, 0.0, delta)
-        contrib = jnp.where(level == _UNREACHED, 0.0, contrib)
-        return (bc + contrib, cost, jnp.maximum(ml, max_level)), None
-
-    (bc, cost, ml), _ = jax.lax.scan(
-        per_source, (jnp.zeros((n,), jnp.float32), Cost(), jnp.int32(0)),
-        sources)
-    return BCResult(bc=bc, cost=cost, max_level=ml)
+    """Legacy entry point — now a thin wrapper over ``repro.api.solve``."""
+    from ... import api
+    policy = Fixed(Direction.PUSH if direction == "push"
+                   else Direction.PULL)
+    r = api.solve(g, "betweenness", policy=policy,
+                  num_sources=num_sources, source_offset=source_offset)
+    return BCResult(bc=r.state["bc"], cost=r.cost,
+                    max_level=r.state["max_level"])

@@ -41,7 +41,8 @@ class BFSResult(NamedTuple):
     push_steps: jax.Array  # int32 how many levels ran in push mode
 
 
-def bfs_program(g: Graph) -> tuple[VertexProgram, int]:
+def bfs_program(g: Graph, policy=None, backend=None
+                ) -> tuple[VertexProgram, int]:
     """Level-synchronous BFS as a vertex program.
 
     Wire values are candidate parent ids (frontier vertices advertise

@@ -16,6 +16,14 @@ Structure per iteration (Algorithm 6):
            The loser of a conflict is the higher vertex id (deterministic,
            direction-independent result).
 
+The baseline BGC now runs as a two-:class:`~repro.core.engine.Phase`
+:class:`~repro.core.engine.PhaseProgram` (engine epoch = Algorithm 6
+iteration); both phases are ``local_fn`` steps — they never touch the
+exchange backend, but the DirectionPolicy still decides push/pull per
+step and the phases charge the matching Table-1 cost. Registered with
+``repro.api`` as ``"coloring"``; :func:`boman_coloring` is the thin
+legacy wrapper. FE / GS / CR variants remain standalone strategies.
+
 Colors are 1..C; 0 = uncolored. All strategies return identical-validity
 colorings; they differ in iterations and Cost — Table 6b's subject.
 """
@@ -30,10 +38,15 @@ import jax.numpy as jnp
 
 from ...graphs.partition import partition_1d
 from ...graphs.structure import Graph
-from ..cost_model import Cost
+from ..backend import DenseBackend, EllBackend, require_backend
+from ..cost_model import Cost, counter, counter_dtype
+from ..direction import Direction, Fixed
+from ..engine import Phase, PhaseProgram, VertexProgram
 
 __all__ = ["boman_coloring", "fe_coloring", "greedy_sequential",
-           "conflict_removal_coloring", "ColoringResult", "validate_coloring"]
+           "conflict_removal_coloring", "ColoringResult",
+           "validate_coloring", "coloring_program", "coloring_init",
+           "coloring_finalize"]
 
 
 class ColoringResult(NamedTuple):
@@ -87,17 +100,20 @@ def _phase1(g: Graph, colors: jax.Array, P: int, C: int, cost: Cost,
         colors_c = colors_c.at[v].set(new)
         # reads: neighbor color scan; writes: one private write per vertex
         cost_c = cost_c.charge(
-            reads=jnp.sum(jnp.where(todo, g.in_deg[v], 0).astype(jnp.int64)),
-            writes=jnp.sum(todo.astype(jnp.int64)))
+            reads=jnp.sum(jnp.where(todo, g.in_deg[v],
+                                    0).astype(counter_dtype())),
+            writes=jnp.sum(todo.astype(counter_dtype())))
         return colors_c, cost_c
 
     return jax.lax.fori_loop(0, S, slot, (colors, cost))
 
 
-def _fix_conflicts(g: Graph, colors: jax.Array, P: int, direction: str,
+def _fix_conflicts(g: Graph, colors: jax.Array, P: int, do_push,
                    cost: Cost):
     """Phase 2: demote the higher-id endpoint of every conflicting
-    cross-partition edge. Push writes the neighbor, pull writes self."""
+    cross-partition edge. The demotion is direction-independent; push
+    writes the neighbor (combining int writes), pull re-checks and writes
+    self (remote reads) — only the Cost structure differs."""
     part = partition_1d(g.n, P)
     own_s = part.owner(g.coo_src)
     own_d = part.owner(g.coo_dst)
@@ -105,7 +121,7 @@ def _fix_conflicts(g: Graph, colors: jax.Array, P: int, direction: str,
     cd = jnp.take(colors, g.coo_dst, mode="fill", fill_value=0)
     cross = own_s != own_d
     conflict = cross & (cs == cd) & (cs > 0)
-    n_conf = jnp.sum(conflict.astype(jnp.int64))
+    n_conf = jnp.sum(conflict.astype(counter_dtype()))
     # loser = higher id endpoint; symmetric edge list covers both roles
     loser_is_dst = g.coo_dst > g.coo_src
     demote_dst = conflict & loser_is_dst
@@ -113,41 +129,75 @@ def _fix_conflicts(g: Graph, colors: jax.Array, P: int, direction: str,
         demote_dst.astype(jnp.int32), g.coo_dst, num_segments=g.n) > 0
     colors = jnp.where(demote, 0, colors)
     # border scan reads both endpoint colors
-    cost = cost.charge(reads=2 * jnp.sum(cross.astype(jnp.int64)))
-    if direction == "push":
-        # iterating endpoint CASes the other endpoint's color slot
-        cost = cost.charge_combining_writes(n_conf, float_data=False)
-    else:
-        # pull: loser re-reads neighbors and demotes itself (private write)
-        cost = cost.charge(reads=n_conf, writes=jnp.sum(demote.astype(jnp.int64)))
+    cost = cost.charge(reads=2 * jnp.sum(cross.astype(counter_dtype())))
+    n_demoted = jnp.sum(demote.astype(counter_dtype()))
+    cost = jax.lax.cond(
+        jnp.asarray(do_push),
+        # push: iterating endpoint CASes the other endpoint's color slot
+        lambda c: c.charge_combining_writes(n_conf, float_data=False),
+        # pull: loser re-reads neighbors and demotes itself (private)
+        lambda c: c.charge(reads=n_conf, writes=n_demoted),
+        cost)
     return colors, cost, n_conf
 
 
-@partial(jax.jit, static_argnames=("num_parts", "C", "direction", "max_iters"))
+def coloring_program(g: Graph, num_parts: int = 16, C: int = 64,
+                     max_iters: int = 64, policy=None, backend=None
+                     ) -> tuple[PhaseProgram, int]:
+    """Baseline BGC (Algorithm 6) as a two-phase engine program."""
+    require_backend("coloring", backend, DenseBackend, EllBackend)
+
+    def color_enter(g_, state, frontier, epoch):
+        return state, state["colors"] == 0
+
+    def color_local(g_, state, frontier, step, do_push, cost):
+        colors, cost = _phase1(g_, state["colors"], num_parts, C, cost)
+        return ({"colors": colors, "conf": state["conf"]}, frontier,
+                jnp.bool_(True), cost)
+
+    def fix_enter(g_, state, frontier, epoch):
+        return state, jnp.ones((g_.n,), bool)
+
+    def fix_local(g_, state, frontier, step, do_push, cost):
+        colors, cost, conf = _fix_conflicts(g_, state["colors"],
+                                            num_parts, do_push, cost)
+        return {"colors": colors, "conf": conf}, frontier, \
+            jnp.bool_(True), cost
+
+    def epoch_cond(g_, state, epoch):
+        return (epoch == 0) | (state["conf"] > 0)
+
+    pp = PhaseProgram(
+        phases=(Phase(program=VertexProgram(local_fn=color_local),
+                      max_steps=1, name="color", enter_fn=color_enter),
+                Phase(program=VertexProgram(local_fn=fix_local),
+                      max_steps=1, name="fix", enter_fn=fix_enter)),
+        epoch_cond=epoch_cond)
+    return pp, max_iters
+
+
+def coloring_init(g: Graph, **_):
+    state0 = {"colors": jnp.zeros((g.n,), jnp.int32), "conf": counter(1)}
+    return state0, jnp.ones((g.n,), bool)
+
+
+def coloring_finalize(g: Graph, state):
+    return {"colors": state["colors"],
+            "num_colors": jnp.max(state["colors"])}
+
+
 def boman_coloring(g: Graph, num_parts: int = 16, C: int = 64,
                    direction: str = "push", max_iters: int = 64
                    ) -> ColoringResult:
-    """Baseline BGC (Algorithm 6), push or pull conflict fixing."""
-    n = g.n
-
-    def cond(st):
-        colors, cost, it, conf = st
-        return (it < max_iters) & ((it == 0) | (conf > 0))
-
-    def body(st):
-        colors, cost, it, _ = st
-        colors, cost = _phase1(g, colors, num_parts, C, cost)
-        cost = cost.charge(barriers=1)
-        colors, cost, conf = _fix_conflicts(g, colors, num_parts, direction,
-                                            cost)
-        cost = cost.charge(iterations=1, barriers=1)
-        return colors, cost, it + 1, conf
-
-    colors, cost, iters, _ = jax.lax.while_loop(
-        cond, body, (jnp.zeros((n,), jnp.int32), Cost(), jnp.int32(0),
-                     jnp.int64(1)))
-    return ColoringResult(colors=colors, cost=cost, iterations=iters,
-                          num_colors=jnp.max(colors))
+    """Legacy entry point — now a thin wrapper over ``repro.api.solve``."""
+    from ... import api
+    policy = Fixed(Direction.PUSH if direction == "push"
+                   else Direction.PULL)
+    r = api.solve(g, "coloring", policy=policy, num_parts=num_parts, C=C,
+                  max_iters=max_iters)
+    return ColoringResult(colors=r.state["colors"], cost=r.cost,
+                          iterations=r.epochs,
+                          num_colors=r.state["num_colors"])
 
 
 @partial(jax.jit, static_argnames=("direction", "max_iters", "gs_threshold",
@@ -210,17 +260,20 @@ def fe_coloring(g: Graph, key: jax.Array, direction: str = "push",
         take = jnp.where(do_pull, take_pull, take_push)
         colors = jnp.where(take, c_i, colors)
         frontier = take
-        reads = jnp.sum(jnp.where(cand, g.in_deg, 0).astype(jnp.int64))
-        cost = cost.charge(reads=reads, writes=jnp.sum(take.astype(jnp.int64)),
+        reads = jnp.sum(jnp.where(cand, g.in_deg,
+                                  0).astype(counter_dtype()))
+        cost = cost.charge(reads=reads,
+                           writes=jnp.sum(take.astype(counter_dtype())),
                            iterations=1, barriers=1)
-        conflicts = jnp.sum((cand & ~take).astype(jnp.int64))
+        conflicts = jnp.sum((cand & ~take).astype(counter_dtype()))
         cost = jax.lax.cond(
             do_pull, lambda c: c,
             lambda c: c.charge_combining_writes(conflicts, float_data=False),
             cost)
         return colors, frontier, c_i + 1, cost, it + 1
 
-    init = (colors0, stable, jnp.int32(2), Cost().charge(iterations=1), jnp.int32(0))
+    init = (colors0, stable, jnp.int32(2), Cost().charge(iterations=1),
+            jnp.int32(0))
     colors, _, _, cost, iters = jax.lax.while_loop(cond, body, init)
     return ColoringResult(colors=colors, cost=cost, iterations=iters + 1,
                           num_colors=jnp.max(colors))
@@ -241,8 +294,8 @@ def greedy_sequential(g: Graph, colors: jax.Array, mask: jax.Array, C: int,
         colors_c = colors_c.at[v].set(
             jnp.where(todo, pick, jnp.take(colors_c, v)))
         cost_c = cost_c.charge(
-            reads=jnp.where(todo, g.in_deg[v], 0).astype(jnp.int64),
-            writes=todo.astype(jnp.int64))
+            reads=jnp.where(todo, g.in_deg[v], 0).astype(counter_dtype()),
+            writes=todo.astype(counter_dtype()))
         return colors_c, cost_c
 
     return jax.lax.fori_loop(0, n, step, (colors, cost))

@@ -10,6 +10,15 @@ push (FM): every edge offers its key to *both* incident supervertices'
 pull (FM): each supervertex privately min-reduces over its own incident
       edges — reads only, no combining writes.
 
+The round structure is a two-:class:`~repro.core.engine.Phase`
+:class:`~repro.core.engine.PhaseProgram`: a *find-min* phase (a local
+edge map over the contracted supervertex ids — the reduce is keyed by
+``comp``, not vertex id, so it bypasses the exchange backend) and a
+*contract* phase (the per-round graph-contraction hook: pointer jumping +
+supervertex relabel). The engine epoch loop is Algorithm 7's round loop.
+Registered with ``repro.api`` as ``"mst_boruvka"``; :func:`boruvka_mst`
+is the thin legacy wrapper.
+
 Determinism: edge keys pack (weight bits, undirected-pair rank) into one
 int64, so comparison is orientation-invariant — the per-cycle global
 minimum is picked identically from both sides, hence hooking only creates
@@ -20,7 +29,6 @@ terminates. Both directions return the same MST.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -28,9 +36,15 @@ import jax.numpy as jnp
 
 from ...graphs.structure import Graph
 from ...sparse.segment import segment_min
-from ..cost_model import Cost
+from ..backend import DenseBackend, EllBackend, require_backend
+from ..cost_model import Cost, counter, counter_dtype
+from ..direction import Direction, Fixed
+from ..engine import Phase, PhaseProgram, VertexProgram
 
-__all__ = ["boruvka_mst", "MSTResult"]
+__all__ = ["boruvka_mst", "MSTResult", "mst_program", "mst_init",
+           "mst_finalize"]
+
+_BIG = jnp.iinfo(jnp.int64).max
 
 
 class MSTResult(NamedTuple):
@@ -41,14 +55,92 @@ class MSTResult(NamedTuple):
     rounds: jax.Array
 
 
-@partial(jax.jit, static_argnames=("direction", "max_rounds"))
-def boruvka_mst(g: Graph, direction: str = "pull", max_rounds: int = 64
-                ) -> MSTResult:
+def mst_program(g: Graph, policy=None, backend=None
+                ) -> tuple[PhaseProgram, int]:
+    """Borůvka as find-min + contract phases per engine epoch."""
+    require_backend("mst_boruvka", backend, DenseBackend, EllBackend)
     n, m = g.n, g.m
-    eid = jnp.arange(m, dtype=jnp.int64)
-    src, dst, w = g.coo_src, g.coo_dst, g.coo_w
-    BIG = jnp.iinfo(jnp.int64).max
 
+    def fm_enter(g_, state, frontier, epoch):
+        return state, jnp.ones((n,), bool)
+
+    def fm_local(g_, state, frontier, step, do_push, cost):
+        comp = state["comp"]
+        src, dst = g_.coo_src, g_.coo_dst
+        eid = jnp.arange(m, dtype=jnp.int64)
+        cs = jnp.take(comp, src)
+        cd = jnp.take(comp, dst)
+        external = cs != cd
+        key = jnp.where(external, state["pairkey"], _BIG)
+
+        # FM: orientation-invariant min key per supervertex. Pull is a
+        # private min-reduce over own incident edges; push offers the key
+        # to both endpoints' shared slots — same value (the key is
+        # orientation-invariant on a symmetric edge list), combining-min
+        # writes instead of reads in the Cost.
+        min_key = segment_min(key, cs, n)
+        k_ext = jnp.sum(external.astype(counter_dtype()))
+        cost = jax.lax.cond(
+            jnp.asarray(do_push),
+            lambda c: c.charge(reads=counter(m)).charge_combining_writes(
+                k_ext, float_data=False),
+            lambda c: c.charge(reads=counter(m), writes=counter(n)),
+            cost)
+        has_edge = min_key < _BIG
+
+        # representative slot (src-side orientation always exists because
+        # the edge list is symmetric): min slot among winners
+        winner = key == jnp.take(min_key, cs)
+        sel_slot = segment_min(jnp.where(winner, eid, _BIG), cs, n)
+        sel_slot_c = jnp.where(has_edge, sel_slot, 0).astype(jnp.int32)
+        # scatter only the selected slots: an edgeless supervertex must
+        # not write False into slot 0, where it could race a real hit
+        hit = jnp.zeros((m,), bool).at[
+            jnp.where(has_edge, sel_slot, m).astype(jnp.int32)].set(
+                True, mode="drop")
+
+        # BMT: hook to the other side's component; mutual 2-cycles break
+        # toward the lower root
+        other = jnp.take(comp, jnp.take(dst, sel_slot_c))
+        me = jnp.arange(n, dtype=jnp.int32)
+        parent = jnp.where(has_edge, other, me)
+        pp = jnp.take(parent, parent)
+        parent = jnp.where((pp == me) & (me < parent), me, parent)
+
+        state = dict(state, in_mst=state["in_mst"] | hit, parent=parent,
+                     done=~jnp.any(has_edge))
+        # supervertices that found an edge are the live frontier the
+        # contraction (and any switching policy) sees
+        return state, has_edge, jnp.bool_(True), cost
+
+    def contract_local(g_, state, frontier, step, do_push, cost):
+        # pointer jumping: depth halves per step -> ceil(log2 n)+1 bounds
+        # convergence; fori (not while) so malformed hooks can never hang
+        n_jumps = max(1, math.ceil(math.log2(max(2, n))) + 1)
+        parent = jax.lax.fori_loop(
+            0, n_jumps, lambda _, p: jnp.take(p, p), state["parent"])
+        comp = jnp.take(parent, state["comp"])
+        cost = cost.charge(writes=counter(n))
+        return dict(state, comp=comp, parent=parent), frontier, \
+            jnp.bool_(True), cost
+
+    def epoch_cond(g_, state, epoch):
+        return ~state["done"]
+
+    pp = PhaseProgram(
+        phases=(Phase(program=VertexProgram(local_fn=fm_local),
+                      max_steps=1, name="find_min", enter_fn=fm_enter),
+                # contract inherits the find-min frontier: a done round
+                # leaves it empty and the contraction is skipped
+                Phase(program=VertexProgram(local_fn=contract_local),
+                      max_steps=1, name="contract")),
+        epoch_cond=epoch_cond)
+    return pp, 64
+
+
+def mst_init(g: Graph, **_):
+    n, m = g.n, g.m
+    src, dst, w = g.coo_src, g.coo_dst, g.coo_w
     # orientation-invariant undirected pair rank in [0, m)
     lo = jnp.minimum(src, dst).astype(jnp.int64)
     hi = jnp.maximum(src, dst).astype(jnp.int64)
@@ -57,70 +149,25 @@ def boruvka_mst(g: Graph, direction: str = "pull", max_rounds: int = 64
     # weights are positive floats: int32 bit pattern preserves order
     wbits = jax.lax.bitcast_convert_type(w, jnp.int32).astype(jnp.int64)
     pairkey = wbits * (m + 1) + pair_rank
+    state0 = {
+        "comp": jnp.arange(n, dtype=jnp.int32),
+        "parent": jnp.arange(n, dtype=jnp.int32),
+        "in_mst": jnp.zeros((m,), bool),
+        "done": jnp.bool_(False),
+        "pair": pair,
+        "pairkey": pairkey,
+    }
+    return state0, jnp.ones((n,), bool)
 
-    def cond(st):
-        comp, in_mst, cost, rnd, done = st
-        return (~done) & (rnd < max_rounds)
 
-    def body(st):
-        comp, in_mst, cost, rnd, _ = st
-        cs = jnp.take(comp, src)
-        cd = jnp.take(comp, dst)
-        external = cs != cd
-        key = jnp.where(external, pairkey, BIG)
-
-        # --- FM: orientation-invariant min key per component ------------
-        if direction == "pull":
-            min_key = segment_min(key, cs, n)
-            cost = cost.charge(reads=jnp.asarray(m, jnp.int64),
-                               writes=jnp.asarray(n, jnp.int64))
-        else:
-            min_a = segment_min(key, cs, n)
-            min_b = segment_min(key, cd, n)
-            min_key = jnp.minimum(min_a, min_b)
-            k_ext = jnp.sum(external.astype(jnp.int64))
-            cost = cost.charge(reads=jnp.asarray(m, jnp.int64))
-            cost = cost.charge_combining_writes(k_ext, float_data=False)
-        cost = cost.charge(barriers=1)
-        has_edge = min_key < BIG
-
-        # representative slot (src-side orientation always exists because
-        # the edge list is symmetric): min slot among winners
-        winner = key == jnp.take(min_key, cs)
-        sel_slot = segment_min(jnp.where(winner, eid, BIG), cs, n)
-        sel_slot_c = jnp.where(has_edge, sel_slot, 0).astype(jnp.int32)
-        hit = jnp.zeros((m,), bool).at[sel_slot_c].set(has_edge)
-        in_mst = in_mst | hit
-
-        # --- BMT/M: hook to the other side's component, contract --------
-        other = jnp.take(comp, jnp.take(dst, sel_slot_c))
-        parent = jnp.where(has_edge, other, jnp.arange(n, dtype=jnp.int32))
-        # mutual 2-cycles: the lower root wins and becomes a root
-        pp = jnp.take(parent, parent)
-        me = jnp.arange(n, dtype=jnp.int32)
-        parent = jnp.where((pp == me) & (me < parent), me, parent)
-
-        # pointer jumping: depth halves per step -> ceil(log2 n)+1 bounds
-        # convergence; fori (not while) so malformed hooks can never hang
-        n_jumps = max(1, math.ceil(math.log2(max(2, n))) + 1)
-        parent = jax.lax.fori_loop(
-            0, n_jumps, lambda _, p: jnp.take(p, p), parent)
-        comp_new = jnp.take(parent, comp)
-        cost = cost.charge(writes=jnp.asarray(n, jnp.int64), barriers=1,
-                           iterations=1)
-        done = ~jnp.any(has_edge)
-        return comp_new, in_mst, cost, rnd + 1, done
-
-    comp0 = jnp.arange(n, dtype=jnp.int32)
-    comp, in_mst, cost, rounds, _ = jax.lax.while_loop(
-        cond, body, (comp0, jnp.zeros((m,), bool), Cost(), jnp.int32(0),
-                     jnp.bool_(False)))
-
+def mst_finalize(g: Graph, state):
+    n, m = g.n, g.m
+    pair, in_mst, comp = state["pair"], state["in_mst"], state["comp"]
     # total weight with undirected dedup (both orientations may be marked)
     order = jnp.argsort(pair)
     pair_s = pair[order]
     sel_s = in_mst[order]
-    w_s = w[order]
+    w_s = g.coo_w[order]
     first = jnp.concatenate([jnp.array([True]), pair_s[1:] != pair_s[:-1]])
     grp = jnp.cumsum(first.astype(jnp.int32)) - 1
     any_sel = jax.ops.segment_max(sel_s.astype(jnp.int32), grp,
@@ -130,6 +177,17 @@ def boruvka_mst(g: Graph, direction: str = "pull", max_rounds: int = 64
 
     roots = jax.ops.segment_max(jnp.ones((n,), jnp.int32), comp,
                                 num_segments=n) > 0
-    components = jnp.sum(roots.astype(jnp.int32))
-    return MSTResult(in_mst=in_mst, weight=weight, components=components,
-                     cost=cost, rounds=rounds)
+    return {"in_mst": in_mst, "weight": weight,
+            "components": jnp.sum(roots.astype(jnp.int32))}
+
+
+def boruvka_mst(g: Graph, direction: str = "pull", max_rounds: int = 64
+                ) -> MSTResult:
+    """Legacy entry point — now a thin wrapper over ``repro.api.solve``."""
+    from ... import api
+    policy = Fixed(Direction.PUSH if direction == "push"
+                   else Direction.PULL)
+    r = api.solve(g, "mst_boruvka", policy=policy, max_steps=max_rounds)
+    return MSTResult(in_mst=r.state["in_mst"], weight=r.state["weight"],
+                     components=r.state["components"], cost=r.cost,
+                     rounds=r.epochs)

@@ -41,8 +41,9 @@ def _contrib(r: jax.Array, out_deg: jax.Array) -> jax.Array:
     return r / jnp.maximum(out_deg, 1).astype(r.dtype)
 
 
-def pagerank_program(g: Graph, iters: int = 20,
-                     damp: float = 0.85) -> tuple[VertexProgram, int]:
+def pagerank_program(g: Graph, iters: int = 20, damp: float = 0.85,
+                     policy=None, backend=None
+                     ) -> tuple[VertexProgram, int]:
     """Power iteration as a vertex program: every vertex is active every
     step; wire values are rank/out-degree contributions."""
     n = g.n

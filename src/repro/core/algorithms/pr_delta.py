@@ -39,8 +39,9 @@ class PRDeltaResult(NamedTuple):
     max_residual: jax.Array
 
 
-def pr_delta_program(g: Graph, tol: float = 1e-6,
-                     damp: float = 0.85) -> tuple[VertexProgram, int]:
+def pr_delta_program(g: Graph, tol: float = 1e-6, damp: float = 0.85,
+                     policy=None, backend=None
+                     ) -> tuple[VertexProgram, int]:
     def values_fn(g_, state, frontier):
         deg = jnp.maximum(g_.out_deg, 1).astype(jnp.float32)
         return jnp.where(frontier, damp * state["res"] / deg, 0.0)
@@ -70,7 +71,7 @@ def pr_delta_init(g: Graph, tol: float = 1e-6, damp: float = 0.85, **_):
     return state0, jnp.abs(state0["res"]) > tol
 
 
-def pr_delta_finalize(state):
+def pr_delta_finalize(g, state):
     return {"ranks": state["rank"] + state["res"],
             "max_residual": jnp.max(jnp.abs(state["res"]))}
 

@@ -8,25 +8,30 @@ push: active bucket vertices relax their out-edges — CAS-combining float
 pull: every unsettled vertex scans in-edges for sources in the current
       bucket and relaxes privately — O((L/Δ)·m·l_Δ) reads, no locks.
 
-The dual while_loop mirrors Algorithm 4's epoch/inner-iteration structure;
-`active` marks vertices (re)inserted into the current bucket, exactly the
-paper's `active[]` array.
+The algorithm is now a phase-structured :class:`~repro.core.engine
+.PhaseProgram`: the engine's *epoch* loop is Algorithm 4's bucket loop,
+one relaxation :class:`~repro.core.engine.Phase` per epoch is its inner
+iteration, and the phase's ``enter_fn`` computes the paper's ``active[]``
+array (the current-bucket frontier) from the distance carry. Registered
+with ``repro.api`` as ``"sssp_delta"``; :func:`sssp_delta` is the thin
+legacy wrapper.
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from ...graphs.structure import Graph
+from ..backend import DenseBackend, EllBackend, require_backend
 from ..cost_model import Cost
-from ..primitives import (frontier_in_edges, k_filter, pull_relax,
-                          push_relax)
+from ..direction import Direction, Fixed
+from ..engine import Phase, PhaseProgram, VertexProgram
 
-__all__ = ["sssp_delta", "SSSPResult"]
+__all__ = ["sssp_delta", "SSSPResult", "sssp_delta_program",
+           "sssp_delta_init", "sssp_delta_finalize"]
 
 _INF = jnp.float32(jnp.inf)
 
@@ -38,66 +43,82 @@ class SSSPResult(NamedTuple):
     inner_iters: jax.Array
 
 
-def _relax_push(g, d, in_bucket_active, cost):
-    """Relax out-edges of active current-bucket vertices (scatter-min)."""
-    cand, cost = push_relax(
-        g, d, in_bucket_active, combine="min",
-        msg_fn=lambda x, w: x + w, cost=cost)
-    _, cost = k_filter(cand < d, cost)
-    return jnp.minimum(d, cand), cost
+def _in_bucket(d: jax.Array, lo, delta: float) -> jax.Array:
+    return jnp.isfinite(d) & (d >= lo) & (d < lo + jnp.float32(delta))
 
 
-def _relax_pull(g, d, in_bucket_active, bucket_lo, cost):
-    """Unsettled vertices pull from current-bucket in-neighbors."""
-    unsettled = d >= bucket_lo  # includes current bucket + beyond
-    src_val = jnp.where(in_bucket_active, d, _INF)
-    cand, cost = pull_relax(
-        g, src_val, touched=unsettled, combine="min",
-        msg_fn=lambda x, w: x + w, cost=cost)
-    return jnp.minimum(d, cand), cost
+def sssp_delta_program(g: Graph, delta: float = 2.0, max_inner: int = 64,
+                       max_epochs: int = 1 << 14, policy=None, backend=None
+                       ) -> tuple[PhaseProgram, int]:
+    """Δ-stepping as a phase program (bucket epochs × inner relaxations).
+
+    Wire values are tentative distances of current-bucket-active sources
+    (∞ elsewhere); combine=min with msg ⊗ = d+w is the relaxation. Pull
+    only touches the unsettled set (d ≥ bΔ), exactly the paper's scan.
+    """
+    require_backend("sssp_delta", backend, DenseBackend, EllBackend)
+    delta = float(delta)
+
+    def enter(g_, state, frontier, epoch):
+        lo = epoch.astype(jnp.float32) * jnp.float32(delta)
+        state = {"dist": state["dist"], "lo": lo}
+        return state, _in_bucket(state["dist"], lo, delta)
+
+    def values_fn(g_, state, frontier):
+        return jnp.where(frontier, state["dist"], _INF)
+
+    def touched_fn(g_, state, frontier, visited):
+        return state["dist"] >= state["lo"]      # unsettled: bucket+beyond
+
+    def update(state, msgs, step):
+        d = state["dist"]
+        d_new = jnp.minimum(d, msgs)
+        changed = d_new < d
+        frontier = _in_bucket(d_new, state["lo"], delta)
+        return ({"dist": d_new, "lo": state["lo"]}, frontier,
+                ~jnp.any(changed))
+
+    def epoch_cond(g_, state, epoch):
+        # any unsettled vertex left at or beyond this bucket?
+        d = state["dist"]
+        lo = epoch.astype(jnp.float32) * jnp.float32(delta)
+        return jnp.any(jnp.isfinite(d) & (d >= lo))
+
+    prog = VertexProgram(combine="min", msg_fn=lambda x, w: x + w,
+                         update_fn=update, values_fn=values_fn,
+                         touched_fn=touched_fn,
+                         # push compacts the vertices whose distance
+                         # actually improved, not the whole re-activated
+                         # bucket (paper: pull scans everything anyway)
+                         k_filter_push=True,
+                         k_filter_set_fn=lambda old, new, f:
+                             new["dist"] < old["dist"])
+    pp = PhaseProgram(phases=(Phase(program=prog, max_steps=max_inner,
+                                    name="relax", enter_fn=enter),),
+                      epoch_cond=epoch_cond)
+    return pp, max_epochs
 
 
-@partial(jax.jit, static_argnames=("direction", "max_epochs", "max_inner"))
+def sssp_delta_init(g: Graph, source=0, **_):
+    source = jnp.asarray(source, jnp.int32)
+    d0 = jnp.full((g.n,), _INF, jnp.float32).at[source].set(0.0)
+    state0 = {"dist": d0, "lo": jnp.float32(0.0)}
+    # the phase's enter_fn recomputes the bucket frontier every epoch
+    return state0, jnp.zeros((g.n,), bool)
+
+
+def sssp_delta_finalize(g: Graph, state):
+    return {"dist": state["dist"]}
+
+
 def sssp_delta(g: Graph, source: int | jax.Array, delta: float = 2.0,
                direction: str = "push", max_epochs: int = 1 << 14,
                max_inner: int = 64) -> SSSPResult:
-    n = g.n
-    source = jnp.asarray(source, jnp.int32)
-    d0 = jnp.full((n,), _INF, jnp.float32).at[source].set(0.0)
-    delta = jnp.float32(delta)
-
-    def epoch_cond(state):
-        d, b, cost, inner = state
-        # any unsettled vertex left? (finite distance >= bΔ or untouched
-        # vertices reachable later — we stop when no finite d >= bΔ and no
-        # vertex entered bucket b)
-        has_work = jnp.any(jnp.isfinite(d) & (d >= b * delta))
-        return (b < max_epochs) & has_work
-
-    def epoch_body(state):
-        d, b, cost, inner_total = state
-        lo, hi = b * delta, (b + 1) * delta
-
-        def inner_cond(s):
-            d_cur, d_prev, it, _ = s
-            changed = jnp.any(d_cur < d_prev)
-            return (it < max_inner) & ((it == 0) | changed)
-
-        def inner_body(s):
-            d_cur, _, it, cost_in = s
-            in_bucket = jnp.isfinite(d_cur) & (d_cur >= lo) & (d_cur < hi)
-            if direction == "push":
-                d_new, cost_in = _relax_push(g, d_cur, in_bucket, cost_in)
-            else:
-                d_new, cost_in = _relax_pull(g, d_cur, in_bucket, lo, cost_in)
-            cost_in = cost_in.charge(barriers=1)
-            return d_new, d_cur, it + 1, cost_in
-
-        d_fin, _, iters, cost = jax.lax.while_loop(
-            inner_cond, inner_body, (d, d + 0.0, jnp.int32(0), cost))
-        cost = cost.charge(iterations=1)
-        return d_fin, b + 1, cost, inner_total + iters
-
-    d, epochs, cost, inner = jax.lax.while_loop(
-        epoch_cond, epoch_body, (d0, jnp.int32(0), Cost(), jnp.int32(0)))
-    return SSSPResult(dist=d, cost=cost, epochs=epochs, inner_iters=inner)
+    """Legacy entry point — now a thin wrapper over ``repro.api.solve``."""
+    from ... import api
+    policy = Fixed(Direction.PUSH if direction == "push"
+                   else Direction.PULL)
+    r = api.solve(g, "sssp_delta", policy=policy, source=source,
+                  delta=delta, max_inner=max_inner, max_steps=max_epochs)
+    return SSSPResult(dist=r.state["dist"], cost=r.cost, epochs=r.epochs,
+                      inner_iters=r.steps)

@@ -9,15 +9,22 @@ accordingly:
   push: the intersection size is credited to the *other* endpoints (u / w)
         — combining integer writes (FAA; O(m·d̂) atomics, Table 1).
 
+The algorithm is the engine's *one-shot edge map*: a single
+:class:`~repro.core.engine.VertexProgram` whose ``local_fn`` processes
+one edge block per engine step, with no fixed point — the step bound IS
+the block count. Per-vertex counts end up *identical* across directions
+(the edge list is symmetric, so crediting src vs dst sums the same
+multiset); only the Cost differs per Table 1. Registered with
+``repro.api`` as ``"triangle_count"``; :func:`triangle_count` is the
+thin legacy wrapper.
+
 Implementation: ELL rows give rectangular [d_ell] neighbor lists; the
 intersection is an all-pairs compare of two gathered rows (O(m·d_ell²)
-dense work — TPU-friendly, MXU-independent). Per-vertex counts tc[v] end
-up *identical* across directions; Cost differs per Table 1.
+dense work — TPU-friendly, MXU-independent).
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -25,9 +32,13 @@ import jax.numpy as jnp
 
 from ...graphs.structure import Graph
 from ...sparse.segment import segment_sum
-from ..cost_model import Cost
+from ..backend import DenseBackend, EllBackend, require_backend
+from ..cost_model import Cost, counter, counter_dtype
+from ..direction import Direction, Fixed
+from ..engine import VertexProgram
 
-__all__ = ["triangle_count", "TriangleCountResult"]
+__all__ = ["triangle_count", "TriangleCountResult", "triangle_program",
+           "triangle_init", "triangle_finalize"]
 
 
 class TriangleCountResult(NamedTuple):
@@ -36,48 +47,73 @@ class TriangleCountResult(NamedTuple):
     cost: Cost
 
 
-@partial(jax.jit, static_argnames=("direction", "edge_block"))
-def triangle_count(g: Graph, direction: str = "pull",
-                   edge_block: int = 4096) -> TriangleCountResult:
-    """Count per-vertex and total triangles (undirected simple graph)."""
+def triangle_program(g: Graph, edge_block: int = 4096, policy=None,
+                     backend=None) -> tuple[VertexProgram, int]:
+    """NodeIterator TC as a one-shot blocked edge map (no fixed point)."""
+    require_backend("triangle_count", backend, DenseBackend, EllBackend)
     n, d_ell = g.n, g.d_ell
-    idx_pad = jnp.concatenate(
-        [g.ell_idx, jnp.full((1, d_ell), n, jnp.int32)], axis=0)
-
     num_blocks = -(-g.m // edge_block)
     m_pad = num_blocks * edge_block
-    src = jnp.pad(g.coo_src, (0, m_pad - g.m), constant_values=n)
-    dst = jnp.pad(g.coo_dst, (0, m_pad - g.m), constant_values=n)
 
-    def block_body(carry, blk):
-        tc, cost = carry
-        s = jax.lax.dynamic_slice(src, (blk * edge_block,), (edge_block,))
-        d = jax.lax.dynamic_slice(dst, (blk * edge_block,), (edge_block,))
-        nv = idx_pad[jnp.minimum(s, n)]              # [B, d_ell]
-        nu = idx_pad[jnp.minimum(d, n)]              # [B, d_ell]
-        # all-pairs equality, sentinel (=n) never matches a real id
+    def local_fn(g_, state, frontier, step, do_push, cost):
+        # the padded edge list lives in the carry (built once in init),
+        # keeping the loop body free of O(m) loop-invariant rebuilds
+        s = jax.lax.dynamic_slice(state["src"], (step * edge_block,),
+                                  (edge_block,))
+        d = jax.lax.dynamic_slice(state["dst"], (step * edge_block,),
+                                  (edge_block,))
+        nv = g_.ell_idx[jnp.minimum(s, n - 1)]       # [B, d_ell]
+        nu = g_.ell_idx[jnp.minimum(d, n - 1)]       # [B, d_ell]
+        # all-pairs equality; ELL's own sentinel (=n) never matches a
+        # real id, and pad edges (s or d == n) are zeroed below
         eq = (nv[:, :, None] == nu[:, None, :]) & (nv[:, :, None] < n)
         common = eq.sum(axis=(1, 2)).astype(jnp.int32)     # |N(v) ∩ N(u)|
         common = jnp.where((s < n) & (d < n), common, 0)
-        if direction == "pull":
-            # accumulate into the iterating vertex v=dst of pull-major edges
-            tc = tc + segment_sum(common, jnp.minimum(d, n - 1), n)
-            cost = cost.charge(
-                reads=2 * edge_block * d_ell, writes=edge_block)
-        else:
-            # push: credit the two *other* endpoints (scatter, FAA)
-            tc_u = segment_sum(common, jnp.minimum(s, n - 1), n)
-            tc = tc + tc_u
-            cost = cost.charge(reads=2 * edge_block * d_ell)
-            cost = cost.charge_combining_writes(
-                jnp.sum(common).astype(jnp.int64), float_data=False)
-        return (tc, cost), None
+        # accumulate into the iterating endpoint; the symmetric edge list
+        # makes crediting src (push) and dst (pull) the same total — only
+        # the access structure (FAA vs private write) differs
+        new_state = dict(state, tc=state["tc"]
+                         + segment_sum(common, jnp.minimum(d, n - 1), n))
+        cost = jax.lax.cond(
+            jnp.asarray(do_push),
+            lambda c: c.charge(
+                reads=2 * edge_block * d_ell).charge_combining_writes(
+                    jnp.sum(common).astype(counter_dtype()),
+                    float_data=False),
+            lambda c: c.charge(reads=2 * edge_block * d_ell,
+                               writes=edge_block),
+            cost)
+        return new_state, frontier, step + 1 >= num_blocks, cost
 
-    tc0 = jnp.zeros((n,), jnp.int32)
-    (tc_raw, cost), _ = jax.lax.scan(
-        block_body, (tc0, Cost()), jnp.arange(num_blocks))
+    return VertexProgram(local_fn=local_fn), num_blocks
+
+
+def triangle_init(g: Graph, edge_block: int = 4096, **_):
+    num_blocks = -(-g.m // edge_block)
+    m_pad = num_blocks * edge_block
+    state0 = {
+        "tc": jnp.zeros((g.n,), jnp.int32),
+        "src": jnp.pad(g.coo_src, (0, m_pad - g.m), constant_values=g.n),
+        "dst": jnp.pad(g.coo_dst, (0, m_pad - g.m), constant_values=g.n),
+    }
+    return state0, jnp.ones((g.n,), bool)
+
+
+def triangle_finalize(g: Graph, state):
     # each triangle at v is counted once per ordered pair of its two other
     # vertices adjacent to v => 2x per vertex
-    per_vertex = tc_raw // 2
-    total = jnp.sum(per_vertex.astype(jnp.int64)) // 3
-    return TriangleCountResult(per_vertex=per_vertex, total=total, cost=cost)
+    per_vertex = state["tc"] // 2
+    total = jnp.sum(per_vertex.astype(counter_dtype())) // 3
+    return {"per_vertex": per_vertex, "total": total}
+
+
+def triangle_count(g: Graph, direction: str = "pull",
+                   edge_block: int = 4096) -> TriangleCountResult:
+    """Legacy entry point — now a thin wrapper over ``repro.api.solve``."""
+    from ... import api
+    policy = Fixed(Direction.PUSH if direction == "push"
+                   else Direction.PULL)
+    r = api.solve(g, "triangle_count", policy=policy,
+                  edge_block=edge_block)
+    return TriangleCountResult(per_vertex=r.state["per_vertex"],
+                               total=r.state["total"], cost=r.cost)

@@ -30,8 +30,8 @@ class WCCResult(NamedTuple):
     steps: jax.Array
 
 
-def wcc_program(g: Graph,
-                max_steps: int = 10_000) -> tuple[VertexProgram, int]:
+def wcc_program(g: Graph, max_steps: int = 10_000, policy=None,
+                backend=None) -> tuple[VertexProgram, int]:
     def update(state, msgs, step):
         new = jnp.minimum(state, msgs)
         frontier = new < state

@@ -30,14 +30,29 @@ import jax
 import jax.numpy as jnp
 
 from ..graphs.structure import Graph
-from .cost_model import Cost
+from .cost_model import Cost, counter, counter_dtype
 from .direction import Direction
 from .primitives import (combine_identity, frontier_in_edges,
                          frontier_out_edges, mask_untouched, pull_relax,
                          pull_relax_ell, push_relax)
 
 __all__ = ["ExchangeBackend", "DenseBackend", "EllBackend",
-           "DistributedBackend"]
+           "DistributedBackend", "require_backend"]
+
+
+def require_backend(algorithm: str, backend, *allowed) -> None:
+    """Raise when ``backend`` is not one of the ``allowed`` classes.
+
+    Algorithm ``build`` hooks call this to reject (policy, backend)
+    combinations they have no execution path for; ``api.solve`` converts
+    the raise into a ValueError naming the combination.
+    """
+    if backend is None or isinstance(backend, tuple(allowed)):
+        return
+    names = ", ".join(c.__name__ for c in allowed)
+    raise NotImplementedError(
+        f"{algorithm} supports only [{names}] backends, "
+        f"not {type(backend).__name__}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,10 +207,10 @@ class DistributedBackend(ExchangeBackend):
         if touched is not None:
             out = mask_untouched(out, touched, combine)
             k = frontier_in_edges(g, touched)
-            wr = jnp.sum(touched.astype(jnp.int64))
+            wr = jnp.sum(touched.astype(counter_dtype()))
         else:
-            k = jnp.asarray(g.m, jnp.int64)
-            wr = jnp.asarray(g.n, jnp.int64)
+            k = counter(g.m)
+            wr = counter(g.n)
         cost = cost.charge(reads=k, writes=wr,
                            collective_bytes=nbytes * self.part.num_parts)
         return out, cost

@@ -24,9 +24,26 @@ import jax.numpy as jnp
 # default is safe and keeps the counter pytrees honest.
 jax.config.update("jax_enable_x64", True)
 
-__all__ = ["Cost", "zero_cost"]
+__all__ = ["Cost", "zero_cost", "counter_dtype", "counter"]
 
-_I = lambda: jnp.zeros((), jnp.int64)  # noqa: E731
+
+def counter_dtype():
+    """The widest integer dtype JAX will actually honor for counters.
+
+    With ``jax_enable_x64`` off, ``astype(jnp.int64)`` silently produces
+    int32 (the warning is routinely filtered); asking for the dtype
+    through this helper keeps every counter cast honest instead of
+    silently truncating paper-scale counts.
+    """
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+def counter(x) -> jax.Array:
+    """Cast ``x`` to the live counter dtype (see :func:`counter_dtype`)."""
+    return jnp.asarray(x, counter_dtype())
+
+
+_I = lambda: jnp.zeros((), counter_dtype())  # noqa: E731
 
 
 @jax.tree_util.register_dataclass
@@ -59,7 +76,7 @@ class Cost:
         """Return a new Cost with the given fields incremented."""
         vals = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
         for k, v in kw.items():
-            vals[k] = vals[k] + jnp.asarray(v, jnp.int64)
+            vals[k] = vals[k] + counter(v)
         return Cost(**vals)
 
     def charge_combining_writes(self, count, float_data: bool) -> "Cost":

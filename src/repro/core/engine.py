@@ -1,4 +1,4 @@
-"""PushPullEngine — the paper's contribution as a composable JAX module.
+"""PushPullEngine — the paper's contribution as a composable JAX runtime.
 
 A *vertex program* is (msg_fn, combine, update_fn) plus optional hooks:
 
@@ -7,43 +7,67 @@ A *vertex program* is (msg_fn, combine, update_fn) plus optional hooks:
     update_fn(old_state, combined_msgs, step) -> (new_state, frontier,
                                                   converged)
     values_fn(g, state, frontier) -> wire values       (default: state)
+    touched_fn(g, state, frontier, visited) -> bool[n] pull destinations
+    local_fn(g, state, frontier, step, do_push, cost)  (non-exchange step:
+        -> (state, frontier, converged, cost)           sequential/greedy
+                                                        sub-phases, edge
+                                                        maps with private
+                                                        accumulation)
     tail_fn(g, state, frontier, cost) -> (state, cost) (GreedySwitch
                                                         hand-off, §5-GrS)
 
-The engine runs the program to a fixed point (or ``max_steps``) under a
-DirectionPolicy, executing each step as either a push k-relaxation
-(scatter from the frontier) or a pull k-relaxation (gather into
-destinations), with only the chosen direction evaluated at runtime
+Beyond the single flat fixed-point loop, the engine executes
+*phase-structured* programs (:class:`PhaseProgram`): a sequence of
+:class:`Phase`\\ s — each with its own ``VertexProgram``, step bound, and
+carry-rewrite hooks — optionally wrapped in a nested *epoch* loop. This
+covers every control shape in the paper:
+
+  * flat fixed point            — BFS, PageRank, WCC, δ-PR (one phase);
+  * nested epochs               — Δ-stepping's bucket loop around an
+                                  inner relaxation loop (§3.4);
+  * forward/backward pairs      — Brandes BC: the backward phase replays
+                                  the forward trace (levels/σ) recorded
+                                  in the carry (§3.5);
+  * per-round contraction       — Borůvka's supervertex relabel as a
+                                  second phase per round (§3.7);
+  * one-shot edge maps          — triangle counting: a fixed number of
+                                  steps, no fixed point (§3.2).
+
+Each step runs as either a push k-relaxation (scatter from the frontier)
+or a pull k-relaxation (gather into destinations) under a
+DirectionPolicy, with only the chosen direction evaluated at runtime
 (``lax.cond``) — and, orthogonally, through a pluggable
 :class:`~repro.core.backend.ExchangeBackend` (dense / ELL / distributed).
 
-The loop carries a real *visited* mask (the union of every frontier so
-far), so ``GenericSwitch``'s growing-phase test sees the actual
-unvisited edge count instead of the total edge count, and push steps pay
-the paper's k-filter compaction. ``state`` may be any pytree.
+Every phase loop carries a real *visited* mask (the union of every
+frontier so far), so ``GenericSwitch``'s growing-phase test sees the
+actual unvisited edge count, and push steps pay the paper's k-filter
+compaction. ``state`` may be any pytree; it is the only channel between
+phases and epochs, so the carry structure must be stable across them.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from ..graphs.structure import Graph
 from .backend import DenseBackend, ExchangeBackend
-from .cost_model import Cost
+from .cost_model import Cost, counter_dtype
 from .direction import Direction, DirectionPolicy, Fixed, GreedySwitch
 from .primitives import frontier_in_edges, k_filter
 
-__all__ = ["VertexProgram", "PushPullEngine", "EngineResult"]
+__all__ = ["VertexProgram", "Phase", "PhaseProgram", "PushPullEngine",
+           "EngineResult"]
 
 
 @dataclasses.dataclass(frozen=True)
 class VertexProgram:
-    combine: str
+    combine: str = "sum"
     msg_fn: Optional[Callable] = None
     # update_fn(state, msgs, step) -> (state, frontier, converged)
     update_fn: Callable = None  # type: ignore[assignment]
@@ -53,6 +77,10 @@ class VertexProgram:
     # what pull inspects: 'all' destinations, or only the 'unvisited' ones
     # (BFS-style programs where settled vertices never update again)
     pull_touched: str = "all"
+    # touched_fn(g, state, frontier, visited) -> bool[n]: state-derived
+    # pull destination set (Δ-stepping's unsettled set, BC's level masks);
+    # overrides pull_touched when set
+    touched_fn: Optional[Callable] = None
     # static per-iteration charges, e.g. (("reads", 2 * n),) for reading
     # own state + degree when forming contributions
     step_charges: tuple = ()
@@ -63,9 +91,56 @@ class VertexProgram:
     # only meaningful for sparse-frontier programs (BFS); dense programs
     # (PR) never filter, matching the paper's accounting
     k_filter_push: bool = False
+    # k_filter_set_fn(old_state, new_state, frontier) -> bool[n]: the set
+    # the push k-filter compacts, when it differs from the next frontier
+    # (Δ-stepping filters the *updated* vertices; its frontier is the
+    # whole re-activated bucket). Default: the frontier itself.
+    k_filter_set_fn: Optional[Callable] = None
     # GreedySwitch terminal hand-off (paper §5-GrS): invoked once when the
     # active set drops below the policy's tail threshold
     tail_fn: Optional[Callable] = None
+    # local_fn(g, state, frontier, step, do_push, cost)
+    #   -> (state, frontier, converged, cost)
+    # replaces the relax+update step entirely: the step never touches the
+    # exchange backend (partition-sequential coloring, Borůvka's find-min
+    # over contracted supervertices, blocked triangle edge maps). The
+    # decided direction still arrives as `do_push` so the step can charge
+    # the paper's direction-dependent cost.
+    local_fn: Optional[Callable] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One fixed-point (or bounded) loop inside a program.
+
+    enter_fn(g, state, frontier, epoch) -> (state, frontier) rewrites the
+        carry before the phase's first step (Δ-stepping's bucket frontier,
+        BC's per-source reset / backward-level seeding).
+    exit_fn(g, state, frontier, cost) -> (state, frontier, cost) runs
+        after the phase's loop (contraction, trace post-processing).
+    """
+    program: VertexProgram
+    max_steps: int = 100
+    name: str = ""
+    enter_fn: Optional[Callable] = None
+    exit_fn: Optional[Callable] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseProgram:
+    """A sequence of phases, optionally iterated as epochs.
+
+    epoch_cond(g, state, epoch) -> bool: run another epoch? (checked
+        before each epoch; None = run exactly ``max_epochs``).
+    epoch_exit_fn(g, state, frontier, epoch) -> (state, frontier): carry
+        rewrite after each epoch (BC's per-source accumulation, Borůvka's
+        component relabel when not expressed as a phase).
+    max_epochs: epoch bound; None defers to the engine's ``max_steps``.
+    """
+    phases: tuple
+    max_epochs: Optional[int] = None
+    epoch_cond: Optional[Callable] = None
+    epoch_exit_fn: Optional[Callable] = None
 
 
 class EngineResult(NamedTuple):
@@ -74,6 +149,7 @@ class EngineResult(NamedTuple):
     steps: jax.Array
     push_steps: jax.Array
     converged: jax.Array = jnp.bool_(True)
+    epochs: jax.Array = jnp.int32(1)
 
 
 class _Loop(NamedTuple):
@@ -89,15 +165,15 @@ class _Loop(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class PushPullEngine:
-    program: VertexProgram
+    program: Union[VertexProgram, PhaseProgram]
     policy: DirectionPolicy = Fixed(Direction.PULL)
     max_steps: int = 100
     backend: ExchangeBackend = DenseBackend()
 
-    @partial(jax.jit, static_argnames=("self",))
-    def run(self, g: Graph, init_state: Any,
-            init_frontier: jax.Array) -> EngineResult:
-        prog = self.program
+    # -- one phase: the classic fixed-point loop --------------------------
+    def _run_phase(self, g: Graph, phase: Phase, state0, frontier0, epoch,
+                   cost0: Cost, steps0, pushes0):
+        prog = phase.program
         values_fn = prog.values_fn or (lambda g_, s, f: s)
         greedy = (isinstance(self.policy, GreedySwitch)
                   and prog.tail_fn is not None)
@@ -106,8 +182,12 @@ class PushPullEngine:
         fixed_dir = (self.policy.direction
                      if isinstance(self.policy, Fixed) else None)
 
+        if phase.enter_fn is not None:
+            state0, frontier0 = phase.enter_fn(g, state0, frontier0, epoch)
+
         def cond(st: _Loop):
-            return (~st.converged) & (~st.handoff) & (st.step < self.max_steps)
+            return ((~st.converged) & (~st.handoff)
+                    & (st.step < phase.max_steps))
 
         def body(st: _Loop):
             unvisited = ~st.visited
@@ -118,18 +198,34 @@ class PushPullEngine:
                 unvisited_edges = frontier_in_edges(g, unvisited)
                 direction = do_push = self.policy.decide_push(
                     g, st.frontier, unvisited_edges)
-            values = values_fn(g, st.state, st.frontier)
-            touched = unvisited if prog.pull_touched == "unvisited" else None
-            msgs, cost = self.backend.relax(
-                g, values, st.frontier, direction=direction,
-                combine=prog.combine, msg_fn=prog.msg_fn, touched=touched,
-                cost=st.cost)
-            state, frontier, conv = prog.update_fn(st.state, msgs, st.step)
-            if prog.k_filter_push:
-                # push produced a sparse updated set -> k-filter compacts
-                # it (paper: pull inspects every vertex anyway)
-                _, cost = jax.lax.cond(
-                    do_push, k_filter, lambda f, c: (f, c), frontier, cost)
+            cost = st.cost
+            if prog.local_fn is not None:
+                state, frontier, conv, cost = prog.local_fn(
+                    g, st.state, st.frontier, st.step, do_push, cost)
+            else:
+                values = values_fn(g, st.state, st.frontier)
+                if prog.touched_fn is not None:
+                    touched = prog.touched_fn(g, st.state, st.frontier,
+                                              st.visited)
+                elif prog.pull_touched == "unvisited":
+                    touched = unvisited
+                else:
+                    touched = None
+                msgs, cost = self.backend.relax(
+                    g, values, st.frontier, direction=direction,
+                    combine=prog.combine, msg_fn=prog.msg_fn,
+                    touched=touched, cost=cost)
+                state, frontier, conv = prog.update_fn(st.state, msgs,
+                                                       st.step)
+                if prog.k_filter_push:
+                    # push produced a sparse updated set -> k-filter
+                    # compacts it (paper: pull inspects every vertex)
+                    kf_set = (frontier if prog.k_filter_set_fn is None
+                              else prog.k_filter_set_fn(st.state, state,
+                                                        frontier))
+                    _, cost = jax.lax.cond(
+                        do_push, k_filter, lambda f, c: (f, c), kf_set,
+                        cost)
             cost = cost.charge(iterations=1, barriers=1,
                                **dict(prog.step_charges))
             if prog.charge_fn is not None:
@@ -137,23 +233,23 @@ class PushPullEngine:
                                                     st.frontier))
             handoff = st.handoff
             if greedy:
-                active = jnp.sum(frontier.astype(jnp.int64))
+                active = jnp.sum(frontier.astype(counter_dtype()))
                 handoff = (~conv) & self.policy.should_handoff(g, active)
             return _Loop(state=state, frontier=frontier,
                          visited=st.visited | frontier, converged=conv,
                          handoff=handoff, step=st.step + 1, cost=cost,
                          pushes=st.pushes + do_push.astype(jnp.int32))
 
-        # an empty initial frontier is already converged (matches the
+        # an empty entering frontier is already converged (matches the
         # seed loops, whose cond checked the frontier before any work)
-        init = _Loop(state=init_state, frontier=init_frontier,
-                     visited=init_frontier,
-                     converged=~jnp.any(init_frontier),
+        init = _Loop(state=state0, frontier=frontier0, visited=frontier0,
+                     converged=~jnp.any(frontier0),
                      handoff=jnp.bool_(False), step=jnp.int32(0),
-                     cost=Cost(), pushes=jnp.int32(0))
+                     cost=cost0, pushes=jnp.int32(0))
         fin = jax.lax.while_loop(cond, body, init)
 
-        state, cost, converged = fin.state, fin.cost, fin.converged
+        state, frontier, cost = fin.state, fin.frontier, fin.cost
+        converged = fin.converged
         if greedy:
             state, cost = jax.lax.cond(
                 fin.handoff,
@@ -161,5 +257,68 @@ class PushPullEngine:
                 lambda s, f, c: (s, c),
                 fin.state, fin.frontier, fin.cost)
             converged = converged | fin.handoff
-        return EngineResult(state=state, cost=cost, steps=fin.step,
-                            push_steps=fin.pushes, converged=converged)
+        if phase.exit_fn is not None:
+            state, frontier, cost = phase.exit_fn(g, state, frontier, cost)
+        return (state, frontier, cost, steps0 + fin.step,
+                pushes0 + fin.pushes, converged)
+
+    # -- the full program: phases under an epoch loop ---------------------
+    @partial(jax.jit, static_argnames=("self",))
+    def run(self, g: Graph, init_state: Any,
+            init_frontier: jax.Array) -> EngineResult:
+        if isinstance(self.program, PhaseProgram):
+            pp = self.program
+            phases = tuple(pp.phases)
+            max_epochs = (self.max_steps if pp.max_epochs is None
+                          else pp.max_epochs)
+            epoch_cond, epoch_exit = pp.epoch_cond, pp.epoch_exit_fn
+        else:
+            phases = (Phase(program=self.program,
+                            max_steps=self.max_steps),)
+            max_epochs, epoch_cond, epoch_exit = 1, None, None
+
+        def run_epoch(state, frontier, epoch, cost, steps, pushes):
+            conv = jnp.bool_(True)
+            for ph in phases:         # statically unrolled: phases differ
+                state, frontier, cost, steps, pushes, conv = \
+                    self._run_phase(g, ph, state, frontier, epoch, cost,
+                                    steps, pushes)
+            if epoch_exit is not None:
+                state, frontier = epoch_exit(g, state, frontier, epoch)
+            return state, frontier, cost, steps, pushes, conv
+
+        if max_epochs == 1 and epoch_cond is None:
+            # single-epoch programs (the PR-1 algorithms) skip the outer
+            # loop entirely — same trace as the old flat engine
+            state, frontier, cost, steps, pushes, conv = run_epoch(
+                init_state, init_frontier, jnp.int32(0), Cost(),
+                jnp.int32(0), jnp.int32(0))
+            return EngineResult(state=state, cost=cost, steps=steps,
+                                push_steps=pushes, converged=conv,
+                                epochs=jnp.int32(1))
+
+        def cond(carry):
+            state, frontier, epoch, cost, steps, pushes, conv = carry
+            go = epoch < max_epochs
+            if epoch_cond is not None:
+                go = go & epoch_cond(g, state, epoch)
+            return go
+
+        def body(carry):
+            state, frontier, epoch, cost, steps, pushes, _ = carry
+            state, frontier, cost, steps, pushes, conv = run_epoch(
+                state, frontier, epoch, cost, steps, pushes)
+            return (state, frontier, epoch + 1, cost, steps, pushes, conv)
+
+        init = (init_state, init_frontier, jnp.int32(0), Cost(),
+                jnp.int32(0), jnp.int32(0), jnp.bool_(True))
+        state, frontier, epochs, cost, steps, pushes, conv = \
+            jax.lax.while_loop(cond, body, init)
+        if epoch_cond is not None:
+            # converged iff the work test (not the epoch bound) ended it
+            converged = ~epoch_cond(g, state, epochs)
+        else:
+            converged = conv
+        return EngineResult(state=state, cost=cost, steps=steps,
+                            push_steps=pushes, converged=converged,
+                            epochs=epochs)

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from ..graphs.structure import Graph
 from ..sparse.segment import segment_max, segment_min, segment_sum
-from .cost_model import Cost
+from .cost_model import Cost, counter, counter_dtype
 
 __all__ = [
     "push_relax", "pull_relax", "pull_relax_ell", "k_filter",
@@ -70,13 +70,13 @@ def mask_untouched(out: jax.Array, touched: jax.Array,
 
 
 def frontier_out_edges(g: Graph, frontier: jax.Array) -> jax.Array:
-    """int64 count of out-edges incident to the frontier = push work."""
-    return jnp.sum(jnp.where(frontier, g.out_deg, 0).astype(jnp.int64))
+    """Counter-typed count of frontier-incident out-edges = push work."""
+    return jnp.sum(jnp.where(frontier, g.out_deg, 0).astype(counter_dtype()))
 
 
 def frontier_in_edges(g: Graph, touched: jax.Array) -> jax.Array:
-    """int64 count of in-edges of touched destinations = pull work."""
-    return jnp.sum(jnp.where(touched, g.in_deg, 0).astype(jnp.int64))
+    """Counter-typed count of in-edges of touched destinations = pull work."""
+    return jnp.sum(jnp.where(touched, g.in_deg, 0).astype(counter_dtype()))
 
 
 def _edge_messages(values: jax.Array, src: jax.Array, w: jax.Array,
@@ -128,12 +128,12 @@ def pull_relax(g: Graph, values: jax.Array, touched: Optional[jax.Array] = None,
     msgs = _edge_messages(values, g.coo_src, g.coo_w, msg_fn)
     out = COMBINE_FNS[combine](msgs, g.coo_dst, g.n)
     if touched is None:
-        k = jnp.asarray(g.m, jnp.int64)
-        wr = jnp.asarray(g.n, jnp.int64)
+        k = counter(g.m)
+        wr = counter(g.n)
     else:
         out = mask_untouched(out, touched, combine)
         k = frontier_in_edges(g, touched)
-        wr = jnp.sum(touched.astype(jnp.int64))
+        wr = jnp.sum(touched.astype(counter_dtype()))
     width = 1 if values.ndim == 1 else values.shape[-1]
     cost = cost.charge(reads=k * width, writes=wr * width)
     return out, cost
@@ -165,8 +165,8 @@ def pull_relax_ell(g: Graph, values: jax.Array,
     else:
         out = gathered.min(axis=1)
     width = 1 if values.ndim == 1 else values.shape[-1]
-    cost = cost.charge(reads=jnp.asarray(g.m, jnp.int64) * width,
-                       writes=jnp.asarray(g.n, jnp.int64) * width)
+    cost = cost.charge(reads=counter(g.m) * width,
+                       writes=counter(g.n) * width)
     return out, cost
 
 
@@ -174,5 +174,5 @@ def k_filter(updated: jax.Array, cost: Cost = Cost()) -> tuple[jax.Array, Cost]:
     """k-filter: extract the updated-vertex set. Dense-mask world: identity
     on the mask, but charges the prefix-sum cost O(min(k, n)) the paper
     assigns (push only — pull checks every vertex anyway)."""
-    k = jnp.sum(updated.astype(jnp.int64))
+    k = jnp.sum(updated.astype(counter_dtype()))
     return updated, cost.charge(reads=k, writes=k, barriers=1)

@@ -148,6 +148,22 @@ def test_boruvka_mst(small_graph, nx_of):
     assert int(boruvka_mst(g, "push").cost.atomics) > 0
 
 
+def test_boruvka_mst_disconnected(nx_of):
+    """Edgeless supervertices must not scatter into in_mst slot 0 — a
+    sparse graph with many isolated components exercises the sentinel
+    path every round."""
+    from repro.graphs import erdos_renyi
+    g = erdos_renyi(200, 1.2, seed=5, weighted=True)
+    G = nx_of(g)
+    F = nx.minimum_spanning_tree(G)
+    want = sum(d["weight"] for _, _, d in F.edges(data=True))
+    want_comp = nx.number_connected_components(G)
+    for d in ("push", "pull"):
+        res = boruvka_mst(g, d)
+        assert np.isclose(float(res.weight), want, rtol=1e-5)
+        assert int(res.components) == want_comp
+
+
 # ---------------------------------------------------------------- BC ----
 def test_betweenness(nx_of):
     from repro.graphs import erdos_renyi

@@ -19,9 +19,21 @@ KW = {
     "pagerank": {"iters": 25},
     "wcc": {},
     "pr_delta": {"tol": 1e-7},
+    "sssp_delta": {"source": 3, "delta": 2.5},
+    "betweenness": {"num_sources": 4},
+    "coloring": {"num_parts": 8},
+    "mst_boruvka": {},
+    "triangle_count": {"edge_block": 512},
 }
 
+# betweenness sums float32 σ-ratios in edge order, which differs between
+# the push-major and pull-major layouts — everything else is exact or
+# fixed-point-tight
+ATOL = {"betweenness": 1e-3}
+
 POLICIES = [Fixed(Direction.PUSH), Fixed(Direction.PULL), GenericSwitch()]
+
+BACKENDS = {"dense": DenseBackend, "ell": EllBackend}
 
 
 def _states_equal(a, b, atol):
@@ -33,26 +45,114 @@ def _states_equal(a, b, atol):
         assert np.array_equal(np.asarray(fa), np.asarray(fb))
 
 
-@pytest.mark.parametrize("name", sorted(api.algorithms()))
+def _assert_same_states(ref, got, atol):
+    for leaf_r, leaf_g in zip(jax.tree_util.tree_leaves(ref),
+                              jax.tree_util.tree_leaves(got)):
+        _states_equal(leaf_r, leaf_g, atol=atol)
+
+
+def test_registry_covers_all_nine():
+    assert api.algorithms() == sorted([
+        "bfs", "pagerank", "wcc", "pr_delta", "sssp_delta", "betweenness",
+        "coloring", "mst_boruvka", "triangle_count"])
+
+
+@pytest.mark.parametrize("name", sorted(KW))
 def test_push_pull_switch_equivalence(name, power_graph):
     """solve(..., Fixed(PUSH)) ≡ Fixed(PULL) ≡ GenericSwitch for every
     registered algorithm — the §3.8 equivalence, end to end."""
     ref = api.solve(power_graph, name, policy=POLICIES[0], **KW[name])
     for policy in POLICIES[1:]:
         got = api.solve(power_graph, name, policy=policy, **KW[name])
-        for leaf_r, leaf_g in zip(jax.tree_util.tree_leaves(ref.state),
-                                  jax.tree_util.tree_leaves(got.state)):
-            _states_equal(leaf_r, leaf_g, atol=1e-6)
+        _assert_same_states(ref.state, got.state, ATOL.get(name, 1e-6))
 
 
-@pytest.mark.parametrize("name", sorted(api.algorithms()))
+@pytest.mark.parametrize("name", sorted(KW))
+def test_backend_matrix(name, small_graph):
+    """Every algorithm runs under every (policy × backend) cell it
+    declares supported and returns the dense-reference states."""
+    spec = api.get_spec(name)
+    ref = api.solve(small_graph, name, policy=POLICIES[0], **KW[name])
+    for bname in spec.backends:
+        if bname not in BACKENDS:
+            continue
+        backend = BACKENDS[bname]()
+        for policy in POLICIES:
+            got = api.solve(small_graph, name, policy=policy,
+                            backend=backend, **KW[name])
+            _assert_same_states(ref.state, got.state,
+                                ATOL.get(name, 1e-6))
+
+
+@pytest.mark.parametrize("name", sorted(KW))
 def test_runresult_surface(name, small_graph):
     r = api.solve(small_graph, name, **KW[name])
     assert int(r.steps) >= 1
+    assert int(r.epochs) >= 1
     assert 0 <= int(r.push_steps) <= int(r.steps)
     assert int(r.cost.iterations) == int(r.steps)
     if name != "pagerank":          # fixed-iteration solves never converge
         assert bool(r.converged)
+
+
+def test_unsupported_backend_combination_raises(small_graph):
+    """Specs with no distributed execution path surface a ValueError
+    naming the (policy, backend) combination, not a raw trace error."""
+    db = DistributedBackend.prepare(small_graph)
+    for name in ("sssp_delta", "betweenness", "coloring", "mst_boruvka",
+                 "triangle_count"):
+        with pytest.raises(ValueError, match=f"{name}.*DistributedBackend"):
+            api.solve(small_graph, name, backend=db, **KW[name])
+
+
+# -- engine ≡ legacy wrappers --------------------------------------------
+def test_legacy_wrappers_match_engine(small_graph):
+    from repro.core.algorithms import (betweenness_centrality,
+                                       boman_coloring, boruvka_mst,
+                                       sssp_delta, triangle_count)
+    g = small_graph
+    r = api.solve(g, "sssp_delta", policy=Fixed(Direction.PUSH),
+                  source=3, delta=2.5)
+    w = sssp_delta(g, 3, delta=2.5, direction="push")
+    np.testing.assert_array_equal(np.asarray(w.dist),
+                                  np.asarray(r.state["dist"]))
+    assert int(w.epochs) == int(r.epochs)
+
+    r = api.solve(g, "betweenness", policy=Fixed(Direction.PULL),
+                  num_sources=4)
+    w = betweenness_centrality(g, "pull", num_sources=4)
+    np.testing.assert_allclose(np.asarray(w.bc),
+                               np.asarray(r.state["bc"]), atol=1e-6)
+
+    r = api.solve(g, "coloring", policy=Fixed(Direction.PUSH),
+                  num_parts=8)
+    w = boman_coloring(g, num_parts=8, direction="push")
+    np.testing.assert_array_equal(np.asarray(w.colors),
+                                  np.asarray(r.state["colors"]))
+
+    r = api.solve(g, "mst_boruvka")
+    w = boruvka_mst(g, "pull")
+    assert float(w.weight) == pytest.approx(float(r.state["weight"]))
+    assert int(w.components) == int(r.state["components"])
+
+    r = api.solve(g, "triangle_count")
+    w = triangle_count(g, "pull")
+    assert int(w.total) == int(r.state["total"])
+    np.testing.assert_array_equal(np.asarray(w.per_vertex),
+                                  np.asarray(r.state["per_vertex"]))
+
+
+def test_coloring_validity_across_cells(small_graph):
+    """Coloring equivalence is *validity* (the paper's criterion): every
+    (policy × backend) cell yields a proper coloring."""
+    from repro.core.algorithms import validate_coloring
+    for policy in POLICIES:
+        for backend in (DenseBackend(), EllBackend()):
+            r = api.solve(small_graph, "coloring", policy=policy,
+                          backend=backend, num_parts=8)
+            assert bool(validate_coloring(small_graph,
+                                          r.state["colors"]))
+            assert np.all(np.asarray(r.state["colors"]) > 0)
 
 
 def test_backend_equivalence_dense_ell(small_graph):
@@ -77,9 +177,7 @@ def test_backend_equivalence_distributed_single_device(small_graph):
             a = api.solve(small_graph, name, policy=policy, **KW[name])
             b = api.solve(small_graph, name, policy=policy, backend=db,
                           **KW[name])
-            for la, lb in zip(jax.tree_util.tree_leaves(a.state),
-                              jax.tree_util.tree_leaves(b.state)):
-                _states_equal(la, lb, atol=1e-6)
+            _assert_same_states(a.state, b.state, 1e-6)
 
 
 def test_unknown_algorithm_raises(small_graph):
@@ -115,6 +213,9 @@ def test_greedy_switch_tail_handoff(small_graph):
     assert calls.get("hit")          # tail traced into the cond branch
     assert bool(res.converged)
     assert int(res.steps) < 100
+    # the tail charges one extra iteration at *runtime*: the engine
+    # charges 1/step, so steps+1 proves the handoff branch actually ran
+    assert int(res.cost.iterations) == int(res.steps) + 1
 
 
 def test_engine_carries_real_unvisited_mask(power_graph):
@@ -123,6 +224,20 @@ def test_engine_carries_real_unvisited_mask(power_graph):
     switches from push to pull as the frontier densifies (and back)."""
     r = api.solve(power_graph, "bfs", root=0, policy=GenericSwitch())
     assert 0 < int(r.push_steps) < int(r.steps)
+
+
+def test_phase_engine_epoch_surface(small_graph):
+    """Phase programs expose their outer structure: Δ-stepping's epochs
+    count buckets, BC's count sources, Borůvka's count rounds."""
+    r = api.solve(small_graph, "sssp_delta", source=0, delta=2.5)
+    assert int(r.epochs) > 1 and int(r.steps) >= int(r.epochs) - 1
+    r = api.solve(small_graph, "betweenness", num_sources=3)
+    assert int(r.epochs) == 3
+    r = api.solve(small_graph, "mst_boruvka")
+    assert 1 <= int(r.epochs) <= 64
+    # flat programs report a single epoch
+    r = api.solve(small_graph, "pagerank", iters=5)
+    assert int(r.epochs) == 1
 
 
 DIST_SOLVE = r"""
