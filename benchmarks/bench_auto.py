@@ -1,0 +1,113 @@
+"""Push/pull decision matrix — the ``BENCH_pushpull.json`` trajectory.
+
+Sweeps every registered algorithm × direction policy (Fixed push/pull,
+GenericSwitch, GreedySwitch, AutoSwitch) × backend (Dense, ELL) × graph
+family (RMAT, uniform, power-law) through ``api.solve`` and emits one row
+per cell: steps, epochs, push steps, the paper's §4 counter totals, the
+weighted scalar cost, and wall time. This is the perf baseline future
+PRs regress against, and the data behind docs/results.md.
+
+One command per artifact (the committed BENCH_pushpull.json baseline is
+the full sweep; docs/results.md is the smoke snapshot):
+
+    PYTHONPATH=src python -m benchmarks.run --only pushpull_matrix \
+        --json BENCH_pushpull.json
+    PYTHONPATH=src python -m benchmarks.run --only pushpull_matrix \
+        --smoke --json /tmp/BENCH_smoke.json --markdown docs/results.md
+
+``--smoke`` restricts the sweep to CI-sized graphs (the RMAT family,
+both backends); without it the full three-family matrix runs.
+"""
+
+from __future__ import annotations
+
+import json
+
+from . import common
+from .common import emit, timeit
+
+POLICIES = ("push", "pull", "gs", "grs", "auto")
+
+# kwargs per algorithm, sized for a many-cell sweep (few iterations,
+# few BC sources); the *relative* push/pull counter structure is
+# iteration-count-independent
+KWARGS = {
+    "bfs": {"root": 0},
+    "pagerank": {"iters": 10},
+    "wcc": {},
+    "pr_delta": {"tol": 1e-6},
+    "sssp_delta": {"source": 0, "delta": 2.0},
+    "betweenness": {"num_sources": 2},
+    "coloring": {"num_parts": 8},
+    "mst_boruvka": {},
+    "triangle_count": {},
+}
+
+
+def _graphs(smoke: bool):
+    """(family name -> Graph) for the sweep; all weighted (Δ-stepping /
+    MST need weights). Triangle counting's all-pairs intersection is
+    O(m·d_ell²), so it gets a sparser stand-in per family."""
+    from repro.graphs import erdos_renyi, kronecker, road_grid, standin
+    if smoke:
+        fams = {"rmat": kronecker(7, edge_factor=6, seed=7, weighted=True)}
+        tc = {"rmat": road_grid(12, seed=3, weighted=True)}
+    else:
+        fams = {
+            "rmat": kronecker(10, edge_factor=8, seed=7, weighted=True),
+            "uniform": erdos_renyi(1024, 8.0, seed=5, weighted=True),
+            "powerlaw": standin("orc", scale=1.0 / 2048, weighted=True),
+        }
+        tc = {
+            "rmat": road_grid(24, seed=3, weighted=True),
+            "uniform": erdos_renyi(512, 4.0, seed=5, weighted=True),
+            "powerlaw": standin("rca", scale=1.0 / 2048, weighted=True),
+        }
+    return fams, tc
+
+
+def run():
+    import jax
+    from repro import api
+    from repro.core import DenseBackend, EllBackend
+
+    backends = {"dense": DenseBackend(), "ell": EllBackend()}
+    fams, tc_fams = _graphs(common.SMOKE)
+
+    for alg in api.algorithms():
+        spec = api.get_spec(alg)
+        graphs = tc_fams if alg == "triangle_count" else fams
+        for gname, g in graphs.items():
+            for pname in POLICIES:
+                if pname not in spec.policies:
+                    continue
+                for bname, backend in backends.items():
+                    if bname not in spec.backends:
+                        continue
+
+                    def fn():
+                        r = api.solve(g, alg, policy=pname,
+                                      backend=backend, **KWARGS[alg])
+                        jax.block_until_ready(r.cost.reads)
+                        return r
+
+                    us = timeit(fn)
+                    r = fn()
+                    payload = {
+                        "algorithm": alg, "graph": gname,
+                        "n": int(g.n), "m": int(g.m),
+                        "policy": pname, "backend": bname,
+                        "steps": int(r.steps),
+                        "push_steps": int(r.push_steps),
+                        "epochs": int(r.epochs),
+                        "converged": bool(r.converged),
+                        "wall_us": round(us, 1),
+                        "counters": r.cost.as_dict(),
+                        "weighted_total": float(r.cost.weighted_total()),
+                    }
+                    emit(f"pushpull_{alg}_{gname}_{pname}_{bname}", us,
+                         json.dumps(payload))
+
+
+if __name__ == "__main__":
+    run()

@@ -17,6 +17,10 @@ import numpy as np
 
 SCALE = 1.0 / 256    # stand-in scale vs paper sizes (CPU container)
 
+# set by `benchmarks.run --smoke`: suites that honor it shrink their
+# graphs to CI-sized instances (seconds, not minutes, per suite)
+SMOKE = False
+
 ROWS: list[str] = []
 # structured mirror of ROWS, consumed by `benchmarks.run --json PATH`
 RESULTS: list[dict] = []

@@ -1,0 +1,108 @@
+"""Validate benchmark JSON reports against ``benchmarks/schema.json``.
+
+Keeps ``BENCH_*.json`` machine-readable: CI runs this after every
+``benchmarks.run --json`` smoke so a refactor can't silently change the
+report shape that downstream trajectory tooling parses.
+
+    PYTHONPATH=src python -m benchmarks.validate BENCH_pushpull.json
+
+Uses ``jsonschema`` when installed; otherwise falls back to a built-in
+validator covering the subset of draft-07 the schema uses (type,
+required, properties, additionalProperties, items, enum, minimum, $ref).
+Rows named ``pushpull_*`` additionally have their ``derived`` payload
+checked against ``definitions/pushpull_cell`` — the convention the
+schema documents.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+SCHEMA_PATH = os.path.join(os.path.dirname(__file__), "schema.json")
+
+_TYPES = {
+    "object": dict, "array": list, "string": str, "boolean": bool,
+    "number": (int, float), "integer": int, "null": type(None),
+}
+
+
+def _check(instance, schema: dict, defs: dict, path: str = "$") -> None:
+    """Minimal draft-07 subset validator; raises ValueError on mismatch."""
+    if "$ref" in schema:
+        _check(instance, defs[schema["$ref"].rsplit("/", 1)[-1]], defs,
+               path)
+        return
+    t = schema.get("type")
+    if t is not None:
+        ok = isinstance(instance, _TYPES[t])
+        if t in ("number", "integer") and isinstance(instance, bool):
+            ok = False
+        if not ok:
+            raise ValueError(f"{path}: expected {t}, "
+                             f"got {type(instance).__name__}")
+    if "enum" in schema and instance not in schema["enum"]:
+        raise ValueError(f"{path}: {instance!r} not in {schema['enum']}")
+    if "minimum" in schema and isinstance(instance, (int, float)) \
+            and not isinstance(instance, bool) \
+            and instance < schema["minimum"]:
+        raise ValueError(f"{path}: {instance} < minimum "
+                         f"{schema['minimum']}")
+    if isinstance(instance, dict):
+        for req in schema.get("required", ()):
+            if req not in instance:
+                raise ValueError(f"{path}: missing required key {req!r}")
+        props = schema.get("properties", {})
+        for k, sub in props.items():
+            if k in instance:
+                _check(instance[k], sub, defs, f"{path}.{k}")
+        extra = schema.get("additionalProperties")
+        if isinstance(extra, dict):
+            for k, v in instance.items():
+                if k not in props:
+                    _check(v, extra, defs, f"{path}.{k}")
+    if isinstance(instance, list) and "items" in schema:
+        for i, v in enumerate(instance):
+            _check(v, schema["items"], defs, f"{path}[{i}]")
+
+
+def load_schema() -> dict:
+    with open(SCHEMA_PATH) as f:
+        return json.load(f)
+
+
+def validate_report(report: dict) -> bool:
+    """Raise (jsonschema.ValidationError or ValueError) on an invalid
+    report; return True when it conforms."""
+    schema = load_schema()
+    defs = schema.get("definitions", {})
+    try:
+        import jsonschema
+        jsonschema.validate(report, schema)
+    except ImportError:
+        _check(report, schema, defs)
+    # schema-documented convention: pushpull_* rows carry structured cells
+    for row in report.get("rows", ()):
+        if row.get("name", "").startswith("pushpull_"):
+            _check(row["derived"], defs["pushpull_cell"], defs,
+                   f"$.rows[{row['name']}].derived")
+    return True
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.validate REPORT.json "
+              "[REPORT.json ...]", file=sys.stderr)
+        return 2
+    for path in argv:
+        with open(path) as f:
+            report = json.load(f)
+        validate_report(report)
+        print(f"{path}: ok ({len(report['rows'])} rows, "
+              f"{len(report['failures'])} failures)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -10,6 +10,7 @@ implementations. This module is that claim as an interface:
 
     r = api.solve(g, "pagerank", iters=30)                  # GS policy
     r = api.solve(g, "bfs", root=0, policy=Fixed(Direction.PUSH))
+    r = api.solve(g, "bfs", root=0, policy="auto")          # AutoSwitch
     r = api.solve(g, "sssp_delta", source=0, delta=2.0)     # Δ-stepping
     r = api.solve(g, "mst_boruvka", backend=EllBackend())   # ELL layout
 
@@ -60,30 +61,52 @@ from .core.algorithms.triangle_count import (triangle_finalize,
 from .core.algorithms.wcc import wcc_init, wcc_program
 from .core.backend import (DenseBackend, DistributedBackend, EllBackend,
                            ExchangeBackend)
-from .core.cost_model import Cost
-from .core.direction import (Direction, DirectionPolicy, Fixed,
+from .core.cost_model import Cost, StepTrace
+from .core.direction import (AutoSwitch, Direction, DirectionPolicy, Fixed,
                              GenericSwitch, GreedySwitch)
 from .core.engine import PhaseProgram, PushPullEngine, VertexProgram
 from .graphs.structure import Graph
 
 __all__ = ["RunResult", "AlgorithmSpec", "register", "algorithms",
-           "get_spec", "solve",
+           "get_spec", "solve", "POLICY_SHORTHANDS",
            "DenseBackend", "EllBackend", "DistributedBackend",
            "ExchangeBackend", "Fixed", "GenericSwitch", "GreedySwitch",
-           "Direction"]
+           "AutoSwitch", "Direction"]
 
 
 class RunResult(NamedTuple):
-    """Unified result of ``solve``: the algorithm's state pytree plus the
-    engine's run metadata. ``steps`` counts relaxation/local steps across
-    all phases; ``epochs`` counts outer rounds (buckets, sources, Borůvka
-    rounds, coloring iterations — 1 for flat programs)."""
+    """Unified result of ``solve``.
+
+    Attributes:
+        state: the algorithm's public state pytree (e.g. BFS's
+            ``{"dist", "parent", "visited"}`` dict, PageRank's rank
+            vector).
+        cost: accumulated paper-Table-1 counters
+            (:class:`~repro.core.cost_model.Cost`); collapse with
+            ``cost.weighted_total()`` for one comparable scalar.
+        steps: relaxation/local steps across all phases.
+        push_steps: how many of those ran in push direction.
+        converged: whether the fixed point (not a step bound) ended the
+            run.
+        epochs: outer rounds — buckets, sources, Borůvka rounds,
+            coloring iterations; 1 for flat programs.
+        trace: per-step :class:`~repro.core.cost_model.StepTrace` when
+            ``solve(..., trace=N)`` was given, else None.
+
+    Example::
+
+        r = api.solve(g, "bfs", root=0, policy="auto", trace=64)
+        int(r.steps), bool(r.converged)
+        float(r.cost.weighted_total())
+        r.trace.as_dict(int(r.steps))["pushed"]   # per-step directions
+    """
     state: Any
     cost: Cost
     steps: jax.Array
     push_steps: jax.Array
     converged: jax.Array
     epochs: jax.Array
+    trace: Optional[StepTrace] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +127,9 @@ class AlgorithmSpec:
         excluded from the engine cache key.
     backends: declared-supported backend names (introspection only; the
         authoritative check lives in ``build``).
+    policies: declared-supported policy shorthands (see
+        ``POLICY_SHORTHANDS``) — the (policy × backend) support matrix
+        that docs/algorithms.md and the benchmark sweep enumerate.
     paper: the paper section this algorithm reproduces.
     """
     name: str
@@ -113,6 +139,7 @@ class AlgorithmSpec:
     default_policy: DirectionPolicy = GenericSwitch()
     runtime_keys: tuple = ()
     backends: tuple = ("dense", "ell", "distributed")
+    policies: tuple = ("push", "pull", "gs", "grs", "auto")
     paper: str = ""
 
 
@@ -143,16 +170,75 @@ def get_spec(name: str) -> AlgorithmSpec:
         ) from None
 
 
+# String shorthands accepted wherever a DirectionPolicy is expected —
+# zero-arg factories so each solve gets a fresh default-configured policy.
+POLICY_SHORTHANDS: dict[str, Callable[[], DirectionPolicy]] = {
+    "push": lambda: Fixed(Direction.PUSH),
+    "pull": lambda: Fixed(Direction.PULL),
+    "gs": GenericSwitch,
+    "grs": GreedySwitch,
+    "auto": AutoSwitch,
+}
+
+# solve(trace=True) records up to this many steps
+_DEFAULT_TRACE_CAPACITY = 256
+
+
+def _resolve_policy(policy) -> DirectionPolicy:
+    if not isinstance(policy, str):
+        return policy
+    try:
+        return POLICY_SHORTHANDS[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown policy shorthand {policy!r}; valid options: "
+            f"{sorted(POLICY_SHORTHANDS)} (or pass a DirectionPolicy "
+            "instance)") from None
+
+
 def solve(g: Graph, algorithm: str, *,
-          policy: Optional[DirectionPolicy] = None,
+          policy: Optional[DirectionPolicy | str] = None,
           backend: Optional[ExchangeBackend] = None,
-          max_steps: Optional[int] = None, **kw) -> RunResult:
+          max_steps: Optional[int] = None,
+          trace: int | bool = 0, **kw) -> RunResult:
     """Run ``algorithm`` on ``g`` under a direction policy and an
-    exchange backend. Algorithm-specific kwargs (``root``, ``source``,
-    ``iters``, ``damp``, ``tol``, ...) pass through ``**kw``."""
+    exchange backend.
+
+    Args:
+        g: the :class:`~repro.graphs.structure.Graph` to process.
+        algorithm: a registered name — see :func:`algorithms`.
+        policy: a :class:`~repro.core.direction.DirectionPolicy` instance
+            or one of the string shorthands ``"push"``, ``"pull"``,
+            ``"gs"`` (GenericSwitch), ``"grs"`` (GreedySwitch), ``"auto"``
+            (cost-model-driven AutoSwitch). Default: the algorithm's
+            declared default policy.
+        backend: the exchange backend (Dense / ELL / Distributed);
+            default :class:`DenseBackend`.
+        max_steps: per-phase step bound override (bounds *epochs* for
+            phase programs).
+        trace: record a per-step
+            :class:`~repro.core.cost_model.StepTrace` on the result —
+            an int capacity, or True for a default of 256 slots.
+        **kw: algorithm-specific kwargs (``root``, ``source``, ``iters``,
+            ``damp``, ``tol``, ...).
+
+    Example::
+
+        r = api.solve(g, "bfs", root=0, policy="auto")
+        r = api.solve(g, "pagerank", iters=30, backend=EllBackend())
+        r = api.solve(g, "sssp_delta", source=0, delta=2.0, trace=128)
+
+    Raises:
+        KeyError: unknown algorithm name.
+        ValueError: unknown policy shorthand, or a (policy × backend)
+            combination the algorithm declares unsupported.
+    """
     spec = get_spec(algorithm)
-    policy = spec.default_policy if policy is None else policy
+    policy = (spec.default_policy if policy is None
+              else _resolve_policy(policy))
     backend = DenseBackend() if backend is None else backend
+    trace_capacity = (_DEFAULT_TRACE_CAPACITY if trace is True
+                      else int(trace))
     static_kw = {k: v for k, v in kw.items() if k not in spec.runtime_keys}
 
     key: Optional[tuple]
@@ -161,7 +247,7 @@ def solve(g: Graph, algorithm: str, *,
         # cached engines built from the old spec
         key = (algorithm, spec, policy, backend,
                tuple(sorted(static_kw.items())),
-               g.n, g.m, g.d_ell, max_steps)
+               g.n, g.m, g.d_ell, max_steps, trace_capacity)
         hash(key)
     except TypeError:
         key = None
@@ -178,7 +264,7 @@ def solve(g: Graph, algorithm: str, *,
         engine = PushPullEngine(
             program=program, policy=policy,
             max_steps=default_steps if max_steps is None else max_steps,
-            backend=backend)
+            backend=backend, trace_capacity=trace_capacity)
         if key is not None:
             while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
                 _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
@@ -187,7 +273,8 @@ def solve(g: Graph, algorithm: str, *,
     res = engine.run(g, init_state, init_frontier)
     return RunResult(state=spec.finalize(g, res.state), cost=res.cost,
                      steps=res.steps, push_steps=res.push_steps,
-                     converged=res.converged, epochs=res.epochs)
+                     converged=res.converged, epochs=res.epochs,
+                     trace=res.trace)
 
 
 # ---------------------------------------------------------------------
@@ -207,7 +294,8 @@ register(AlgorithmSpec(
 register(AlgorithmSpec(
     name="pr_delta", build=pr_delta_program, init=pr_delta_init,
     finalize=pr_delta_finalize,
-    default_policy=Fixed(Direction.PUSH), paper="§3.1 (Whang [60])"))
+    default_policy=Fixed(Direction.PUSH),
+    paper="§3.1 (Whang [60])"))
 
 register(AlgorithmSpec(
     name="sssp_delta", build=sssp_delta_program, init=sssp_delta_init,

@@ -2,9 +2,11 @@
 
 from .backend import (DenseBackend, DistributedBackend, EllBackend,
                       ExchangeBackend, require_backend)
-from .cost_model import Cost, zero_cost, counter, counter_dtype
-from .direction import (Direction, DirectionPolicy, Fixed, GenericSwitch,
-                        GreedySwitch)
+from .cost_model import (Cost, CostPredictor, CostWeights, DEFAULT_WEIGHTS,
+                         StepStats, StepTrace, zero_cost, counter,
+                         counter_dtype)
+from .direction import (AutoSwitch, Direction, DirectionPolicy, Fixed,
+                        GenericSwitch, GreedySwitch)
 from .engine import (PushPullEngine, VertexProgram, EngineResult, Phase,
                      PhaseProgram)
 from .linalg import (Semiring, PLUS_TIMES, MIN_PLUS, OR_AND, spmv_pull,
@@ -16,8 +18,10 @@ from .primitives import (push_relax, pull_relax, pull_relax_ell, k_filter,
 __all__ = [
     "ExchangeBackend", "DenseBackend", "EllBackend", "DistributedBackend",
     "require_backend",
-    "Cost", "zero_cost", "counter", "counter_dtype",
+    "Cost", "CostPredictor", "CostWeights", "DEFAULT_WEIGHTS", "StepStats",
+    "StepTrace", "zero_cost", "counter", "counter_dtype",
     "Direction", "DirectionPolicy", "Fixed", "GenericSwitch", "GreedySwitch",
+    "AutoSwitch",
     "PushPullEngine", "VertexProgram", "EngineResult", "Phase",
     "PhaseProgram",
     "Semiring", "PLUS_TIMES", "MIN_PLUS", "OR_AND", "spmv_pull",

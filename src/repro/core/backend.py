@@ -57,8 +57,31 @@ def require_backend(algorithm: str, backend, *allowed) -> None:
 
 @dataclasses.dataclass(frozen=True)
 class ExchangeBackend:
-    """Protocol: subclasses implement ``push`` and ``pull``; ``relax``
-    dispatches, including runtime (traced-bool) direction switching."""
+    """Protocol: how one k-relaxation step touches memory.
+
+    Subclasses implement ``push`` (scatter from the frontier, combining
+    writes at destinations) and ``pull`` (private gather into touched
+    destinations); ``relax`` dispatches between them, including runtime
+    (traced-bool) direction switching so direction policies can choose
+    per step inside jitted loops. Both must return
+    ``(combined_msgs, cost)`` with the §4 counters charged.
+
+        >>> from repro.core import EllBackend
+        >>> r = api.solve(g, "pagerank", iters=20,
+        ...               backend=EllBackend())      # doctest: +SKIP
+
+    ``pull_scans_all`` tells the cost predictor whether this backend's
+    pull reads every edge regardless of the touched destination set
+    (true for rectangular layouts like ELL); the engine folds it into
+    the :class:`~repro.core.cost_model.StepStats` it hands to switching
+    policies.
+    """
+
+    # ELL-style layouts gather all m edges even for sparse destination
+    # sets; dense/distributed pulls only scan the touched rows. Class
+    # attribute, not a field: it is a property of the layout, not of an
+    # instance.
+    pull_scans_all = False
 
     def push(self, g: Graph, values: jax.Array, frontier: jax.Array,
              combine: str, msg_fn: Optional[Callable],
@@ -108,6 +131,8 @@ class DenseBackend(ExchangeBackend):
 class EllBackend(ExchangeBackend):
     """Pull in the ELL layout (rectangular VMEM tiles — what the
     ``ell_spmv`` Pallas kernel consumes); push falls back to COO."""
+
+    pull_scans_all = True
 
     def push(self, g, values, frontier, combine, msg_fn, cost):
         return push_relax(g, values, frontier, combine=combine,

@@ -1,5 +1,5 @@
-"""PRAM cost counters — the analytic replacement for the paper's PAPI
-tables (paper §4, Table 1).
+"""PRAM cost counters and the per-step cost *predictor* (paper §4,
+Table 1; §5 switching strategies).
 
 On CPU the paper counts reads, writes, atomics (combining writes to ints),
 and locks (combining writes to floats, since CPUs lack float atomics).
@@ -10,11 +10,24 @@ paper defines them and validate Table 1's structure analytically.
 
 Counters are jnp int64 scalars inside a registered-dataclass pytree so they
 can ride through jit / while_loop carries.
+
+Three layers live here:
+
+  * :class:`Cost` — the accumulated counters (what actually happened);
+    ``Cost.weighted_total`` collapses them to one comparable scalar.
+  * :class:`CostPredictor` — the forward model: *predicted* weighted cost
+    of a push vs a pull step from cheap frontier statistics (frontier
+    size, out/in-degree sums of the active set, backend layout), before
+    the step runs. ``AutoSwitch`` compares the two predictions each step.
+  * :class:`StepTrace` — a fixed-capacity per-step record of what each
+    step actually did (direction, frontier stats, counter deltas),
+    carried through ``lax.while_loop`` and surfaced on ``RunResult``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +37,9 @@ import jax.numpy as jnp
 # default is safe and keeps the counter pytrees honest.
 jax.config.update("jax_enable_x64", True)
 
-__all__ = ["Cost", "zero_cost", "counter_dtype", "counter"]
+__all__ = ["Cost", "zero_cost", "counter_dtype", "counter",
+           "CostWeights", "DEFAULT_WEIGHTS", "CostPredictor", "StepStats",
+           "StepTrace"]
 
 
 def counter_dtype():
@@ -90,6 +105,168 @@ class Cost:
         return {f.name: int(getattr(self, f.name))
                 for f in dataclasses.fields(self)}
 
+    def weighted_total(self, weights: "CostWeights" = None) -> jax.Array:
+        """Collapse the §4 memory counters to one comparable scalar.
+
+        This is the repo's scalar "counter cost": the number AutoSwitch
+        minimizes and the benchmark matrix reports per cell.
+
+            >>> c = Cost().charge(reads=10).charge_combining_writes(
+            ...     4, float_data=False)
+            >>> int(c.weighted_total())    # 10r + 4w + 4 atomics * 2
+            22
+        """
+        w = DEFAULT_WEIGHTS if weights is None else weights
+        return (self.reads * w.read + self.writes * w.write
+                + self.atomics * w.atomic + self.locks * w.lock)
+
 
 def zero_cost() -> Cost:
     return Cost()
+
+
+@dataclasses.dataclass(frozen=True)
+class CostWeights:
+    """Relative price of the paper's §4 access categories.
+
+    A plain read/write is the unit; an atomic (int combining write,
+    CPU FAA/CAS) costs a few units; a lock (float combining write — 'no
+    CPUs offer atomics operating on such values', §4.1) costs more. The
+    defaults are deliberately coarse: AutoSwitch only needs the *ordering*
+    of push vs pull per step, which is robust to the exact ratios.
+    """
+    read: float = 1.0
+    write: float = 1.0
+    atomic: float = 2.0
+    lock: float = 4.0
+
+
+DEFAULT_WEIGHTS = CostWeights()
+
+
+class StepStats(NamedTuple):
+    """Cheap pre-step statistics the engine computes for switching
+    policies (one pass over degree arrays — no edge traversal).
+
+    ``frontier_edges`` is the push work bound (Σ out-degree of the
+    frontier); ``pull_edges``/``pull_vertices`` bound the pull side for
+    the *program's actual* destination set under the *backend's actual*
+    layout (ELL pull scans all ``m`` edges regardless of the touched
+    set); ``unvisited_edges`` is Beamer's unexplored-edge count used by
+    ``GenericSwitch``. ``float_data`` and ``k_filter_push`` are static
+    (trace-time) facts about the step: whether push conflicts resolve as
+    locks or atomics, and whether a push step pays the paper's k-filter.
+    """
+    frontier_vertices: jax.Array
+    frontier_edges: jax.Array
+    pull_edges: jax.Array
+    pull_vertices: jax.Array
+    unvisited_edges: jax.Array
+    step: jax.Array
+    prev_push: jax.Array
+    float_data: bool = False
+    k_filter_push: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class CostPredictor:
+    """Forward model of one k-relaxation step — §4's cost derivations
+    turned into a predictor.
+
+    Predicts the :meth:`Cost.weighted_total` a push or pull step will
+    charge, from :class:`StepStats` alone:
+
+      push: k reads + k combining writes over the frontier's k incident
+            out-edges (atomics for int payloads, locks for float), plus
+            the k-filter compaction when the program declares one;
+      pull: one read per in-edge of the touched destination set (all m
+            under a dense destination set or the ELL layout) plus one
+            private write per touched destination.
+
+    The engine charges the *same* formulas after the step runs, so the
+    prediction is exact for exchange steps — which is what lets tests
+    assert AutoSwitch's totals (provably at ``hysteresis=1.0``, and in
+    practice at the default) never exceed the better fixed direction.
+    """
+    weights: CostWeights = DEFAULT_WEIGHTS
+
+    def predict_push(self, stats: StepStats) -> jax.Array:
+        w = self.weights
+        combining = w.lock if stats.float_data else w.atomic
+        k = stats.frontier_edges
+        cost = k * (w.read + w.write + combining)
+        if stats.k_filter_push:
+            # k-filter compacts the updated set (≤ the frontier's edge
+            # span; its size is only known post-step, so bound it by the
+            # frontier size — the compacted set rarely exceeds it)
+            cost = cost + stats.frontier_vertices * (w.read + w.write)
+        return cost
+
+    def predict_pull(self, stats: StepStats) -> jax.Array:
+        w = self.weights
+        return (stats.pull_edges * w.read
+                + stats.pull_vertices * w.write)
+
+
+_B = lambda c: jnp.zeros((c,), bool)              # noqa: E731
+_C = lambda c: jnp.zeros((c,), counter_dtype())   # noqa: E731
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StepTrace:
+    """Fixed-capacity per-step record of what the engine actually did.
+
+    One slot per executed step (across all phases and epochs, in order):
+    the chosen direction, the frontier statistics the decision saw, and
+    the step's *delta* of the four §4 memory counters. Rides through
+    ``lax.while_loop`` carries, so capacity is static; steps beyond
+    capacity are dropped (``RunResult.steps`` still counts them).
+
+        >>> r = api.solve(g, "bfs", root=0, policy="auto", trace=64)
+        >>> r.trace.as_dict(int(r.steps))["pushed"]   # doctest: +SKIP
+        [True, True, False, False, True]
+    """
+    pushed: jax.Array
+    frontier_vertices: jax.Array
+    frontier_edges: jax.Array
+    reads: jax.Array
+    writes: jax.Array
+    atomics: jax.Array
+    locks: jax.Array
+
+    @classmethod
+    def empty(cls, capacity: int) -> "StepTrace":
+        return cls(pushed=_B(capacity), frontier_vertices=_C(capacity),
+                   frontier_edges=_C(capacity), reads=_C(capacity),
+                   writes=_C(capacity), atomics=_C(capacity),
+                   locks=_C(capacity))
+
+    @property
+    def capacity(self) -> int:
+        return self.pushed.shape[0]
+
+    def record(self, idx, pushed, stats: StepStats,
+               delta: Cost) -> "StepTrace":
+        """Write one step's record at ``idx`` (out-of-range drops)."""
+        put = lambda arr, v: arr.at[idx].set(  # noqa: E731
+            jnp.asarray(v, arr.dtype), mode="drop")
+        return StepTrace(
+            pushed=put(self.pushed, pushed),
+            frontier_vertices=put(self.frontier_vertices,
+                                  stats.frontier_vertices),
+            frontier_edges=put(self.frontier_edges, stats.frontier_edges),
+            reads=put(self.reads, delta.reads),
+            writes=put(self.writes, delta.writes),
+            atomics=put(self.atomics, delta.atomics),
+            locks=put(self.locks, delta.locks))
+
+    def as_dict(self, steps: int = None) -> dict:
+        """Python-native view, trimmed to the first ``steps`` slots."""
+        k = self.capacity if steps is None else min(steps, self.capacity)
+        out = {}
+        for f in dataclasses.fields(self):
+            col = jax.device_get(getattr(self, f.name)[:k])
+            out[f.name] = [bool(x) if f.name == "pushed" else int(x)
+                           for x in col]
+        return out

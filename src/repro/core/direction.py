@@ -14,6 +14,17 @@ loops (`lax.cond` on the boolean they return):
     drops below ``tail_frac * n`` the algorithm exits the parallel loop and
     a sequential/greedy tail finishes the job (paper §5-GrS; the tail
     runner is supplied by each algorithm).
+  * ``AutoSwitch``       — cost-model-driven: each step the engine hands
+    the policy :class:`~repro.core.cost_model.StepStats` (frontier size,
+    out/in-degree sums of the active set, backend layout facts) and a
+    :class:`~repro.core.cost_model.CostPredictor` prices a push step vs a
+    pull step in the paper's §4 counter categories; the cheaper predicted
+    direction wins, with hysteresis so a marginal difference never
+    thrashes the direction back and forth.
+
+The engine calls :meth:`DirectionPolicy.decide` (stats-based); the legacy
+:meth:`decide_push` surface remains for policies written against PR-1/2
+and for direct use in notebooks.
 """
 
 from __future__ import annotations
@@ -25,10 +36,11 @@ import jax
 import jax.numpy as jnp
 
 from ..graphs.structure import Graph
+from .cost_model import CostPredictor, StepStats
 from .primitives import frontier_out_edges
 
 __all__ = ["Direction", "Fixed", "GenericSwitch", "GreedySwitch",
-           "DirectionPolicy"]
+           "AutoSwitch", "DirectionPolicy"]
 
 
 class Direction(enum.Enum):
@@ -39,11 +51,34 @@ class Direction(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class DirectionPolicy:
-    """Base: decide_push(graph, frontier, unvisited) -> bool[] (traced)."""
+    """Per-step direction chooser — the strategy axis of ``api.solve``.
+
+    Subclasses implement :meth:`decide` (or the legacy
+    :meth:`decide_push`): a pure, trace-friendly function returning a
+    boolean scalar (True = push) that the engine feeds to ``lax.cond``.
+
+        >>> from repro.core import GenericSwitch
+        >>> r = api.solve(g, "bfs", root=0,
+        ...               policy=GenericSwitch())    # doctest: +SKIP
+
+    ``api.solve`` also accepts the string shorthands ``"push"``,
+    ``"pull"``, ``"gs"``, ``"grs"``, and ``"auto"`` in place of an
+    instance.
+    """
 
     def decide_push(self, g: Graph, frontier: jax.Array,
                     unvisited_edges: jax.Array) -> jax.Array:
+        """Legacy surface: decide from (frontier, unvisited edges)."""
         raise NotImplementedError
+
+    def decide(self, g: Graph, frontier: jax.Array,
+               stats: StepStats) -> jax.Array:
+        """Decide from the engine's full :class:`StepStats`.
+
+        Default delegates to :meth:`decide_push`, so policies written
+        against the PR-1 interface keep working unchanged.
+        """
+        return self.decide_push(g, frontier, stats.unvisited_edges)
 
     @property
     def name(self) -> str:
@@ -52,14 +87,23 @@ class DirectionPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class Fixed(DirectionPolicy):
+    """Always run one direction — the paper's baseline columns.
+
+        >>> api.solve(g, "pagerank", iters=20,
+        ...           policy=Fixed(Direction.PULL))  # doctest: +SKIP
+
+    ``Fixed(Direction.AUTO)`` is rejected: "auto" is a switching
+    strategy (use ``AutoSwitch()`` / ``policy="auto"``), not a direction
+    a fixed policy can run.
+    """
     direction: Direction = Direction.PUSH
 
     def __post_init__(self):
         if self.direction == Direction.AUTO:
             raise ValueError(
                 "Fixed(Direction.AUTO) is not a policy: Fixed always runs "
-                "one direction. Use GenericSwitch() (or GreedySwitch()) "
-                "for automatic direction optimization.")
+                "one direction. Use AutoSwitch() (or GenericSwitch() / "
+                "GreedySwitch()) for automatic direction optimization.")
 
     def decide_push(self, g, frontier, unvisited_edges):
         return jnp.asarray(self.direction == Direction.PUSH)
@@ -71,11 +115,13 @@ class Fixed(DirectionPolicy):
 
 @dataclasses.dataclass(frozen=True)
 class GenericSwitch(DirectionPolicy):
-    """Beamer-style direction optimization.
+    """Beamer-style direction optimization (paper §5-GS).
 
     push iff  m_frontier < unvisited_edges / alpha   (growing phase)
           or  m_frontier < m / beta                  (shrinking tail).
     Defaults follow Beamer et al. (alpha=14, beta=24).
+
+        >>> api.solve(g, "bfs", root=0, policy="gs")  # doctest: +SKIP
     """
     alpha: float = 14.0
     beta: float = 24.0
@@ -89,7 +135,12 @@ class GenericSwitch(DirectionPolicy):
 
 @dataclasses.dataclass(frozen=True)
 class GreedySwitch(DirectionPolicy):
-    """GS + terminal greedy hand-off once the active set is tiny."""
+    """GS + terminal greedy hand-off once the active set is tiny
+    (paper §5-GrS). Algorithms opt in by supplying a ``tail_fn``; without
+    one the policy behaves exactly like its inner ``GenericSwitch``.
+
+        >>> api.solve(g, "wcc", policy="grs")         # doctest: +SKIP
+    """
     inner: GenericSwitch = dataclasses.field(default_factory=GenericSwitch)
     tail_frac: float = 0.001
 
@@ -98,3 +149,68 @@ class GreedySwitch(DirectionPolicy):
 
     def should_handoff(self, g: Graph, active_count: jax.Array) -> jax.Array:
         return active_count < jnp.maximum(1, int(self.tail_frac * g.n))
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoSwitch(DirectionPolicy):
+    """Cost-model-driven direction optimization.
+
+    Where ``GenericSwitch`` hard-codes Beamer's BFS thresholds, AutoSwitch
+    prices both directions with the §4 cost model each step and takes the
+    cheaper one:
+
+        push ≈ k·(read + write + combining)   over the frontier's k
+                                              incident out-edges
+        pull ≈ in-edges(touched)·read + |touched|·write
+
+    using the *program's* actual pull destination set and the *backend's*
+    actual layout (ELL pull scans all m edges), both delivered by the
+    engine in :class:`~repro.core.cost_model.StepStats`. Because the
+    engine charges the same formulas after the step, the prediction is
+    exact for exchange steps: with ``hysteresis=1.0`` every step takes
+    the per-step optimum, so the counter total is provably never worse
+    than the better of Fixed(PUSH)/Fixed(PULL) on a fixed frontier
+    trajectory.
+
+    ``hysteresis`` > 1 keeps the current direction unless the other side
+    is cheaper by that factor, so near-ties don't thrash (a direction
+    flip costs a layout change on real hardware even though the counter
+    model prices it at zero). It also relaxes the bound: each step is
+    then only within that factor of the per-step optimum, so the default
+    of 1.1 trades a ≤10% worst-case slack for decision stability.
+
+        >>> r = api.solve(g, "bfs", root=0, policy="auto")  # doctest: +SKIP
+        >>> r = api.solve(g, "bfs", root=0,
+        ...               policy=AutoSwitch(hysteresis=1.5))  # doctest: +SKIP
+    """
+    predictor: CostPredictor = CostPredictor()
+    hysteresis: float = 1.1
+
+    def predict(self, stats: StepStats) -> tuple[jax.Array, jax.Array]:
+        """(predicted push cost, predicted pull cost) for this step."""
+        return (self.predictor.predict_push(stats),
+                self.predictor.predict_pull(stats))
+
+    def decide(self, g, frontier, stats: StepStats):
+        pp, pl = self.predict(stats)
+        pp = pp.astype(jnp.float64 if jax.config.jax_enable_x64
+                       else jnp.float32)
+        pl = pl.astype(pp.dtype)
+        # the first step has no incumbent: compare raw predictions
+        h = jnp.where(stats.step == 0, 1.0, self.hysteresis)
+        pp_eff = jnp.where(stats.prev_push, pp, pp * h)
+        pl_eff = jnp.where(stats.prev_push, pl * h, pl)
+        return pp_eff < pl_eff
+
+    def decide_push(self, g, frontier, unvisited_edges):
+        # degraded legacy surface: price pull as the unvisited scan (the
+        # BFS-style case) and compare raw predictions — there is no real
+        # incumbent here, so step=0 routes around the hysteresis; exact
+        # stats arrive via decide()
+        mf = frontier_out_edges(g, frontier)
+        stats = StepStats(
+            frontier_vertices=jnp.sum(frontier), frontier_edges=mf,
+            pull_edges=unvisited_edges, pull_vertices=jnp.sum(~frontier),
+            unvisited_edges=unvisited_edges, step=jnp.int32(0),
+            prev_push=jnp.bool_(False))
+        return self.decide(g, frontier, stats)

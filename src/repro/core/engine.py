@@ -38,12 +38,24 @@ or a pull k-relaxation (gather into destinations) under a
 DirectionPolicy, with only the chosen direction evaluated at runtime
 (``lax.cond``) — and, orthogonally, through a pluggable
 :class:`~repro.core.backend.ExchangeBackend` (dense / ELL / distributed).
+Before each step of a *switching* policy the engine assembles
+:class:`~repro.core.cost_model.StepStats` — frontier size, the frontier's
+out-edge sum, the in-edge sum of the program's actual pull destination
+set under the backend's actual layout, and the unvisited-edge count —
+and hands it to ``policy.decide``; ``AutoSwitch`` prices both directions
+with the §4 cost model from exactly these statistics. ``Fixed`` policies
+keep their static fast path: only the chosen direction is traced and no
+statistics are computed.
 
 Every phase loop carries a real *visited* mask (the union of every
 frontier so far), so ``GenericSwitch``'s growing-phase test sees the
 actual unvisited edge count, and push steps pay the paper's k-filter
-compaction. ``state`` may be any pytree; it is the only channel between
-phases and epochs, so the carry structure must be stable across them.
+compaction. With ``trace_capacity > 0`` the loop also carries a
+:class:`~repro.core.cost_model.StepTrace` recording, per executed step,
+the chosen direction, the frontier statistics, and the step's counter
+deltas — the raw material for ``BENCH_*.json`` trajectories. ``state``
+may be any pytree; it is the only channel between phases and epochs, so
+the carry structure must be stable across them.
 """
 
 from __future__ import annotations
@@ -57,9 +69,9 @@ import jax.numpy as jnp
 
 from ..graphs.structure import Graph
 from .backend import DenseBackend, ExchangeBackend
-from .cost_model import Cost, counter_dtype
+from .cost_model import Cost, StepStats, StepTrace, counter, counter_dtype
 from .direction import Direction, DirectionPolicy, Fixed, GreedySwitch
-from .primitives import frontier_in_edges, k_filter
+from .primitives import frontier_in_edges, frontier_out_edges, k_filter
 
 __all__ = ["VertexProgram", "Phase", "PhaseProgram", "PushPullEngine",
            "EngineResult"]
@@ -150,6 +162,7 @@ class EngineResult(NamedTuple):
     push_steps: jax.Array
     converged: jax.Array = jnp.bool_(True)
     epochs: jax.Array = jnp.int32(1)
+    trace: Any = None            # StepTrace when trace_capacity > 0
 
 
 class _Loop(NamedTuple):
@@ -161,6 +174,8 @@ class _Loop(NamedTuple):
     step: jax.Array
     cost: Cost
     pushes: jax.Array
+    last_push: jax.Array
+    trace: StepTrace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,10 +184,34 @@ class PushPullEngine:
     policy: DirectionPolicy = Fixed(Direction.PULL)
     max_steps: int = 100
     backend: ExchangeBackend = DenseBackend()
+    # > 0 allocates a StepTrace of that many slots and records every
+    # executed step into it (overflow steps are dropped); 0 = no tracing,
+    # no overhead
+    trace_capacity: int = 0
+
+    def _step_stats(self, g: Graph, prog: VertexProgram, st: _Loop,
+                    unvisited, touched, values) -> StepStats:
+        """The decision inputs for this step — §4's quantities, computed
+        from degree sums only (no edge traversal)."""
+        if touched is None or self.backend.pull_scans_all:
+            pull_edges, pull_vertices = counter(g.m), counter(g.n)
+        else:
+            pull_edges = frontier_in_edges(g, touched)
+            pull_vertices = jnp.sum(touched.astype(counter_dtype()))
+        float_data = bool(values is not None
+                          and jnp.issubdtype(values.dtype, jnp.floating))
+        return StepStats(
+            frontier_vertices=jnp.sum(
+                st.frontier.astype(counter_dtype())),
+            frontier_edges=frontier_out_edges(g, st.frontier),
+            pull_edges=pull_edges, pull_vertices=pull_vertices,
+            unvisited_edges=frontier_in_edges(g, unvisited),
+            step=st.step, prev_push=st.last_push,
+            float_data=float_data, k_filter_push=prog.k_filter_push)
 
     # -- one phase: the classic fixed-point loop --------------------------
     def _run_phase(self, g: Graph, phase: Phase, state0, frontier0, epoch,
-                   cost0: Cost, steps0, pushes0):
+                   cost0: Cost, steps0, pushes0, trace0: StepTrace):
         prog = phase.program
         values_fn = prog.values_fn or (lambda g_, s, f: s)
         greedy = (isinstance(self.policy, GreedySwitch)
@@ -181,6 +220,7 @@ class PushPullEngine:
         # traced/compiled (switching policies pay the lax.cond).
         fixed_dir = (self.policy.direction
                      if isinstance(self.policy, Fixed) else None)
+        tracing = self.trace_capacity > 0
 
         if phase.enter_fn is not None:
             state0, frontier0 = phase.enter_fn(g, state0, frontier0, epoch)
@@ -191,17 +231,10 @@ class PushPullEngine:
 
         def body(st: _Loop):
             unvisited = ~st.visited
-            if fixed_dir is not None:
-                direction = fixed_dir
-                do_push = jnp.bool_(fixed_dir == Direction.PUSH)
-            else:
-                unvisited_edges = frontier_in_edges(g, unvisited)
-                direction = do_push = self.policy.decide_push(
-                    g, st.frontier, unvisited_edges)
-            cost = st.cost
+            # the program's pull destination set and wire values are
+            # direction-independent, so they can inform the decision
             if prog.local_fn is not None:
-                state, frontier, conv, cost = prog.local_fn(
-                    g, st.state, st.frontier, st.step, do_push, cost)
+                values = touched = None
             else:
                 values = values_fn(g, st.state, st.frontier)
                 if prog.touched_fn is not None:
@@ -211,6 +244,20 @@ class PushPullEngine:
                     touched = unvisited
                 else:
                     touched = None
+            stats = (self._step_stats(g, prog, st, unvisited, touched,
+                                      values)
+                     if (fixed_dir is None or tracing) else None)
+            if fixed_dir is not None:
+                direction = fixed_dir
+                do_push = jnp.bool_(fixed_dir == Direction.PUSH)
+            else:
+                direction = do_push = self.policy.decide(
+                    g, st.frontier, stats)
+            cost = st.cost
+            if prog.local_fn is not None:
+                state, frontier, conv, cost = prog.local_fn(
+                    g, st.state, st.frontier, st.step, do_push, cost)
+            else:
                 msgs, cost = self.backend.relax(
                     g, values, st.frontier, direction=direction,
                     combine=prog.combine, msg_fn=prog.msg_fn,
@@ -235,17 +282,24 @@ class PushPullEngine:
             if greedy:
                 active = jnp.sum(frontier.astype(counter_dtype()))
                 handoff = (~conv) & self.policy.should_handoff(g, active)
+            trace = st.trace
+            if tracing:
+                delta = jax.tree.map(lambda a, b: a - b, cost, st.cost)
+                trace = st.trace.record(steps0 + st.step, do_push, stats,
+                                        delta)
             return _Loop(state=state, frontier=frontier,
                          visited=st.visited | frontier, converged=conv,
                          handoff=handoff, step=st.step + 1, cost=cost,
-                         pushes=st.pushes + do_push.astype(jnp.int32))
+                         pushes=st.pushes + do_push.astype(jnp.int32),
+                         last_push=do_push, trace=trace)
 
         # an empty entering frontier is already converged (matches the
         # seed loops, whose cond checked the frontier before any work)
         init = _Loop(state=state0, frontier=frontier0, visited=frontier0,
                      converged=~jnp.any(frontier0),
                      handoff=jnp.bool_(False), step=jnp.int32(0),
-                     cost=cost0, pushes=jnp.int32(0))
+                     cost=cost0, pushes=jnp.int32(0),
+                     last_push=jnp.bool_(False), trace=trace0)
         fin = jax.lax.while_loop(cond, body, init)
 
         state, frontier, cost = fin.state, fin.frontier, fin.cost
@@ -260,7 +314,7 @@ class PushPullEngine:
         if phase.exit_fn is not None:
             state, frontier, cost = phase.exit_fn(g, state, frontier, cost)
         return (state, frontier, cost, steps0 + fin.step,
-                pushes0 + fin.pushes, converged)
+                pushes0 + fin.pushes, converged, fin.trace)
 
     # -- the full program: phases under an epoch loop ---------------------
     @partial(jax.jit, static_argnames=("self",))
@@ -277,48 +331,56 @@ class PushPullEngine:
                             max_steps=self.max_steps),)
             max_epochs, epoch_cond, epoch_exit = 1, None, None
 
-        def run_epoch(state, frontier, epoch, cost, steps, pushes):
+        trace0 = StepTrace.empty(self.trace_capacity)
+
+        def run_epoch(state, frontier, epoch, cost, steps, pushes, trace):
             conv = jnp.bool_(True)
             for ph in phases:         # statically unrolled: phases differ
-                state, frontier, cost, steps, pushes, conv = \
+                state, frontier, cost, steps, pushes, conv, trace = \
                     self._run_phase(g, ph, state, frontier, epoch, cost,
-                                    steps, pushes)
+                                    steps, pushes, trace)
             if epoch_exit is not None:
                 state, frontier = epoch_exit(g, state, frontier, epoch)
-            return state, frontier, cost, steps, pushes, conv
+            return state, frontier, cost, steps, pushes, conv, trace
+
+        def result(state, cost, steps, pushes, converged, epochs, trace):
+            return EngineResult(
+                state=state, cost=cost, steps=steps, push_steps=pushes,
+                converged=converged, epochs=epochs,
+                trace=trace if self.trace_capacity > 0 else None)
 
         if max_epochs == 1 and epoch_cond is None:
             # single-epoch programs (the PR-1 algorithms) skip the outer
             # loop entirely — same trace as the old flat engine
-            state, frontier, cost, steps, pushes, conv = run_epoch(
+            state, frontier, cost, steps, pushes, conv, trace = run_epoch(
                 init_state, init_frontier, jnp.int32(0), Cost(),
-                jnp.int32(0), jnp.int32(0))
-            return EngineResult(state=state, cost=cost, steps=steps,
-                                push_steps=pushes, converged=conv,
-                                epochs=jnp.int32(1))
+                jnp.int32(0), jnp.int32(0), trace0)
+            return result(state, cost, steps, pushes, conv, jnp.int32(1),
+                          trace)
 
         def cond(carry):
-            state, frontier, epoch, cost, steps, pushes, conv = carry
+            (state, frontier, epoch, cost, steps, pushes, conv,
+             trace) = carry
             go = epoch < max_epochs
             if epoch_cond is not None:
                 go = go & epoch_cond(g, state, epoch)
             return go
 
         def body(carry):
-            state, frontier, epoch, cost, steps, pushes, _ = carry
-            state, frontier, cost, steps, pushes, conv = run_epoch(
-                state, frontier, epoch, cost, steps, pushes)
-            return (state, frontier, epoch + 1, cost, steps, pushes, conv)
+            state, frontier, epoch, cost, steps, pushes, _, trace = carry
+            state, frontier, cost, steps, pushes, conv, trace = run_epoch(
+                state, frontier, epoch, cost, steps, pushes, trace)
+            return (state, frontier, epoch + 1, cost, steps, pushes, conv,
+                    trace)
 
         init = (init_state, init_frontier, jnp.int32(0), Cost(),
-                jnp.int32(0), jnp.int32(0), jnp.bool_(True))
-        state, frontier, epochs, cost, steps, pushes, conv = \
+                jnp.int32(0), jnp.int32(0), jnp.bool_(True), trace0)
+        state, frontier, epochs, cost, steps, pushes, conv, trace = \
             jax.lax.while_loop(cond, body, init)
         if epoch_cond is not None:
             # converged iff the work test (not the epoch bound) ended it
             converged = ~epoch_cond(g, state, epochs)
         else:
             converged = conv
-        return EngineResult(state=state, cost=cost, steps=steps,
-                            push_steps=pushes, converged=converged,
-                            epochs=epochs)
+        return result(state, cost, steps, pushes, converged, epochs,
+                      trace)

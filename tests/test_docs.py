@@ -1,0 +1,143 @@
+"""docs/ stays honest: the algorithms page must cover the live registry,
+the docs tree must exist and be linked, and benchmark reports must
+validate against the checked-in schema.
+
+These run in tier-1 (and as a dedicated CI step), so registering an
+algorithm without documenting it — or changing the report shape without
+updating the schema — fails the build."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = ROOT / "docs"
+
+
+def test_docs_tree_exists():
+    for page in ("architecture.md", "push-pull.md", "algorithms.md",
+                 "results.md"):
+        assert (DOCS / page).is_file(), f"missing docs/{page}"
+
+
+def test_readme_links_docs():
+    readme = (ROOT / "README.md").read_text()
+    for page in ("docs/architecture.md", "docs/push-pull.md",
+                 "docs/algorithms.md", "docs/results.md"):
+        assert page in readme, f"README does not link {page}"
+
+
+def test_every_registered_algorithm_documented():
+    """The CI gate from the issue: import the registry, fail if an
+    algorithm is missing from docs/algorithms.md."""
+    from repro import api
+    page = (DOCS / "algorithms.md").read_text()
+    missing = [name for name in api.algorithms()
+               if f"## `{name}`" not in page]
+    assert not missing, (
+        f"algorithms registered but undocumented in docs/algorithms.md: "
+        f"{missing} — add a '## `<name>`' section for each")
+
+
+def test_algorithm_sections_show_solve_calls():
+    """Each documented section carries a runnable api.solve call."""
+    from repro import api
+    page = (DOCS / "algorithms.md").read_text()
+    for name in api.algorithms():
+        assert f'api.solve(g, "{name}"' in page, (
+            f"docs/algorithms.md section for {name} lacks the exact "
+            f"api.solve() call")
+
+
+def test_no_stale_algorithm_sections():
+    """Sections for unregistered algorithms are as wrong as missing
+    ones."""
+    import re
+    from repro import api
+    page = (DOCS / "algorithms.md").read_text()
+    documented = set(re.findall(r"^## `([a-z_0-9]+)`", page, re.M))
+    stale = documented - set(api.algorithms())
+    assert not stale, f"documented but not registered: {sorted(stale)}"
+
+
+def test_push_pull_page_covers_all_policies():
+    page = (DOCS / "push-pull.md").read_text()
+    for policy in ("Fixed", "GenericSwitch", "GreedySwitch", "AutoSwitch"):
+        assert policy in page
+
+
+# -- benchmark report schema --------------------------------------------
+def _sample_report():
+    return {
+        "rows": [
+            {"name": "api_bfs_push_dense", "us_per_call": 12.5,
+             "derived": "free-text"},
+            {"name": "pushpull_bfs_rmat_auto_dense", "us_per_call": 10.0,
+             "derived": {
+                 "algorithm": "bfs", "graph": "rmat", "n": 128, "m": 982,
+                 "policy": "auto", "backend": "dense", "steps": 5,
+                 "push_steps": 2, "epochs": 1, "converged": True,
+                 "wall_us": 10.0,
+                 "counters": {"reads": 1, "writes": 1, "atomics": 0,
+                              "locks": 0, "messages": 0,
+                              "collective_bytes": 0, "barriers": 5,
+                              "iterations": 5},
+                 "weighted_total": 2.0}},
+        ],
+        "failures": [],
+    }
+
+
+def test_schema_accepts_valid_report():
+    from benchmarks.validate import validate_report
+    assert validate_report(_sample_report())
+
+
+def test_schema_rejects_malformed_reports():
+    from benchmarks.validate import validate_report
+    bad_missing_rows = {"failures": []}
+    bad_row = {"rows": [{"name": "x"}], "failures": []}
+    bad_cell = _sample_report()
+    del bad_cell["rows"][1]["derived"]["counters"]
+    bad_policy = _sample_report()
+    bad_policy["rows"][1]["derived"]["policy"] = "fastest"
+    for bad in (bad_missing_rows, bad_row, bad_cell, bad_policy):
+        with pytest.raises(Exception):
+            validate_report(bad)
+
+
+def test_builtin_validator_matches_schema_subset():
+    """The fallback validator (no jsonschema installed) enforces the
+    same contract: exercise it directly."""
+    from benchmarks.validate import _check, load_schema
+    schema = load_schema()
+    defs = schema["definitions"]
+    _check(_sample_report(), schema, defs)
+    with pytest.raises(ValueError, match="expected integer"):
+        _check({"rows": [], "failures": []},
+               {"type": "object",
+                "properties": {"rows": {"type": "integer"}}}, defs)
+
+
+def test_committed_bench_json_validates():
+    """The repo's checked-in BENCH_*.json trajectories stay conformant."""
+    from benchmarks.validate import validate_report
+    reports = sorted(ROOT.glob("BENCH_*.json"))
+    assert reports, "no BENCH_*.json trajectory committed at repo root"
+    for path in reports:
+        validate_report(json.loads(path.read_text()))
+
+
+def test_bench_json_covers_matrix():
+    """Acceptance: BENCH_pushpull.json covers all 9 algorithms × ≥4
+    policies."""
+    from repro import api
+    report = json.loads((ROOT / "BENCH_pushpull.json").read_text())
+    cells = [r["derived"] for r in report["rows"]
+             if r["name"].startswith("pushpull_")]
+    algs = {c["algorithm"] for c in cells}
+    assert algs == set(api.algorithms())
+    for alg in algs:
+        policies = {c["policy"] for c in cells if c["algorithm"] == alg}
+        assert len(policies) >= 4, (alg, policies)
