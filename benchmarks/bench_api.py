@@ -36,6 +36,7 @@ def run():
                 ("pull", Fixed(Direction.PULL)),
                 ("gs", GenericSwitch())]
     cases = [("pagerank", {"iters": 10}, g_big),
+             ("ppr", {"source": 0, "tol": 1e-4}, g_big),
              ("bfs", {"root": 0}, g_big),
              ("wcc", {}, g_big),
              ("pr_delta", {"tol": 1e-6}, g_big),

@@ -34,6 +34,7 @@ POLICIES = ("push", "pull", "gs", "grs", "auto")
 KWARGS = {
     "bfs": {"root": 0},
     "pagerank": {"iters": 10},
+    "ppr": {"source": 0, "tol": 1e-5},
     "wcc": {},
     "pr_delta": {"tol": 1e-6},
     "sssp_delta": {"source": 0, "delta": 2.0},

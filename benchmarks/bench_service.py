@@ -1,0 +1,29 @@
+"""Service throughput suite — ``benchmarks.run --only service_throughput``.
+
+Thin wrapper over :mod:`repro.service.bench`: the same (algorithm ×
+policy × batch width) sweep, emitted through ``common.emit`` so the
+rows land in ``benchmarks.run``'s JSON/markdown reports next to the
+push/pull decision matrix. Rows are named ``service_*`` and validate
+against ``benchmarks/schema.json``'s ``service_cell`` definition.
+
+    PYTHONPATH=src python -m benchmarks.run --only service_throughput \
+        [--smoke] [--json PATH] [--markdown PATH]
+"""
+
+from __future__ import annotations
+
+import json
+
+from . import common
+from .common import emit
+
+
+def run():
+    from repro.service import bench as service_bench
+
+    for name, us, payload in service_bench.sweep(smoke=common.SMOKE):
+        emit(name, us, json.dumps(payload))
+
+
+if __name__ == "__main__":
+    run()

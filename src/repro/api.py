@@ -50,6 +50,7 @@ from .core.algorithms.coloring import (coloring_finalize, coloring_init,
 from .core.algorithms.mst_boruvka import (mst_finalize, mst_init,
                                           mst_program)
 from .core.algorithms.pagerank import pagerank_init, pagerank_program
+from .core.algorithms.ppr import ppr_finalize, ppr_init, ppr_program
 from .core.algorithms.pr_delta import (pr_delta_finalize, pr_delta_init,
                                        pr_delta_program)
 from .core.algorithms.sssp_delta import (sssp_delta_finalize,
@@ -68,7 +69,7 @@ from .core.engine import PhaseProgram, PushPullEngine, VertexProgram
 from .graphs.structure import Graph
 
 __all__ = ["RunResult", "AlgorithmSpec", "register", "algorithms",
-           "get_spec", "solve", "POLICY_SHORTHANDS",
+           "get_spec", "solve", "solve_batch", "POLICY_SHORTHANDS",
            "DenseBackend", "EllBackend", "DistributedBackend",
            "ExchangeBackend", "Fixed", "GenericSwitch", "GreedySwitch",
            "AutoSwitch", "Direction"]
@@ -144,11 +145,38 @@ class AlgorithmSpec:
 
 
 _REGISTRY: dict[str, AlgorithmSpec] = {}
-# Built engines keyed by (algorithm, policy, backend, static kwargs, graph
-# shape). Bounded FIFO: a DistributedBackend key pins graph-sized edge
-# arrays, so stale entries must be evictable in long-lived processes.
-_ENGINE_CACHE: dict = {}
-_ENGINE_CACHE_MAX = 128
+
+
+class EngineCache:
+    """Bounded FIFO of built engines keyed by hashable tuples.
+
+    A DistributedBackend key pins graph-sized edge arrays, so stale
+    entries must be evictable in long-lived processes; unhashable keys
+    (e.g. unhashable kwargs) skip caching and rebuild every call.
+    Shared by ``solve`` and the service layer's batched path.
+    """
+
+    def __init__(self, max_size: int = 128):
+        self.max_size = max_size
+        self._data: dict = {}
+
+    def get_or_build(self, key, build: Callable):
+        try:
+            hash(key)
+        except TypeError:
+            return build()
+        engine = self._data.get(key)
+        if engine is None:
+            engine = build()
+            while len(self._data) >= self.max_size:
+                self._data.pop(next(iter(self._data)))
+            self._data[key] = engine
+        return engine
+
+
+# Built engines keyed by (algorithm, policy, backend, static kwargs,
+# graph shape).
+_ENGINE_CACHE = EngineCache()
 
 
 def register(spec: AlgorithmSpec) -> AlgorithmSpec:
@@ -182,6 +210,36 @@ POLICY_SHORTHANDS: dict[str, Callable[[], DirectionPolicy]] = {
 
 # solve(trace=True) records up to this many steps
 _DEFAULT_TRACE_CAPACITY = 256
+
+# runtime kwargs that name vertices and must index into [0, n); JAX
+# scatter semantics would otherwise clip/drop bad indices silently
+_VERTEX_KEYS = ("root", "source")
+
+
+def validate_vertex_indices(g: Graph, name: str, value) -> None:
+    """Raise ``ValueError`` naming any vertex index outside ``[0, n)``.
+
+    ``value`` may be a python int, a 0-d array, or a sequence/array of
+    ints (``solve_batch`` sources). Traced (abstract) values pass
+    through unchecked — inside jit the caller owns validity.
+    """
+    import numpy as np
+    try:
+        arr = np.asarray(value)
+    except Exception:  # traced values have no concrete array view
+        return
+    if arr.size == 0:  # emptiness is the callee's error to report
+        return
+    if arr.dtype == object or not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(
+            f"{name}={value!r} is not a vertex index (expected integer "
+            f"in [0, {g.n}))")
+    bad = (arr < 0) | (arr >= g.n)
+    if bad.any():
+        first = int(arr.reshape(-1)[np.flatnonzero(bad.reshape(-1))[0]])
+        raise ValueError(
+            f"{name} contains vertex index {first} out of range for a "
+            f"graph with n={g.n} vertices (valid: 0..{g.n - 1})")
 
 
 def _resolve_policy(policy) -> DirectionPolicy:
@@ -230,10 +288,14 @@ def solve(g: Graph, algorithm: str, *,
 
     Raises:
         KeyError: unknown algorithm name.
-        ValueError: unknown policy shorthand, or a (policy × backend)
-            combination the algorithm declares unsupported.
+        ValueError: unknown policy shorthand, a (policy × backend)
+            combination the algorithm declares unsupported, or a
+            ``root``/``source`` vertex index outside ``[0, n)``.
     """
     spec = get_spec(algorithm)
+    for vkey in _VERTEX_KEYS:
+        if vkey in kw:
+            validate_vertex_indices(g, vkey, kw[vkey])
     policy = (spec.default_policy if policy is None
               else _resolve_policy(policy))
     backend = DenseBackend() if backend is None else backend
@@ -241,18 +303,7 @@ def solve(g: Graph, algorithm: str, *,
                       else int(trace))
     static_kw = {k: v for k, v in kw.items() if k not in spec.runtime_keys}
 
-    key: Optional[tuple]
-    try:
-        # key on the spec itself: re-registering a name invalidates
-        # cached engines built from the old spec
-        key = (algorithm, spec, policy, backend,
-               tuple(sorted(static_kw.items())),
-               g.n, g.m, g.d_ell, max_steps, trace_capacity)
-        hash(key)
-    except TypeError:
-        key = None
-    engine = _ENGINE_CACHE.get(key) if key is not None else None
-    if engine is None:
+    def build_engine() -> PushPullEngine:
         try:
             program, default_steps = spec.build(
                 g, policy=policy, backend=backend, **static_kw)
@@ -261,20 +312,58 @@ def solve(g: Graph, algorithm: str, *,
                 f"algorithm {algorithm!r} does not support the "
                 f"combination policy={policy.name} × "
                 f"backend={backend.name}: {e}") from e
-        engine = PushPullEngine(
+        return PushPullEngine(
             program=program, policy=policy,
             max_steps=default_steps if max_steps is None else max_steps,
             backend=backend, trace_capacity=trace_capacity)
-        if key is not None:
-            while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
-                _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
-            _ENGINE_CACHE[key] = engine
+
+    # key on the spec itself: re-registering a name invalidates cached
+    # engines built from the old spec
+    engine = _ENGINE_CACHE.get_or_build(
+        (algorithm, spec, policy, backend,
+         tuple(sorted(static_kw.items())),
+         g.n, g.m, g.d_ell, max_steps, trace_capacity), build_engine)
     init_state, init_frontier = spec.init(g, **kw)
     res = engine.run(g, init_state, init_frontier)
     return RunResult(state=spec.finalize(g, res.state), cost=res.cost,
                      steps=res.steps, push_steps=res.push_steps,
                      converged=res.converged, epochs=res.epochs,
                      trace=res.trace)
+
+
+def solve_batch(g: Graph, algorithm: str, *, sources,
+                policy: Optional[DirectionPolicy | str] = None,
+                backend: Optional[ExchangeBackend] = None,
+                max_steps: Optional[int] = None, **kw):
+    """Run one *batched* multi-query solve: B queries of ``algorithm``
+    (one per entry of ``sources``) over one shared graph and backend.
+
+    The batch rides as B payload columns through a single engine run —
+    one jitted program, one graph scan per pull step, one union-frontier
+    scatter per push step — so per-query results are bit-identical to a
+    loop of single-source :func:`solve` calls while throughput scales
+    with the batch width (see ``docs/architecture.md``, service layer).
+
+    Only source-parameterized algorithms with a registered batched
+    program support this path (``repro.service.batchable()``: BFS,
+    Δ-stepping SSSP, personalized PageRank).
+
+    Example::
+
+        br = api.solve_batch(g, "bfs", sources=[0, 5, 9])
+        br.states[1]["dist"]       # == solve(g, "bfs", root=5)["dist"]
+        br.cost.weighted_total()   # whole-batch counter total
+
+    Returns a :class:`repro.service.BatchResult`.
+
+    Raises:
+        KeyError: unknown algorithm, or one without a batched program.
+        ValueError: empty ``sources``, a source index outside
+            ``[0, n)``, or an unsupported (policy × backend) cell.
+    """
+    from .service.batch import solve_batch as _solve_batch
+    return _solve_batch(g, algorithm, sources=sources, policy=policy,
+                        backend=backend, max_steps=max_steps, **kw)
 
 
 # ---------------------------------------------------------------------
@@ -290,6 +379,13 @@ register(AlgorithmSpec(
 register(AlgorithmSpec(
     name="wcc", build=wcc_program, init=wcc_init,
     paper="§3.3 (label propagation)"))
+
+register(AlgorithmSpec(
+    name="ppr", build=ppr_program, init=ppr_init,
+    finalize=ppr_finalize,
+    default_policy=Fixed(Direction.PULL),
+    runtime_keys=("source",), backends=("dense", "ell"),
+    paper="§3.1 (personalized variant; service-layer batching)"))
 
 register(AlgorithmSpec(
     name="pr_delta", build=pr_delta_program, init=pr_delta_init,

@@ -15,6 +15,8 @@ from .coloring import (boman_coloring, fe_coloring, greedy_sequential,
                        coloring_finalize)
 from .mst_boruvka import (boruvka_mst, MSTResult, mst_program, mst_init,
                           mst_finalize)
+from .ppr import (personalized_pagerank, PPRResult, ppr_program,
+                  ppr_init, ppr_finalize)
 from .wcc import wcc, WCCResult, wcc_program, wcc_init
 from .pr_delta import (pagerank_delta, PRDeltaResult, pr_delta_program,
                        pr_delta_init, pr_delta_finalize)
@@ -36,4 +38,6 @@ __all__ = [
     "betweenness_finalize", "coloring_program", "coloring_init",
     "coloring_finalize", "mst_program", "mst_init", "mst_finalize",
     "triangle_program", "triangle_init", "triangle_finalize",
+    "personalized_pagerank", "PPRResult", "ppr_program", "ppr_init",
+    "ppr_finalize",
 ]

@@ -156,6 +156,15 @@ class StepStats(NamedTuple):
     ``GenericSwitch``. ``float_data`` and ``k_filter_push`` are static
     (trace-time) facts about the step: whether push conflicts resolve as
     locks or atomics, and whether a push step pays the paper's k-filter.
+
+    ``width`` is the number of per-vertex payload elements on the wire
+    (static: the trailing dimension of the wire values, 1 for plain
+    vectors). Batched multi-query runs (``repro.service``) put one
+    column per query on the wire and drive the engine with the *union*
+    of the per-query frontiers, so for them ``frontier_edges`` is a
+    union-frontier degree sum and every payload count scales by
+    ``width`` — the batch-aware pricing the service layer's AutoSwitch
+    decisions rest on.
     """
     frontier_vertices: jax.Array
     frontier_edges: jax.Array
@@ -166,6 +175,7 @@ class StepStats(NamedTuple):
     prev_push: jax.Array
     float_data: bool = False
     k_filter_push: bool = False
+    width: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,36 +186,48 @@ class CostPredictor:
     Predicts the :meth:`Cost.weighted_total` a push or pull step will
     charge, from :class:`StepStats` alone:
 
-      push: k reads + k combining writes over the frontier's k incident
-            out-edges (atomics for int payloads, locks for float), plus
-            the k-filter compaction when the program declares one;
-      pull: one read per in-edge of the touched destination set (all m
-            under a dense destination set or the ELL layout) plus one
-            private write per touched destination.
+      push: k·width reads + k·width combining writes over the
+            frontier's k incident out-edges (atomics for int payloads,
+            locks for float), plus the k-filter compaction when the
+            program declares one;
+      pull: width reads per in-edge of the touched destination set (all
+            m under a dense destination set or the ELL layout) plus
+            width private writes per touched destination.
 
     The engine charges the *same* formulas after the step runs, so the
     prediction is exact for exchange steps — which is what lets tests
     assert AutoSwitch's totals (provably at ``hysteresis=1.0``, and in
     practice at the default) never exceed the better fixed direction.
+
+    Batch awareness (``repro.service``): a batched run of B queries
+    drives the engine with the *union* frontier and B-wide payloads, so
+    ``frontier_edges`` here is the union-frontier degree sum and both
+    formulas scale by ``stats.width == B`` — except the k-filter, which
+    compacts the union mask once per step regardless of B. Per query,
+    pull therefore costs the same amortized scan at every batch width
+    while push pays for the whole union, which is what moves the
+    push→pull crossover toward pull as batches widen (frontiers of
+    distinct sources overlap sublinearly, so the union grows with B).
     """
     weights: CostWeights = DEFAULT_WEIGHTS
 
     def predict_push(self, stats: StepStats) -> jax.Array:
         w = self.weights
         combining = w.lock if stats.float_data else w.atomic
-        k = stats.frontier_edges
+        k = stats.frontier_edges * stats.width
         cost = k * (w.read + w.write + combining)
         if stats.k_filter_push:
             # k-filter compacts the updated set (≤ the frontier's edge
             # span; its size is only known post-step, so bound it by the
-            # frontier size — the compacted set rarely exceeds it)
+            # frontier size — the compacted set rarely exceeds it). One
+            # mask compaction per step, batch-width-independent.
             cost = cost + stats.frontier_vertices * (w.read + w.write)
         return cost
 
     def predict_pull(self, stats: StepStats) -> jax.Array:
         w = self.weights
         return (stats.pull_edges * w.read
-                + stats.pull_vertices * w.write)
+                + stats.pull_vertices * w.write) * stats.width
 
 
 _B = lambda c: jnp.zeros((c,), bool)              # noqa: E731

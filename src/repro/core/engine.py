@@ -200,6 +200,10 @@ class PushPullEngine:
             pull_vertices = jnp.sum(touched.astype(counter_dtype()))
         float_data = bool(values is not None
                           and jnp.issubdtype(values.dtype, jnp.floating))
+        # payload elements per vertex on the wire — B for batched
+        # multi-query values [n, B] (repro.service), 1 for plain vectors
+        width = (1 if values is None or values.ndim == 1
+                 else int(values.shape[-1]))
         return StepStats(
             frontier_vertices=jnp.sum(
                 st.frontier.astype(counter_dtype())),
@@ -207,7 +211,8 @@ class PushPullEngine:
             pull_edges=pull_edges, pull_vertices=pull_vertices,
             unvisited_edges=frontier_in_edges(g, unvisited),
             step=st.step, prev_push=st.last_push,
-            float_data=float_data, k_filter_push=prog.k_filter_push)
+            float_data=float_data, k_filter_push=prog.k_filter_push,
+            width=width)
 
     # -- one phase: the classic fixed-point loop --------------------------
     def _run_phase(self, g: Graph, phase: Phase, state0, frontier0, epoch,

@@ -1,0 +1,39 @@
+"""repro.service — batched multi-query graph serving.
+
+The serving layer on top of ``repro.api``: many concurrent queries of
+the *source-parameterized* algorithms (BFS, Δ-stepping SSSP,
+personalized PageRank) ride as payload columns through one shared
+engine run, with batch-aware push/pull switching and a
+continuous-batching scheduler.
+
+Three layers:
+
+  * :mod:`~repro.service.programs` — batched ``VertexProgram`` /
+    ``PhaseProgram`` builders (:class:`BatchSpec` registry): state
+    leaves carry a trailing query axis ``[n, B]``, the engine-level
+    frontier is the *union* of the per-query frontiers, and per-query
+    activity is folded into the wire values (inactive columns carry the
+    combine identity), so per-query results are bit-identical to
+    single-source ``api.solve`` runs.
+  * :mod:`~repro.service.batch` — ``solve_batch`` (also surfaced as
+    ``api.solve_batch``): one batched engine run, per-query result
+    slicing, per-query done masks.
+  * :mod:`~repro.service.scheduler` — :class:`QueryService`:
+    submit/poll over fixed query slots refilled as queries converge
+    (continuous batching at chunk granularity), request grouping by
+    (algorithm, policy, backend, static params), in-flight coalescing,
+    and an LRU :class:`ResultCache` keyed by (graph fingerprint,
+    algorithm, source, params).
+
+Throughput/latency measurement: ``python -m repro.service.bench``.
+"""
+
+from .batch import BatchResult, solve_batch
+from .cache import ResultCache, graph_fingerprint
+from .programs import (BatchSpec, batchable, get_batch_spec,
+                       register_batch)
+from .scheduler import QueryService
+
+__all__ = ["solve_batch", "BatchResult", "BatchSpec", "register_batch",
+           "batchable", "get_batch_spec", "QueryService", "ResultCache",
+           "graph_fingerprint"]

@@ -1,0 +1,163 @@
+"""Service throughput/latency harness — queries/sec vs batch width vs
+policy.
+
+For each (algorithm, direction policy, batch width) cell on an RMAT
+graph, measures the sequential baseline (a loop of single-source
+``api.solve`` calls) against ``api.solve_batch`` over the same sources,
+and reports queries/sec for both plus the batched run's weighted
+counter total (the scalar the batch-aware AutoSwitch minimizes). Rows
+are named ``service_*`` and validate against
+``benchmarks/schema.json``'s ``service_cell`` shape — the same contract
+the ``benchmarks.run`` suite (``--only service_throughput``) and CI's
+smoke step enforce.
+
+    PYTHONPATH=src python -m repro.service.bench [--smoke] [--json PATH]
+
+The committed ``docs/results.md`` snapshot includes the smoke sweep's
+service table (``benchmarks.run --only pushpull_matrix,service_throughput
+--smoke --markdown docs/results.md``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+__all__ = ["sweep", "main"]
+
+ALGORITHMS = {
+    "bfs": {},
+    "ppr": {"tol": 1e-6},
+    "sssp_delta": {"delta": 2.0},
+}
+POLICIES = ("push", "pull", "auto")
+
+
+def _timeit(fn, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock microseconds of ``fn()`` (blocks on result).
+
+    Defers to ``benchmarks.common.timeit`` when the benchmarks package
+    is importable (running from the repo root), so service_* rows are
+    timed exactly like the pushpull_* rows in the same report; the
+    fallback mirrors it for standalone installs.
+    """
+    try:
+        from benchmarks.common import timeit
+    except ImportError:
+        pass
+    else:
+        return timeit(fn, warmup=warmup, iters=iters)
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
+def _graph(smoke: bool):
+    from repro.graphs import kronecker
+    scale = 7 if smoke else 10
+    return "rmat", kronecker(scale, edge_factor=8, seed=7, weighted=True)
+
+
+def _sources(g, width: int) -> list[int]:
+    """Distinct query vertices, highest out-degree first (hubs reach the
+    bulk of the graph, so every query does real work)."""
+    order = np.argsort(-np.asarray(g.out_deg), kind="stable")
+    return [int(order[i % g.n]) for i in range(width)]
+
+
+def sweep(smoke: bool = False, widths=None):
+    """Yield ``(name, us_per_call, payload)`` service throughput rows.
+
+    ``us_per_call`` is the batched run's wall time (one call serves the
+    whole batch); the payload carries both sides of the comparison.
+    """
+    from repro import api
+
+    gname, g = _graph(smoke)
+    if widths is None:
+        widths = (2, 8) if smoke else (1, 2, 4, 8, 16)
+    for alg, kw in ALGORITHMS.items():
+        keys = api.get_spec(alg).runtime_keys
+        src_kw = keys[0] if keys else "source"
+        for policy in POLICIES:
+            for width in widths:
+                sources = _sources(g, width)
+
+                last = {}
+
+                def seq():
+                    out = []
+                    for s in sources:
+                        r = api.solve(g, alg, policy=policy,
+                                      **{src_kw: s}, **kw)
+                        out.append(r.cost.reads)
+                    return out
+
+                def bat():
+                    r = api.solve_batch(g, alg, sources=sources,
+                                        policy=policy, **kw)
+                    last["r"] = r       # reused for the counter payload
+                    return r.cost.reads
+
+                us_seq = _timeit(seq)
+                us_bat = _timeit(bat)
+                r = last["r"]
+                payload = {
+                    "algorithm": alg, "graph": gname,
+                    "n": int(g.n), "m": int(g.m),
+                    "policy": policy, "backend": "dense",
+                    "batch": width, "queries": width,
+                    "us_per_query_batched": round(us_bat / width, 1),
+                    "us_per_query_sequential": round(us_seq / width, 1),
+                    "qps_batched": round(width / (us_bat * 1e-6), 1),
+                    "qps_sequential": round(width / (us_seq * 1e-6), 1),
+                    "speedup": round(us_seq / us_bat, 3),
+                    "steps": int(r.steps),
+                    "push_steps": int(r.push_steps),
+                    "weighted_total": float(r.cost.weighted_total()),
+                }
+                yield (f"service_{alg}_{gname}_{policy}_b{width}",
+                       us_bat, payload)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="service layer throughput/latency harness")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized graph and width set")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows as a schema-conformant JSON report")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for name, us, payload in sweep(smoke=args.smoke):
+        print(f"{name},{us:.1f},{json.dumps(payload)}", flush=True)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": payload})
+    report = {"rows": rows, "failures": []}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"json report: {args.json} ({len(rows)} rows)", flush=True)
+        try:
+            from benchmarks.validate import validate_report
+        except ImportError:
+            print("benchmarks.validate not importable; skipping schema "
+                  "check", flush=True)
+        else:
+            validate_report(report)
+            print("schema ok: benchmarks/schema.json", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

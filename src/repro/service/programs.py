@@ -1,0 +1,423 @@
+"""Batched multi-query programs for the source-parameterized algorithms.
+
+One :class:`BatchSpec` per batchable algorithm. The batched program runs
+on the *same* :class:`~repro.core.engine.PushPullEngine` as the single-
+query one, with three conventions:
+
+  * state leaves carry a trailing query axis — ``[n, B]`` per-vertex
+    fields, ``[B]`` per-query scalars;
+  * the engine-level frontier is the **union** of the per-query
+    frontiers (``bool[n]``) — that is what push scatters from, what the
+    k-filter compacts, and what :class:`~repro.core.cost_model.StepStats`
+    prices (union-frontier degree sums, ``width=B`` payloads);
+  * per-query activity is folded into the wire values: columns where a
+    query is inactive carry the combine identity (BFS's ``>n`` parent
+    sentinel under min, ``inf`` under the SSSP min-plus relaxation,
+    ``0`` under PPR's sum), so a union-frontier exchange delivers
+    exactly the messages each query's own frontier would have.
+
+Because each column sees the same combine over the same edge order as
+its single-source run — and converged queries are frozen, never
+re-updated — per-query results are *bit-identical* to a loop of
+``api.solve`` calls (covered by ``tests/test_service.py``).
+
+Every spec also supplies the hooks continuous batching needs
+(:mod:`~repro.service.scheduler`): a per-query ``done`` mask on top of
+the engine loop, and ``admit`` to splice a fresh query into a retired
+slot between engine chunks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.backend import DenseBackend, EllBackend, require_backend
+from ..core.engine import Phase, PhaseProgram, VertexProgram
+from ..graphs.structure import Graph
+
+__all__ = ["BatchSpec", "register_batch", "batchable", "get_batch_spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSpec:
+    """How an algorithm's batched program plugs into the service layer.
+
+    build(g, batch, *, policy, backend, **static_kw) -> (program,
+        default_max_steps): the batched Vertex-/PhaseProgram; must close
+        over static graph attributes only, like the single-query build.
+    init(g, sources, **kw) -> (state0, union_frontier0).
+    done(g, state, frontier, **kw) -> bool[B]: per-query done mask
+        (True once that query's result can no longer change).
+    extract(g, state, i) -> the i-th query's *public* state pytree —
+        the same keys and values ``api.solve`` would return for that
+        single source.
+    admit(g, state, frontier, slot, source, **kw) -> (state, frontier):
+        splice a fresh query into column ``slot`` (continuous batching;
+        the engine restarts from the returned carry, so epoch-structured
+        programs re-establish their outer-loop alignment on resume).
+    frontier_of(g, state) -> bool[n]: the union frontier to resume the
+        engine from after a chunked run (the engine result carries only
+        state, not its final frontier).
+    runtime_keys: kwargs consumed only by ``init``/``admit`` — excluded
+        from the engine cache key (sources always are).
+    bound_unit: which EngineResult field counts against the program's
+        default step bound — "steps" for flat programs, "epochs" for
+        phase programs (whose ``max_steps``/default bound limits
+        epochs). The scheduler charges the matching unit per chunk.
+    """
+    name: str
+    build: Callable
+    init: Callable
+    done: Callable
+    extract: Callable
+    admit: Callable
+    frontier_of: Callable
+    runtime_keys: tuple = ()
+    bound_unit: str = "steps"
+
+
+_BATCH_REGISTRY: dict[str, BatchSpec] = {}
+
+
+def register_batch(spec: BatchSpec) -> BatchSpec:
+    _BATCH_REGISTRY[spec.name] = spec
+    return spec
+
+
+def batchable() -> list[str]:
+    """Algorithm names accepted by ``api.solve_batch``."""
+    return sorted(_BATCH_REGISTRY)
+
+
+def get_batch_spec(name: str) -> BatchSpec:
+    try:
+        return _BATCH_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"algorithm {name!r} has no batched program; batchable: "
+            f"{batchable()}") from None
+
+
+def _sources_array(sources) -> jax.Array:
+    src = jnp.asarray(sources, jnp.int32)
+    if src.ndim != 1 or src.shape[0] == 0:
+        raise ValueError(
+            f"sources must be a non-empty 1-D sequence of vertex ids, "
+            f"got shape {tuple(src.shape)}")
+    return src
+
+
+# ---------------------------------------------------------------------
+# multi-source BFS
+_UNREACHED = jnp.int32(2147483647)
+
+
+def bfs_batch_program(g: Graph, batch: int, policy=None, backend=None
+                      ) -> tuple[VertexProgram, int]:
+    """Multi-source BFS: one parent-id column per source.
+
+    Wire values are candidate parent ids per query (frontier vertices of
+    query b advertise their id in column b, everyone else the ``>n``
+    sentinel that min-combine ignores). The per-query ``level`` counter
+    lives in the state (not the engine step), so a run resumed from a
+    carried state — the scheduler's chunked continuous batching — keeps
+    assigning correct distances.
+    """
+    # DistributedBackend charges width-blind counters, which would break
+    # the batch-aware predictor's exactness — batching is dense/ELL only
+    require_backend("bfs (batched)", backend, DenseBackend, EllBackend)
+    n = g.n
+
+    def values_fn(g_, state, frontier):
+        ids = jnp.arange(g_.n, dtype=jnp.int32)[:, None]
+        return jnp.where(state["qfront"], ids, jnp.int32(g_.n + 7))
+
+    def touched_fn(g_, state, frontier, visited):
+        # pull must inspect vertices unvisited by ANY query (the
+        # engine's union-visited mask is too small: a vertex settled for
+        # query 1 may still need a parent in query 2)
+        return jnp.any(~state["visited"], axis=1)
+
+    def update(state, msgs, step):
+        visited = state["visited"]
+        nxt = (~visited) & (msgs < n)
+        level = state["level"] + 1                       # [B]
+        new = {"dist": jnp.where(nxt, level[None, :], state["dist"]),
+               "parent": jnp.where(nxt, msgs, state["parent"]),
+               "visited": visited | nxt, "qfront": nxt,
+               "level": level}
+        return new, jnp.any(nxt, axis=1), ~jnp.any(nxt)
+
+    prog = VertexProgram(combine="min", update_fn=update,
+                         values_fn=values_fn, touched_fn=touched_fn,
+                         k_filter_push=True)
+    return prog, n + 1
+
+
+def bfs_batch_init(g: Graph, sources, **_):
+    src = _sources_array(sources)
+    b = src.shape[0]
+    cols = jnp.arange(b)
+    qfront = jnp.zeros((g.n, b), bool).at[src, cols].set(True)
+    state = {
+        "dist": jnp.full((g.n, b), _UNREACHED, jnp.int32)
+                   .at[src, cols].set(0),
+        "parent": jnp.full((g.n, b), g.n, jnp.int32)
+                     .at[src, cols].set(src),
+        "visited": qfront, "qfront": qfront,
+        "level": jnp.zeros((b,), jnp.int32),
+    }
+    return state, jnp.any(qfront, axis=1)
+
+
+def bfs_batch_done(g: Graph, state, frontier, **_):
+    return ~jnp.any(state["qfront"], axis=0)
+
+
+def bfs_batch_extract(g: Graph, state, i: int):
+    return {"dist": state["dist"][:, i], "parent": state["parent"][:, i],
+            "visited": state["visited"][:, i]}
+
+
+def bfs_batch_admit(g: Graph, state, frontier, slot: int, source, **_):
+    source = jnp.asarray(source, jnp.int32)
+    state = {
+        "dist": state["dist"].at[:, slot].set(_UNREACHED)
+                             .at[source, slot].set(0),
+        "parent": state["parent"].at[:, slot].set(g.n)
+                                 .at[source, slot].set(source),
+        "visited": state["visited"].at[:, slot].set(False)
+                                   .at[source, slot].set(True),
+        "qfront": state["qfront"].at[:, slot].set(False)
+                                 .at[source, slot].set(True),
+        "level": state["level"].at[slot].set(0),
+    }
+    return state, jnp.any(state["qfront"], axis=1)
+
+
+register_batch(BatchSpec(
+    name="bfs", build=bfs_batch_program, init=bfs_batch_init,
+    done=bfs_batch_done, extract=bfs_batch_extract,
+    admit=bfs_batch_admit,
+    frontier_of=lambda g, state: jnp.any(state["qfront"], axis=1)))
+
+
+# ---------------------------------------------------------------------
+# personalized PageRank (multiple personalization vectors)
+def ppr_batch_program(g: Graph, batch: int, iters: int = 100,
+                      damp: float = 0.85, tol: float = 1e-6,
+                      policy=None, backend=None
+                      ) -> tuple[VertexProgram, int]:
+    """B personalized power iterations sharing one graph scan per step.
+
+    Converged columns are frozen — their rank stops updating the moment
+    their residual drops below ``tol``, exactly where the single-query
+    run stops — so batched results stay bit-identical even though the
+    engine keeps stepping until every query converges.
+    """
+    require_backend("ppr (batched)", backend, DenseBackend, EllBackend)
+    n = g.n
+    damp = float(damp)
+    tol = float(tol)
+
+    def values_fn(g_, state, frontier):
+        deg = jnp.maximum(g_.out_deg, 1).astype(jnp.float32)[:, None]
+        return state["rank"] / deg
+
+    def update(state, msgs, step):
+        active = state["resid"] >= tol                   # [B]
+        rank = jnp.where(active[None, :],
+                         state["base"] + jnp.float32(damp) * msgs,
+                         state["rank"])
+        resid = jnp.where(active,
+                          jnp.max(jnp.abs(rank - state["rank"]), axis=0),
+                          state["resid"])
+        new = {"rank": rank, "base": state["base"], "resid": resid}
+        return new, jnp.ones((n,), bool), jnp.all(resid < tol)
+
+    prog = VertexProgram(combine="sum", update_fn=update,
+                         values_fn=values_fn,
+                         step_charges=(("reads", 2 * n * batch),))
+    return prog, iters
+
+
+def ppr_batch_init(g: Graph, sources, damp: float = 0.85, **_):
+    src = _sources_array(sources)
+    b = src.shape[0]
+    base = jnp.zeros((g.n, b), jnp.float32).at[src, jnp.arange(b)].set(
+        jnp.float32(1.0 - damp))
+    state = {"rank": base, "base": base,
+             "resid": jnp.full((b,), jnp.inf, jnp.float32)}
+    return state, jnp.ones((g.n,), bool)
+
+
+def ppr_batch_done(g: Graph, state, frontier, tol: float = 1e-6, **_):
+    # mirrors the program's per-column freeze threshold
+    return state["resid"] < float(tol)
+
+
+def ppr_batch_extract(g: Graph, state, i: int):
+    return {"ranks": state["rank"][:, i], "residual": state["resid"][i]}
+
+
+def ppr_batch_admit(g: Graph, state, frontier, slot: int, source,
+                    damp: float = 0.85, **_):
+    source = jnp.asarray(source, jnp.int32)
+    base = (state["base"].at[:, slot].set(0.0)
+                         .at[source, slot].set(jnp.float32(1.0 - damp)))
+    state = {"rank": state["rank"].at[:, slot].set(base[:, slot]),
+             "base": base,
+             "resid": state["resid"].at[slot].set(jnp.inf)}
+    return state, jnp.ones((g.n,), bool)
+
+
+register_batch(BatchSpec(
+    name="ppr", build=ppr_batch_program, init=ppr_batch_init,
+    done=ppr_batch_done, extract=ppr_batch_extract,
+    admit=ppr_batch_admit,
+    frontier_of=lambda g, state: jnp.ones((g.n,), bool)))
+
+
+# ---------------------------------------------------------------------
+# multi-source Δ-stepping SSSP
+_INF = jnp.float32(jnp.inf)
+
+
+def _in_bucket(d: jax.Array, lo, delta: float) -> jax.Array:
+    return jnp.isfinite(d) & (d >= lo) & (d < lo + jnp.float32(delta))
+
+
+def sssp_batch_program(g: Graph, batch: int, delta: float = 2.0,
+                       max_inner: int = 64, max_epochs: int = 1 << 14,
+                       policy=None, backend=None
+                       ) -> tuple[PhaseProgram, int]:
+    """Multi-source Δ-stepping: bucket epochs advance in lockstep across
+    queries (each epoch settles one ``[lo, lo+Δ)`` bucket for every
+    column at once).
+
+    The bucket cursor is *state-derived*, not epoch-derived: each epoch
+    jumps to the bucket of the smallest distance at or beyond the
+    settled boundary ``hi``, skipping empty buckets entirely. That makes
+    every epoch productive, so a run resumed from a carried state (the
+    scheduler's chunked continuous batching) continues where it stopped
+    instead of re-walking settled buckets — and columns whose bucket is
+    empty contribute identity values (∞ under min) and are masked
+    settled, so lockstep epochs change nothing versus each query's own
+    bucket sequence. ``hi`` is per-column, so admitting a fresh query
+    (which must start at bucket zero) re-walks only the newcomer's
+    buckets; incumbents' settled vertices stay outside their ``qfront``
+    and contribute no exchange work.
+    """
+    require_backend("sssp_delta", backend, DenseBackend, EllBackend)
+    delta = float(delta)
+
+    def _guard(state):
+        # per-column unsettled threshold: at least the current bucket,
+        # and never below the column's own settled boundary
+        return jnp.maximum(state["lo"], state["hi"])[None, :]
+
+    def enter(g_, state, frontier, epoch):
+        d = state["dist"]
+        hi = state["hi"]                                 # [B]
+        cand = jnp.where(jnp.isfinite(d) & (d >= hi[None, :]), d, _INF)
+        mn = jnp.min(cand)
+        lo = jnp.float32(delta) * jnp.floor(mn / jnp.float32(delta))
+        qf = _in_bucket(d, lo, delta) & (d >= hi[None, :])
+        state = {"dist": d, "lo": lo, "hi": hi, "qfront": qf}
+        return state, jnp.any(qf, axis=1)
+
+    def exit_fn(g_, state, frontier, cost):
+        # this bucket is settled for every column at or behind it (no
+        # column holds unsettled vertices below lo — lo is the bucket
+        # of the global minimum candidate)
+        hi = jnp.maximum(state["hi"],
+                         state["lo"] + jnp.float32(delta))
+        state = dict(state, hi=hi)
+        return state, frontier, cost
+
+    def values_fn(g_, state, frontier):
+        return jnp.where(state["qfront"], state["dist"], _INF)
+
+    def touched_fn(g_, state, frontier, visited):
+        return jnp.any(state["dist"] >= _guard(state), axis=1)
+
+    def msg(x, w):
+        if x.ndim > w.ndim:            # dense paths: w is [m], x [m, B]
+            w = w[..., None]
+        return x + w
+
+    def update(state, msgs, step):
+        d = state["dist"]
+        # per-query settled guard: a column settled below this bucket
+        # never re-relaxes (single-source pull masks it via `touched`)
+        unsettled = d >= _guard(state)
+        d_new = jnp.where(unsettled, jnp.minimum(d, msgs), d)
+        changed = d_new < d
+        qf = _in_bucket(d_new, state["lo"], delta) & unsettled
+        new = dict(state, dist=d_new, qfront=qf)
+        return new, jnp.any(qf, axis=1), ~jnp.any(changed)
+
+    def epoch_cond(g_, state, epoch):
+        d = state["dist"]
+        return jnp.any(jnp.isfinite(d) & (d >= state["hi"][None, :]))
+
+    prog = VertexProgram(combine="min", msg_fn=msg, update_fn=update,
+                         values_fn=values_fn, touched_fn=touched_fn,
+                         k_filter_push=True,
+                         k_filter_set_fn=lambda old, new, f:
+                             jnp.any(new["dist"] < old["dist"], axis=1))
+    pp = PhaseProgram(phases=(Phase(program=prog, max_steps=max_inner,
+                                    name="relax", enter_fn=enter,
+                                    exit_fn=exit_fn),),
+                      epoch_cond=epoch_cond)
+    return pp, max_epochs
+
+
+def sssp_batch_init(g: Graph, sources, **_):
+    src = _sources_array(sources)
+    b = src.shape[0]
+    d0 = jnp.full((g.n, b), _INF, jnp.float32).at[src, jnp.arange(b)].set(
+        0.0)
+    state = {"dist": d0, "lo": jnp.float32(0.0),
+             "hi": jnp.zeros((b,), jnp.float32),
+             "qfront": jnp.zeros((g.n, b), bool)}
+    # the phase's enter_fn recomputes the bucket frontiers every epoch
+    return state, jnp.zeros((g.n,), bool)
+
+
+def sssp_batch_done(g: Graph, state, frontier, **_):
+    # a query is done once nothing lies at or beyond its own settled
+    # boundary — the per-column slice of the program's epoch_cond
+    d = state["dist"]
+    return ~jnp.any(jnp.isfinite(d) & (d >= state["hi"][None, :]),
+                    axis=0)
+
+
+def sssp_batch_extract(g: Graph, state, i: int):
+    return {"dist": state["dist"][:, i]}
+
+
+def sssp_batch_admit(g: Graph, state, frontier, slot: int, source, **_):
+    source = jnp.asarray(source, jnp.int32)
+    dist = state["dist"].at[:, slot].set(_INF).at[source, slot].set(0.0)
+    # only the newcomer's settled boundary drops back to bucket zero;
+    # incumbents keep theirs, so the bucket cursor revisits the low
+    # range for the new column alone (incumbents' settled vertices stay
+    # outside qfront and contribute no exchange work)
+    state = {"dist": dist, "lo": jnp.float32(0.0),
+             "hi": state["hi"].at[slot].set(0.0),
+             "qfront": state["qfront"].at[:, slot].set(False)}
+    return state, jnp.any(state["qfront"], axis=1)
+
+
+register_batch(BatchSpec(
+    name="sssp_delta", build=sssp_batch_program, init=sssp_batch_init,
+    done=sssp_batch_done, extract=sssp_batch_extract,
+    admit=sssp_batch_admit,
+    # the relax phase's enter_fn rebuilds bucket frontiers every epoch
+    frontier_of=lambda g, state: jnp.zeros((g.n,), bool),
+    bound_unit="epochs"))

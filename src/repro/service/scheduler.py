@@ -1,0 +1,405 @@
+"""QueryService — continuous batching over fixed query slots.
+
+The serving loop for graph queries, mirroring the step-granular
+slot-refill shape of classic LM serving loops: a fixed budget of B
+query *slots*, one batched engine run per compatible request group, and
+between engine *chunks* every converged query retires and frees its
+slot for the next queued request (``BatchSpec.admit`` splices the
+newcomer's column into the carried state; the engine resumes from the
+rewritten carry).
+
+Requests are grouped by (algorithm, policy, backend, static params) —
+only queries that can share one engine program batch together. Results
+land in an LRU :class:`~repro.service.cache.ResultCache` keyed by
+(graph fingerprint, algorithm, source, params, policy, backend);
+repeated submissions hit the cache without touching the engine, and
+identical *in-flight* requests coalesce onto one slot.
+
+    svc = QueryService(g, slots=8)
+    rids = [svc.submit("bfs", source=s) for s in range(16)]
+    svc.submit("ppr", source=3)
+    svc.run_until_complete()
+    svc.poll(rids[0])["dist"]          # == api.solve(g,"bfs",root=0)...
+    svc.stats()["cache"]["hits"]
+
+Algorithms without a batched program (``repro.service.batchable()``)
+still flow through the same submit/poll surface — each runs as a
+single ``api.solve`` when its group is scheduled, and its results cache
+the same way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import numpy as np
+
+from .. import api
+from ..graphs.structure import Graph
+from .batch import default_step_bound, run_chunk
+from .cache import ResultCache, graph_fingerprint
+from .programs import get_batch_spec, batchable
+
+__all__ = ["QueryService", "QueryRecord"]
+
+
+def _source_kwarg(algorithm: str) -> str:
+    """The kwarg naming the query vertex — the spec's runtime key
+    (``root`` for BFS, ``source`` for SSSP/PPR)."""
+    keys = api.get_spec(algorithm).runtime_keys
+    return keys[0] if keys else "source"
+
+
+@dataclasses.dataclass
+class QueryRecord:
+    """One submitted query and, once served, its result."""
+    rid: int
+    algorithm: str
+    source: Optional[int]
+    params: tuple
+    state: Any = None          # public state pytree once done
+    cached: bool = False       # served straight from the result cache
+    converged: bool = True     # False when force-retired (best effort)
+    error: Optional[Exception] = None   # the failure, if serving failed
+
+    @property
+    def done(self) -> bool:
+        return self.state is not None or self.error is not None
+
+
+@dataclasses.dataclass
+class _Active:
+    """The engine-side carry of the group currently occupying slots."""
+    group: tuple
+    algorithm: str
+    policy: Any
+    backend: Any
+    params: dict
+    width: int
+    state: Any
+    frontier: Any
+    slot_rids: list            # per column: (rid, cache key) or None
+    slot_chunks: list          # per column: chunks spent on this query
+    step_bound: int            # the unchunked run's step/epoch budget
+    total_steps: int = 0       # engine steps consumed by this batch
+    slot_steps0: list = dataclasses.field(default_factory=list)
+    # per column: total_steps when the query entered its slot
+
+
+class QueryService:
+    """Batched multi-query serving over one graph.
+
+    Args:
+        g: the graph every query runs against.
+        slots: query slots per batched engine run (the fixed batch
+            width the scheduler refills).
+        chunk_steps: engine steps (epochs for phase programs) per chunk
+            between slot-refill opportunities.
+        max_chunks_per_query: chunk budget per query; a query still not
+            done after ``max_chunks_per_query * chunk_steps`` engine
+            steps is force-retired with its best-effort state (the
+            analogue of a bounded single-source solve returning with
+            ``converged=False`` — the record says ``converged=False``
+            and the state is NOT cached), so a non-converging query can
+            never wedge the serving loop.
+        max_records: bound on retained finished query records; the
+            oldest *done* records (and their result pytrees) are
+            evicted past it, so a long-lived serving process does not
+            grow without bound. Evicted rids can no longer be polled.
+        cache: a :class:`ResultCache`, or None for a fresh 256-entry
+            one.
+    """
+
+    def __init__(self, g: Graph, *, slots: int = 8,
+                 chunk_steps: int = 32,
+                 max_chunks_per_query: int = 256,
+                 max_records: int = 4096,
+                 cache: Optional[ResultCache] = None):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.g = g
+        self.slots = slots
+        self.chunk_steps = chunk_steps
+        self.max_chunks_per_query = max_chunks_per_query
+        self.max_records = max_records
+        self.cache = cache if cache is not None else ResultCache()
+        self._fp = graph_fingerprint(g)
+        self._next_rid = 0
+        self._records: dict[int, QueryRecord] = {}
+        self._pending = 0
+        # group key (algorithm, policy, backend, params) -> FIFO of
+        # (rid, cache key, source, params); drained queues are deleted,
+        # so long-lived services do not accumulate dead deques
+        self._queues: dict[tuple, deque] = {}
+        self._inflight: dict[tuple, list[int]] = {}  # cache key -> rids
+        self._active: Optional[_Active] = None
+        self.coalesced = 0
+        self.batches_started = 0
+        self.chunks_run = 0
+        self.force_retired = 0
+
+    # -- submission ------------------------------------------------------
+    def submit(self, algorithm: str, source: Optional[int] = None, *,
+               policy=None, backend=None, **params) -> int:
+        """Enqueue one query; returns a request id for :meth:`poll`.
+
+        ``source`` is the query vertex for source-parameterized
+        algorithms (mapped to ``root`` for BFS); global algorithms
+        (wcc, pagerank, ...) take ``source=None``. Extra ``params`` are
+        the algorithm's kwargs (``delta``, ``damp``, ``iters``, ...).
+        """
+        api.get_spec(algorithm)                      # KeyError if unknown
+        if isinstance(policy, str):
+            api._resolve_policy(policy)   # bad shorthand fails at submit
+        if source is not None:
+            api.validate_vertex_indices(self.g, "source", source)
+            source = int(source)
+        elif algorithm in batchable():
+            raise ValueError(
+                f"{algorithm!r} is source-parameterized: submit() "
+                f"requires a source vertex (0..{self.g.n - 1})")
+        rid = self._next_rid
+        self._next_rid += 1
+        rec = QueryRecord(rid=rid, algorithm=algorithm, source=source,
+                          params=tuple(sorted(params.items())))
+        self._records[rid] = rec
+        ckey = self._cache_key(algorithm, source, rec.params, policy,
+                               backend)
+        hit = self.cache.get(ckey)
+        if hit is not None:
+            rec.state, rec.converged = hit
+            rec.cached = True
+            return rid
+        if ckey in self._inflight:                   # coalesce duplicates
+            self._inflight[ckey].append(rid)
+            self.coalesced += 1
+            self._pending += 1
+            return rid
+        self._inflight[ckey] = [rid]
+        self._pending += 1
+        gkey = (algorithm, policy, backend, rec.params)
+        self._queues.setdefault(gkey, deque()).append((rid, ckey, source,
+                                                       dict(params)))
+        return rid
+
+    def poll(self, rid: int) -> Optional[Any]:
+        """The query's public state pytree, or None while pending.
+
+        Raises RuntimeError (chaining the original failure) if serving
+        this query failed — e.g. an unsupported (policy × backend)
+        combination or bad algorithm kwargs that only surface when the
+        engine is built."""
+        rec = self._records[rid]
+        if rec.error is not None:
+            raise RuntimeError(
+                f"query {rid} ({rec.algorithm!r}) failed: "
+                f"{rec.error}") from rec.error
+        return rec.state if rec.state is not None else None
+
+    def record(self, rid: int) -> QueryRecord:
+        return self._records[rid]
+
+    def pending(self) -> int:
+        return self._pending
+
+    # -- the serving loop ------------------------------------------------
+    def step(self) -> int:
+        """One scheduling action: run a chunk of the active batch (or
+        start one, or serve one unbatchable query). Returns the number
+        of queries completed by this step."""
+        if self._active is None and not self._start_next_group():
+            return 0
+        if self._active is None:                     # served unbatchable
+            return 1
+        return self._run_chunk()
+
+    def run_until_complete(self, max_rounds: int = 100_000) -> None:
+        """Drive :meth:`step` until every submitted query has a result."""
+        rounds = 0
+        while self.pending():
+            rounds += 1
+            if rounds > max_rounds:
+                raise RuntimeError(
+                    f"QueryService did not drain within {max_rounds} "
+                    f"rounds ({self.pending()} queries still pending)")
+            self.step()
+
+    def stats(self) -> dict:
+        return {"submitted": self._next_rid,
+                "pending": self.pending(),
+                "coalesced": self.coalesced,
+                "batches_started": self.batches_started,
+                "chunks_run": self.chunks_run,
+                "force_retired": self.force_retired,
+                "cache": self.cache.stats()}
+
+    # -- internals -------------------------------------------------------
+    def _cache_key(self, algorithm, source, params, policy, backend):
+        # policy shorthands/instances and backends are hashable (frozen
+        # dataclasses; DistributedBackend hashes by identity)
+        return (self._fp, algorithm, source, params, policy, backend)
+
+    def _finish(self, ckey, algorithm, state, converged=True,
+                cacheable=None):
+        # force-retired batched states depend on scheduler timing, not
+        # just the request params, so they are never cached; cache
+        # entries carry the convergence flag so hits report it honestly
+        if cacheable is None:
+            cacheable = converged
+        if cacheable:
+            self.cache.put(ckey, (state, converged))
+        first = True
+        for rid in self._inflight.pop(ckey, ()):
+            rec = self._records[rid]
+            rec.state, rec.converged = state, converged
+            # coalesced followers count as cache-served — but only for
+            # reproducible (cacheable) results
+            rec.cached = cacheable and not first
+            first = False
+            self._pending -= 1
+        self._evict_records()
+
+    def _fail(self, ckey, exc: Exception):
+        """Serving these queries failed: record the error (poll raises
+        it) and release their pending/in-flight bookkeeping so one bad
+        request can never wedge the loop."""
+        for rid in self._inflight.pop(ckey, ()):
+            self._records[rid].error = exc
+            self._pending -= 1
+
+    def _evict_records(self):
+        if len(self._records) <= self.max_records:
+            return
+        for rid in list(self._records):
+            if len(self._records) <= self.max_records:
+                break
+            if self._records[rid].done:
+                del self._records[rid]
+
+    def _start_next_group(self) -> bool:
+        """Pick the group whose head request is oldest (FIFO by rid) —
+        a steady stream for one group can never starve another, since
+        new arrivals always queue behind every already-waiting rid."""
+        gkey = min((k for k, q in self._queues.items() if q),
+                   key=lambda k: self._queues[k][0][0], default=None)
+        if gkey is None:
+            return False
+        algorithm, policy, backend, _ = gkey
+        queue = self._queues[gkey]
+        if algorithm not in batchable():
+            rid, ckey, source, params = queue.popleft()
+            if not queue:
+                del self._queues[gkey]
+            if source is not None:
+                params[_source_kwarg(algorithm)] = source
+            try:
+                r = api.solve(self.g, algorithm, policy=policy,
+                              backend=backend, **params)
+            except Exception as e:            # bad cell / bad kwargs
+                self._fail(ckey, e)
+                return True
+            # a single solve is deterministic given its params, so the
+            # result is cacheable even at its step bound (pagerank's
+            # fixed-iteration converged=False is by design) — but the
+            # record reports the true convergence flag
+            self._finish(ckey, algorithm, r.state,
+                         converged=bool(r.converged), cacheable=True)
+            return True
+        bspec = get_batch_spec(algorithm)
+        width = min(self.slots, len(queue))
+        taken = [queue.popleft() for _ in range(width)]
+        if not queue:
+            del self._queues[gkey]
+        params = dict(taken[0][3])
+        try:
+            state, frontier = bspec.init(
+                self.g, [t[2] for t in taken], **params)
+            step_bound = default_step_bound(
+                self.g, algorithm, width, policy=policy,
+                backend=backend, **params)
+        except Exception as e:   # unsupported cell, bad kwargs, ...
+            for t in taken:
+                self._fail(t[1], e)
+            return True
+        self._active = _Active(
+            group=gkey, algorithm=algorithm, policy=policy,
+            backend=backend, params=params, width=width, state=state,
+            frontier=frontier, slot_rids=[(t[0], t[1]) for t in taken],
+            slot_chunks=[0] * width, step_bound=step_bound,
+            slot_steps0=[0] * width)
+        self.batches_started += 1
+        return True
+
+    def _run_chunk(self) -> int:
+        act = self._active
+        bspec = get_batch_spec(act.algorithm)
+        # chunks never exceed the unchunked run's own step budget, so a
+        # small bound (e.g. ppr iters=5) is enforced exactly; larger
+        # bounds are enforced at chunk granularity (a query may run up
+        # to chunk_steps-1 steps past its budget before retiring)
+        try:
+            res, done = run_chunk(
+                self.g, act.algorithm, act.width, state=act.state,
+                frontier=act.frontier, policy=act.policy,
+                backend=act.backend,
+                max_steps=min(self.chunk_steps, act.step_bound),
+                **act.params)
+        except Exception as e:
+            for slot in act.slot_rids:
+                if slot is not None:
+                    self._fail(slot[1], e)
+            self._active = None
+            return 0
+        self.chunks_run += 1
+        act.state = res.state
+        # lockstep batches consume the program's bound unit together
+        # (steps for flat programs, epochs for phase programs); each
+        # query's budget counts from its admission
+        act.total_steps += int(res.epochs
+                               if bspec.bound_unit == "epochs"
+                               else res.steps)
+        done = np.asarray(done) | bool(res.converged)
+        finished = 0
+        queue = self._queues.get(act.group, deque())
+        # refill only a full-width batch with no other group waiting:
+        # an under-width batch drains and restarts wider (later arrivals
+        # would otherwise serialize through its few columns), and a
+        # waiting minority group gets the slots once this batch drains
+        # (otherwise a steady majority stream starves it forever)
+        others_waiting = any(q for k, q in self._queues.items()
+                             if k != act.group and q)
+        can_refill = act.width >= self.slots and not others_waiting
+        for i in range(act.width):
+            if act.slot_rids[i] is not None:
+                act.slot_chunks[i] += 1
+                # budget exhausted -> best-effort retire, marked
+                # converged=False and NOT cached (the bounded-solve
+                # analogue: the result is the state so far)
+                consumed = act.total_steps - act.slot_steps0[i]
+                exhausted = (act.slot_chunks[i]
+                             >= self.max_chunks_per_query
+                             or consumed >= act.step_bound)
+                if exhausted and not done[i]:
+                    self.force_retired += 1
+                if done[i] or exhausted:
+                    rid, ckey = act.slot_rids[i]
+                    self._finish(ckey, act.algorithm,
+                                 bspec.extract(self.g, act.state, i),
+                                 converged=bool(done[i]))
+                    act.slot_rids[i] = None
+                    finished += 1
+            if act.slot_rids[i] is None and queue and can_refill:
+                rid, ckey, source, params = queue.popleft()
+                act.state, act.frontier = bspec.admit(
+                    self.g, act.state, None, i, source, **act.params)
+                act.slot_rids[i] = (rid, ckey)
+                act.slot_chunks[i] = 0
+                act.slot_steps0[i] = act.total_steps
+        act.frontier = bspec.frontier_of(self.g, act.state)
+        if not queue:
+            self._queues.pop(act.group, None)
+        if all(s is None for s in act.slot_rids):
+            self._active = None
+        return finished

@@ -17,6 +17,7 @@ from repro.core import (DenseBackend, Direction, DistributedBackend,
 KW = {
     "bfs": {"root": 3},
     "pagerank": {"iters": 25},
+    "ppr": {"source": 3, "tol": 1e-7},
     "wcc": {},
     "pr_delta": {"tol": 1e-7},
     "sssp_delta": {"source": 3, "delta": 2.5},
@@ -51,10 +52,10 @@ def _assert_same_states(ref, got, atol):
         _states_equal(leaf_r, leaf_g, atol=atol)
 
 
-def test_registry_covers_all_nine():
+def test_registry_covers_all_ten():
     assert api.algorithms() == sorted([
-        "bfs", "pagerank", "wcc", "pr_delta", "sssp_delta", "betweenness",
-        "coloring", "mst_boruvka", "triangle_count"])
+        "bfs", "pagerank", "ppr", "wcc", "pr_delta", "sssp_delta",
+        "betweenness", "coloring", "mst_boruvka", "triangle_count"])
 
 
 @pytest.mark.parametrize("name", sorted(KW))
@@ -99,8 +100,8 @@ def test_unsupported_backend_combination_raises(small_graph):
     """Specs with no distributed execution path surface a ValueError
     naming the (policy, backend) combination, not a raw trace error."""
     db = DistributedBackend.prepare(small_graph)
-    for name in ("sssp_delta", "betweenness", "coloring", "mst_boruvka",
-                 "triangle_count"):
+    for name in ("ppr", "sssp_delta", "betweenness", "coloring",
+                 "mst_boruvka", "triangle_count"):
         with pytest.raises(ValueError, match=f"{name}.*DistributedBackend"):
             api.solve(small_graph, name, backend=db, **KW[name])
 
@@ -284,3 +285,51 @@ def test_distributed_backend_multidevice():
     assert "push dist ok: True" in r.stdout, r.stdout + r.stderr
     assert "pull dist ok: True" in r.stdout, r.stdout + r.stderr
     assert "padded dist ok: True" in r.stdout, r.stdout + r.stderr
+
+
+DIST_PARTS = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro import api
+from repro.core import DistributedBackend, Fixed, Direction
+from repro.graphs import kronecker
+g = kronecker(7, edge_factor=5, seed=4, weighted=True)
+KW = {"bfs": {"root": 1}, "pagerank": {"iters": 12}}
+for num_parts in (1, 2, 4):
+    mesh = Mesh(np.array(jax.devices()[:num_parts]).reshape(num_parts, 1),
+                ("data", "model"))
+    db = DistributedBackend.prepare(g, mesh=mesh, num_parts=num_parts)
+    for name in ("bfs", "pagerank"):
+        for policy in (Fixed(Direction.PUSH), Fixed(Direction.PULL)):
+            a = api.solve(g, name, policy=policy, **KW[name])
+            b = api.solve(g, name, policy=policy, backend=db, **KW[name])
+            la = jax.tree_util.tree_leaves(a.state)
+            lb = jax.tree_util.tree_leaves(b.state)
+            ok = all(np.allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+                     for x, y in zip(la, lb))
+            print(f"parts={num_parts} {name} {policy.name} ok: {ok}")
+"""
+
+
+@pytest.mark.dist
+@pytest.mark.subprocess
+def test_distributed_parity_across_num_parts():
+    """DistributedBackend push/pull states match DenseBackend for BFS
+    and PageRank at num_parts 1, 2, and 4 — the PA split and both
+    exchange directions are partition-count-invariant."""
+    import os
+    from pathlib import Path
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", DIST_PARTS],
+                       capture_output=True, text=True, timeout=600,
+                       env=env, cwd=str(root))
+    for num_parts in (1, 2, 4):
+        for name in ("bfs", "pagerank"):
+            for pol in ("push", "pull"):
+                line = f"parts={num_parts} {name} {pol} ok: True"
+                assert line in r.stdout, (line, r.stdout + r.stderr)

@@ -19,6 +19,7 @@ from repro.core import (AutoSwitch, CostPredictor, CostWeights,
 KW = {
     "bfs": {"root": 3},
     "pagerank": {"iters": 10},
+    "ppr": {"source": 3, "tol": 1e-7},
     "wcc": {},
     "pr_delta": {"tol": 1e-7},
     "sssp_delta": {"source": 3, "delta": 2.5},
@@ -102,8 +103,8 @@ def test_auto_beats_fixed_pagerank_dense(power_graph):
 
 @pytest.mark.parametrize("name", sorted(KW))
 def test_auto_runs_every_algorithm(name, small_graph):
-    """solve(alg, g, policy="auto") works for all nine registered
-    algorithms and reproduces the fixed-pull states."""
+    """solve(alg, g, policy="auto") works for every registered
+    algorithm and reproduces the fixed-pull states."""
     ref = api.solve(small_graph, name, policy="pull", **KW[name])
     got = api.solve(small_graph, name, policy="auto", **KW[name])
     for lr, lg in zip(jax.tree_util.tree_leaves(ref.state),

@@ -130,8 +130,8 @@ def test_committed_bench_json_validates():
 
 
 def test_bench_json_covers_matrix():
-    """Acceptance: BENCH_pushpull.json covers all 9 algorithms × ≥4
-    policies."""
+    """Acceptance: BENCH_pushpull.json covers every registered
+    algorithm × ≥4 policies."""
     from repro import api
     report = json.loads((ROOT / "BENCH_pushpull.json").read_text())
     cells = [r["derived"] for r in report["rows"]

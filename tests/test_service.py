@@ -1,0 +1,464 @@
+"""repro.service — batched multi-query serving.
+
+The acceptance claims under test:
+
+  * ``api.solve_batch`` results are *bit-identical* to a loop of
+    single-source ``api.solve`` calls for BFS, Δ-stepping SSSP, and
+    personalized PageRank, on the dense and ELL backends;
+  * the batch-aware cost model prices push by union-frontier degree
+    sums, so the predicted push→pull crossover moves toward pull as
+    the batch widens;
+  * batched AutoSwitch's weighted counter total never exceeds the
+    better fixed direction at the same batch width;
+  * ``QueryService`` serves a mixed stream (more queries than slots)
+    to completion, with slot refill, in-flight coalescing, and LRU
+    cache hits on repeated (source, algorithm) pairs;
+  * ``api.solve`` rejects out-of-range source/root vertex indices
+    instead of letting JAX scatter semantics clip them silently.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import DenseBackend, EllBackend
+from repro.service import (QueryService, ResultCache, batchable,
+                           graph_fingerprint)
+
+SOURCES = [3, 17, 42, 5, 99, 3, 64, 12]
+
+BATCH_KW = {
+    "bfs": {},
+    "ppr": {"damp": 0.85, "tol": 1e-6},
+    "sssp_delta": {"delta": 2.5},
+}
+
+
+def _single_states(g, alg, policy, backend, kw):
+    out = []
+    for s in SOURCES:
+        skw = dict(kw)
+        skw["root" if alg == "bfs" else "source"] = s
+        out.append(api.solve(g, alg, policy=policy, backend=backend,
+                             **skw).state)
+    return out
+
+
+def test_batchable_registry():
+    assert batchable() == ["bfs", "ppr", "sssp_delta"]
+    for name in batchable():
+        assert name in api.algorithms()
+
+
+@pytest.mark.parametrize("name", sorted(BATCH_KW))
+@pytest.mark.parametrize("bname", ["dense", "ell"])
+def test_solve_batch_bit_identical(name, bname, power_graph):
+    """The flagship acceptance: every column of a batched run equals the
+    single-source run bit for bit — same ints, same float bits — under
+    push, pull, and the batch-aware AutoSwitch."""
+    backend = DenseBackend() if bname == "dense" else EllBackend()
+    for policy in ("push", "pull", "auto"):
+        br = api.solve_batch(power_graph, name, sources=SOURCES,
+                             policy=policy, backend=backend,
+                             **BATCH_KW[name])
+        assert br.batch == len(SOURCES)
+        singles = _single_states(power_graph, name, policy, backend,
+                                 BATCH_KW[name])
+        for i, ref in enumerate(singles):
+            for key in ref:
+                a = np.asarray(jnp.asarray(ref[key]))
+                b = np.asarray(jnp.asarray(br.states[i][key]))
+                assert np.array_equal(a, b, equal_nan=True), (
+                    name, policy, bname, i, key)
+        assert bool(np.asarray(br.done).all())
+
+
+def test_solve_batch_duplicate_sources(small_graph):
+    """Duplicate sources are legal and produce identical columns."""
+    br = api.solve_batch(small_graph, "bfs", sources=[7, 7, 3])
+    np.testing.assert_array_equal(np.asarray(br.states[0]["dist"]),
+                                  np.asarray(br.states[1]["dist"]))
+
+
+def test_solve_batch_errors(small_graph):
+    with pytest.raises(KeyError, match="batchable"):
+        api.solve_batch(small_graph, "wcc", sources=[0, 1])
+    with pytest.raises(KeyError, match="registered"):
+        api.solve_batch(small_graph, "nope", sources=[0])
+    with pytest.raises(ValueError, match="out of range"):
+        api.solve_batch(small_graph, "bfs",
+                        sources=[0, small_graph.n])
+    with pytest.raises(ValueError, match="non-empty"):
+        api.solve_batch(small_graph, "bfs", sources=[])
+    with pytest.raises(ValueError, match="1-D"):
+        api.solve_batch(small_graph, "bfs", sources=3)   # scalar
+
+
+# -- the batch-aware cost model ------------------------------------------
+def test_predictor_crossover_moves_with_batch_width():
+    """Push is priced on the union frontier × width, pull on one
+    amortized scan × width; with sublinearly overlapping frontiers the
+    per-query frontier size at which pull starts winning shrinks as the
+    batch widens."""
+    from repro.core import CostPredictor, StepStats
+
+    pred = CostPredictor()
+    m, n = 100_000, 10_000
+
+    def crossover(batch: int) -> int:
+        """Smallest per-query frontier edge count where pull wins."""
+        for k in range(1, m):
+            union = min(batch * k, m)        # disjoint-ish frontiers
+            stats = StepStats(
+                frontier_vertices=jnp.asarray(0),
+                frontier_edges=jnp.asarray(union),
+                pull_edges=jnp.asarray(m), pull_vertices=jnp.asarray(n),
+                unvisited_edges=jnp.asarray(0), step=jnp.asarray(0),
+                prev_push=jnp.bool_(False), float_data=False,
+                k_filter_push=False, width=batch)
+            if float(pred.predict_pull(stats)) < \
+                    float(pred.predict_push(stats)):
+                return k
+        return m
+
+    xs = [crossover(b) for b in (1, 2, 4, 8)]
+    assert xs == sorted(xs, reverse=True), xs
+    assert xs[-1] < xs[0]            # strictly moved toward pull
+
+
+def test_batched_auto_not_worse_than_fixed(power_graph):
+    """Acceptance: at a fixed batch width, batch-aware AutoSwitch's
+    weighted counter total never exceeds the better fixed direction
+    (the predictor prices exactly what the engine then charges)."""
+    for name in sorted(BATCH_KW):
+        rp = api.solve_batch(power_graph, name, sources=SOURCES,
+                             policy="push", **BATCH_KW[name])
+        rl = api.solve_batch(power_graph, name, sources=SOURCES,
+                             policy="pull", **BATCH_KW[name])
+        ra = api.solve_batch(power_graph, name, sources=SOURCES,
+                             policy="auto", **BATCH_KW[name])
+        best = min(float(rp.cost.weighted_total()),
+                   float(rl.cost.weighted_total()))
+        assert float(ra.cost.weighted_total()) <= best, name
+
+
+def test_stepstats_width_default_is_one(small_graph):
+    """Single-query runs keep width=1 semantics: predictions (and so
+    AutoSwitch decisions) are unchanged from the pre-batch engine."""
+    from repro.core import StepStats
+    assert StepStats._field_defaults["width"] == 1
+
+
+# -- QueryService --------------------------------------------------------
+def test_query_service_mixed_stream(power_graph):
+    """Acceptance: ≥3 algorithms, ≥16 queries, fewer slots than
+    queries, served to completion with correct per-query results and
+    cache hits on repeated (source, algorithm) pairs."""
+    g = power_graph
+    svc = QueryService(g, slots=4, chunk_steps=8)
+    expect = {}
+    for s in [3, 17, 42, 5, 99, 64, 12, 77, 120, 8]:
+        expect[svc.submit("bfs", source=s)] = ("bfs", s)
+    for s in [1, 2, 3]:
+        expect[svc.submit("ppr", source=s, damp=0.85, tol=1e-6)] = \
+            ("ppr", s)
+    for s in [0, 7, 9]:
+        expect[svc.submit("sssp_delta", source=s, delta=2.5)] = \
+            ("sssp_delta", s)
+    wcc_rid = svc.submit("wcc")          # unbatchable, same surface
+    assert len(expect) + 1 >= 17
+    assert svc.pending() == len(expect) + 1
+    svc.run_until_complete()
+    assert svc.pending() == 0
+
+    for rid, (alg, s) in expect.items():
+        got = svc.poll(rid)
+        assert got is not None
+        if alg == "bfs":
+            ref = api.solve(g, "bfs", root=s).state
+        elif alg == "ppr":
+            ref = api.solve(g, "ppr", source=s, damp=0.85,
+                            tol=1e-6).state
+        else:
+            ref = api.solve(g, "sssp_delta", source=s, delta=2.5).state
+        for key in ref:
+            assert np.array_equal(np.asarray(jnp.asarray(ref[key])),
+                                  np.asarray(jnp.asarray(got[key])),
+                                  equal_nan=True), (alg, s, key)
+    assert np.array_equal(np.asarray(svc.poll(wcc_rid)),
+                          np.asarray(api.solve(g, "wcc").state))
+
+    stats = svc.stats()
+    # more queries than slots forced chunked slot refill
+    assert stats["batches_started"] >= 1
+    assert stats["chunks_run"] > stats["batches_started"]
+
+    # repeated (source, algorithm) pairs hit the LRU cache
+    hits0 = svc.cache.hits
+    r2 = svc.submit("bfs", source=42)
+    r3 = svc.submit("sssp_delta", source=7, delta=2.5)
+    assert svc.poll(r2) is not None and svc.poll(r3) is not None
+    assert svc.record(r2).cached and svc.record(r3).cached
+    assert svc.cache.hits == hits0 + 2
+
+
+def test_query_service_force_retires_nonconverging(small_graph):
+    """A query that can never satisfy its done mask is force-retired
+    with its best-effort state after the per-query chunk budget instead
+    of wedging the serving loop (tol=0 is unreachable: the residual
+    freeze test is `resid >= tol`, so resid can only reach 0, never
+    drop below it)."""
+    svc = QueryService(small_graph, slots=2, chunk_steps=16,
+                       max_chunks_per_query=5)
+    rid = svc.submit("ppr", source=1, tol=0.0)
+    svc.run_until_complete(max_rounds=50)
+    got = svc.poll(rid)
+    assert got is not None
+    assert svc.stats()["force_retired"] == 1
+    assert svc.record(rid).converged is False
+    # best-effort ranks are still the (converged-in-practice) fixpoint
+    ref = api.solve(small_graph, "ppr", source=1).state["ranks"]
+    np.testing.assert_allclose(np.asarray(got["ranks"]),
+                               np.asarray(ref), atol=1e-5)
+    # a best-effort state is never served as an authoritative cache hit
+    rid2 = svc.submit("ppr", source=1, tol=0.0)
+    assert not svc.record(rid2).cached and svc.poll(rid2) is None
+
+
+def test_query_service_evicts_old_done_records(small_graph):
+    """Finished records past max_records are dropped (with their result
+    pytrees), so a long-lived service does not grow without bound."""
+    svc = QueryService(small_graph, slots=4, max_records=4)
+    rids = [svc.submit("bfs", source=s) for s in range(8)]
+    svc.run_until_complete()
+    kept = [r for r in rids if r in svc._records]
+    assert len(kept) <= 4
+    assert svc.poll(kept[-1]) is not None
+    with pytest.raises(KeyError):
+        svc.poll(rids[0])                # oldest evicted
+
+
+def test_solve_batch_rejects_distributed_backend(small_graph):
+    """Batched programs guard their backend support like the
+    single-query specs do (DistributedBackend charges width-blind
+    counters, which would break the batch-aware predictor)."""
+    from repro.core import DistributedBackend
+    db = DistributedBackend.prepare(small_graph)
+    for name in ("bfs", "ppr", "sssp_delta"):
+        with pytest.raises(ValueError, match="DistributedBackend"):
+            api.solve_batch(small_graph, name, sources=[0, 1],
+                            backend=db, **BATCH_KW[name])
+
+
+def test_graph_fingerprint_sensitive_to_weight_order(small_graph):
+    """Swapping two edge weights changes the fingerprint (a shared
+    ResultCache must never serve one weighting's results for
+    another)."""
+    import numpy as onp
+    from repro.graphs.structure import build_graph
+    src = onp.asarray(small_graph.coo_src)
+    dst = onp.asarray(small_graph.coo_dst)
+    w = onp.asarray(small_graph.coo_w).copy()
+    w[0], w[1] = w[1], w[0]
+    assert w[0] != w[1]                  # the swap is observable
+    g2 = build_graph(src, dst, n=small_graph.n, weights=w,
+                     d_ell=small_graph.d_ell)
+    assert graph_fingerprint(small_graph) != graph_fingerprint(g2)
+
+
+def test_query_service_bad_policy_rejected_at_submit(small_graph):
+    svc = QueryService(small_graph, slots=2)
+    with pytest.raises(ValueError, match="policy"):
+        svc.submit("bfs", source=0, policy="bogus")
+    assert svc.pending() == 0            # nothing half-enqueued
+
+
+def test_query_service_failed_query_does_not_wedge(small_graph):
+    """A request whose engine build fails (unsupported backend cell) is
+    failed gracefully: the loop still drains, poll raises the chained
+    error, and other queries serve normally."""
+    from repro.core import DistributedBackend
+    svc = QueryService(small_graph, slots=2)
+    db = DistributedBackend.prepare(small_graph)
+    bad = svc.submit("ppr", source=0, backend=db)  # batched build rejects
+    good = svc.submit("bfs", source=1)
+    svc.run_until_complete(max_rounds=100)
+    with pytest.raises(RuntimeError, match="failed"):
+        svc.poll(bad)
+    assert svc.poll(good) is not None
+
+
+def test_query_service_single_group_slot_refill(power_graph):
+    """A full-width batch refills retired slots from its own queue: ten
+    queries over four slots serve as ONE continuous batch."""
+    svc = QueryService(power_graph, slots=4, chunk_steps=4)
+    rids = [svc.submit("bfs", source=s)
+            for s in [3, 17, 42, 5, 99, 64, 12, 77, 120, 8]]
+    svc.run_until_complete()
+    assert svc.stats()["batches_started"] == 1
+    assert svc.stats()["chunks_run"] >= 3
+    ref = api.solve(power_graph, "bfs", root=120).state["dist"]
+    np.testing.assert_array_equal(np.asarray(svc.poll(rids[8])["dist"]),
+                                  np.asarray(ref))
+
+
+def test_query_service_underwidth_batch_restarts_wider(small_graph):
+    """Queries arriving after an under-width batch started do not
+    serialize through its few columns: the narrow batch drains without
+    refilling and the backlog restarts at full width."""
+    svc = QueryService(small_graph, slots=4, chunk_steps=1)
+    first = svc.submit("bfs", source=0)
+    svc.step()                 # width-1 batch in flight, not yet done
+    late = [svc.submit("bfs", source=s) for s in range(1, 9)]
+    svc.run_until_complete()
+    # batch 1 = the width-1 run; batch 2 = the 8 late queries at width
+    # 4 with continuous refill (serializing would keep batches == 1)
+    assert svc.stats()["batches_started"] == 2
+    for rid, s in zip([first] + late, range(9)):
+        ref = api.solve(small_graph, "bfs", root=s).state["dist"]
+        np.testing.assert_array_equal(
+            np.asarray(svc.poll(rid)["dist"]), np.asarray(ref))
+
+
+def test_query_service_no_group_starvation(small_graph):
+    """Group selection is FIFO by oldest waiting request, so a minority
+    group is served as soon as the requests ahead of it drain — a
+    steady majority stream cannot starve it."""
+    svc = QueryService(small_graph, slots=2, chunk_steps=64)
+    for s in range(4):
+        svc.submit("bfs", source=s)
+    minority = svc.submit("wcc")
+    late = [svc.submit("bfs", source=s) for s in range(4, 10)]
+    steps = 0
+    while svc.poll(minority) is None:
+        svc.step()
+        steps += 1
+        assert steps < 100
+    # the minority query completed before the later-submitted majority
+    assert any(not svc.record(r).done for r in late)
+    svc.run_until_complete()
+    assert not svc._queues                # drained queues are deleted
+
+
+def test_query_service_caches_unbatchable_with_honest_flag(small_graph):
+    """Unbatchable solves are deterministic given their params, so they
+    cache even when bounded (pagerank's fixed-iteration
+    converged=False) — and cache hits report the true convergence
+    flag."""
+    svc = QueryService(small_graph, slots=2)
+    a = svc.submit("pagerank", iters=5)
+    svc.run_until_complete()
+    assert svc.record(a).done and svc.record(a).converged is False
+    b = svc.submit("pagerank", iters=5)
+    assert svc.record(b).cached and svc.record(b).converged is False
+    np.testing.assert_array_equal(np.asarray(svc.poll(a)),
+                                  np.asarray(svc.poll(b)))
+
+
+def test_query_service_coalesces_inflight_duplicates(small_graph):
+    svc = QueryService(small_graph, slots=2)
+    a = svc.submit("bfs", source=5)
+    b = svc.submit("bfs", source=5)      # identical, still in flight
+    assert svc.stats()["coalesced"] == 1
+    svc.run_until_complete()
+    np.testing.assert_array_equal(np.asarray(svc.poll(a)["dist"]),
+                                  np.asarray(svc.poll(b)["dist"]))
+
+
+def test_query_service_validates_sources(small_graph):
+    svc = QueryService(small_graph, slots=2)
+    with pytest.raises(ValueError, match="out of range"):
+        svc.submit("bfs", source=-1)
+    with pytest.raises(KeyError, match="registered"):
+        svc.submit("nope", source=0)
+    # a missing source for a source-parameterized algorithm fails at
+    # submit, not deep inside the serving loop
+    with pytest.raises(ValueError, match="source-parameterized"):
+        svc.submit("bfs")
+    assert svc.pending() == 0            # nothing half-enqueued
+
+
+def test_query_service_honors_step_bound(small_graph):
+    """A per-query step budget (ppr's iters) bounds the chunked run
+    like it bounds a single solve: the query retires best-effort,
+    converged=False, uncached — instead of running to convergence and
+    caching a result a bounded solve would never produce."""
+    svc = QueryService(small_graph, slots=2, chunk_steps=32)
+    rid = svc.submit("ppr", source=1, iters=5, tol=1e-12)
+    svc.run_until_complete(max_rounds=50)
+    rec = svc.record(rid)
+    assert rec.done and not rec.converged and not rec.cached
+    assert svc.stats()["force_retired"] == 1
+    assert len(svc.cache) == 0           # best-effort result not cached
+    # the bounded single solve also reports non-convergence
+    assert not bool(api.solve(small_graph, "ppr", source=1, iters=5,
+                              tol=1e-12).converged)
+
+
+# -- result cache --------------------------------------------------------
+def test_result_cache_lru_eviction():
+    c = ResultCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1               # refreshes 'a'
+    c.put("c", 3)                        # evicts 'b' (least recent)
+    assert "b" not in c and c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    assert c.stats()["hits"] == 3 and c.stats()["misses"] == 1
+
+
+def test_graph_fingerprint_distinguishes_graphs(small_graph, power_graph):
+    assert graph_fingerprint(small_graph) == graph_fingerprint(
+        small_graph)
+    assert graph_fingerprint(small_graph) != graph_fingerprint(
+        power_graph)
+
+
+# -- api.solve index validation (regression) -----------------------------
+def test_solve_rejects_out_of_range_vertices(small_graph):
+    """Regression: negative / ≥n roots used to clip/drop silently under
+    JAX scatter semantics; now they raise naming the bad index."""
+    n = small_graph.n
+    with pytest.raises(ValueError, match=f"-1.*n={n}"):
+        api.solve(small_graph, "bfs", root=-1)
+    with pytest.raises(ValueError, match=f"{n}.*n={n}"):
+        api.solve(small_graph, "sssp_delta", source=n, delta=2.0)
+    with pytest.raises(ValueError, match="out of range"):
+        api.solve(small_graph, "ppr", source=n + 5)
+    with pytest.raises(ValueError, match="not a vertex index"):
+        api.solve(small_graph, "bfs", root=1.5)
+    # in-range values (int, np scalar, jnp scalar) still work
+    api.solve(small_graph, "bfs", root=np.int64(n - 1))
+    api.solve(small_graph, "bfs", root=jnp.int32(0))
+
+
+# -- throughput harness row contract -------------------------------------
+def test_service_bench_row_validates_against_schema(small_graph):
+    """One real solve_batch-backed service row conforms to the schema's
+    service_cell shape (the CI smoke runs the full harness)."""
+    from benchmarks.validate import _check, load_schema
+    r = api.solve_batch(small_graph, "bfs", sources=[0, 1, 2, 3])
+    payload = {
+        "algorithm": "bfs", "graph": "er", "n": int(small_graph.n),
+        "m": int(small_graph.m), "policy": "pull", "backend": "dense",
+        "batch": 4, "queries": 4, "us_per_query_batched": 10.0,
+        "us_per_query_sequential": 40.0, "qps_batched": 100.0,
+        "qps_sequential": 25.0, "speedup": 4.0,
+        "steps": int(r.steps), "push_steps": int(r.push_steps),
+        "weighted_total": float(r.cost.weighted_total()),
+    }
+    schema = load_schema()
+    defs = schema["definitions"]
+    _check(payload, defs["service_cell"], defs)
+    report = {"rows": [{"name": "service_bfs_er_pull_b4",
+                        "us_per_call": 40.0, "derived": payload}],
+              "failures": []}
+    from benchmarks.validate import validate_report
+    assert validate_report(report)
+    bad = dict(payload)
+    del bad["qps_batched"]
+    with pytest.raises(Exception):
+        validate_report({"rows": [{"name": "service_x",
+                                   "us_per_call": 1.0, "derived": bad}],
+                         "failures": []})
