@@ -1,57 +1,162 @@
-"""Kernel-level push/pull microbenchmarks: Pallas (interpret) kernels vs
-their jnp oracles — correctness sweep + relative timing on a stand-in."""
+"""Kernel-level push/pull wall-clock suite — the ``kernel_*`` rows.
+
+The first *wall-clock* (not counter-only) trajectory in BENCH: for every
+(direction × combine × graph family × batch width) cell, time the jnp
+primitive (``pull_relax_ell`` / ``push_relax``) against the Pallas
+kernel (``ell_spmv_pallas`` / ``coo_push_pallas``) at the autotuned
+block size, check they agree, and emit one schema-validated
+``kernel_cell`` row (``benchmarks/schema.json``).
+
+    PYTHONPATH=src python -m benchmarks.run --only kernels \
+        --json BENCH_kernels.json
+
+``--smoke`` shrinks to the RMAT family × sum × both directions (CI
+asserts the rows exist and validate — interpreter wall-clock is only
+meaningful relatively, and only the committed full run claims the
+pull-side win). The model kernels (flash attention, CIN) keep a small
+sanity row each under the ``aux_`` prefix.
+"""
 
 from __future__ import annotations
+
+import functools
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import cin_layer, flash_attention, pull_spmv, push_combine
-from repro.kernels import ref as R
+from . import common
+from .common import emit, timeit
 
-from .common import emit, graph, timeit
+
+def _graphs(smoke: bool):
+    from repro.graphs import erdos_renyi, kronecker
+    if smoke:
+        return {"rmat": kronecker(7, edge_factor=6, seed=7,
+                                  weighted=True)}
+    return {
+        "rmat": kronecker(10, edge_factor=8, seed=7, weighted=True),
+        "uniform": erdos_renyi(1024, 8.0, seed=5, weighted=True),
+    }
+
+
+def _payload(g, batch: int, dtype):
+    shape = (g.n,) if batch == 1 else (g.n, batch)
+    key = jax.random.PRNGKey(3)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jax.random.normal(key, shape, dtype)
+    return jax.random.randint(key, shape, -100, 100).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("combine",))
+def _jnp_pull(g, x, combine):
+    from repro.core.primitives import pull_relax_ell
+    return pull_relax_ell(g, x, combine=combine)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("combine",))
+def _jnp_push(g, x, active, combine):
+    from repro.core.primitives import push_relax
+    return push_relax(g, x, active, combine=combine)[0]
+
+
+def _agree(a, b) -> bool:
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind == "f":
+        return bool(np.allclose(a, b, rtol=1e-5, atol=1e-5,
+                                equal_nan=True))
+    return bool(np.array_equal(a, b))
+
+
+def _cell(direction, combine, gname, g, batch, extra):
+    return dict({
+        "direction": direction, "combine": combine, "graph": gname,
+        "n": int(g.n), "m": int(g.m), "d_ell": int(g.d_ell),
+        "batch": int(batch), "dtype": "float32", "msg": "copy",
+    }, **extra)
 
 
 def run():
-    g = graph("pok", scale=1.0 / 1024)
-    x = jax.random.normal(jax.random.PRNGKey(0), (g.n,), jnp.float32)
-    act = jnp.ones((g.n,), bool)
+    from repro.graphs.structure import pad_values
+    from repro.kernels.coo_push import coo_push_pallas
+    from repro.kernels.ell_spmv import ell_spmv_pallas
+    from repro.kernels.tune import tune_pull, tune_push
 
-    out = pull_spmv(g, x, "sum")
-    want = R.ell_spmv_ref(jnp.pad(x, (0, 1)), g.ell_idx, g.ell_w, "sum")
-    ok1 = bool(jnp.allclose(out, want, atol=1e-4))
-    t = timeit(lambda: pull_spmv(g, x, "sum"), iters=2)
-    emit("kernel_ell_spmv", t, f"allclose={ok1};n={g.n};d_ell={g.d_ell}")
+    combines = ("sum",) if common.SMOKE else ("sum", "min")
+    batches = (1, 8)
+    iters = 2 if common.SMOKE else 3
 
-    out = push_combine(g, x, act)
-    want = R.coo_push_ref(x, act, g.coo_src, g.coo_dst, g.coo_w, g.n)
-    ok2 = bool(jnp.allclose(out, want, atol=1e-4))
-    t = timeit(lambda: push_combine(g, x, act), iters=2)
-    emit("kernel_coo_push", t, f"allclose={ok2};m={g.m}")
+    for gname, g in _graphs(common.SMOKE).items():
+        for combine in combines:
+            for batch in batches:
+                x = _payload(g, batch, jnp.float32)
+                # ---- pull: jnp ELL gather vs Pallas ell_spmv --------
+                us_jnp = timeit(lambda: _jnp_pull(g, x, combine),
+                                iters=iters)
+                block_n = tune_pull(g.n, g.d_ell, batch, x.dtype,
+                                    combine, "copy")
+                xp = pad_values(x)
+                pallas_pull = lambda: ell_spmv_pallas(  # noqa: E731
+                    xp, g.ell_idx, g.ell_w, combine=combine, msg="copy",
+                    block_n=block_n)
+                us_pal = timeit(pallas_pull, iters=iters)
+                cell = _cell("pull", combine, gname, g, batch, {
+                    "block_n": int(block_n),
+                    "us_jnp": round(us_jnp, 1),
+                    "us_pallas": round(us_pal, 1),
+                    "speedup": round(us_jnp / max(us_pal, 1e-9), 3),
+                    "match": _agree(_jnp_pull(g, x, combine),
+                                    pallas_pull()),
+                })
+                emit(f"kernel_pull_{combine}_{gname}_b{batch}", us_pal,
+                     json.dumps(cell))
 
+                # ---- push: jnp segment scatter vs Pallas coo_push ---
+                active = jnp.ones((g.n,), bool)
+                us_jnp = timeit(lambda: _jnp_push(g, x, active, combine),
+                                iters=iters)
+                block_e, pbn = tune_push(g.n, g.m, batch, x.dtype,
+                                         combine, "copy")
+                pallas_push = lambda: coo_push_pallas(  # noqa: E731
+                    x, active, g.coo_src, g.coo_dst, g.coo_w, g.n,
+                    combine=combine, msg="copy", block_e=block_e,
+                    block_n=pbn)
+                us_pal = timeit(pallas_push, iters=iters)
+                cell = _cell("push", combine, gname, g, batch, {
+                    "block_e": int(block_e), "block_n": int(pbn),
+                    "us_jnp": round(us_jnp, 1),
+                    "us_pallas": round(us_pal, 1),
+                    "speedup": round(us_jnp / max(us_pal, 1e-9), 3),
+                    "match": _agree(_jnp_push(g, x, active, combine),
+                                    pallas_push()),
+                })
+                emit(f"kernel_push_{combine}_{gname}_b{batch}", us_pal,
+                     json.dumps(cell))
+
+    # ---- model-kernel sanity rows (aux_: not kernel_cell shaped) ----
+    from repro.kernels import cin_layer, flash_attention
+    from repro.kernels import ref as R
     key = jax.random.PRNGKey(1)
-    B, T, H, d = 1, 256, 4, 64
+    B, T, H, d = 1, 128 if common.SMOKE else 256, 4, 64
     q = jax.random.normal(key, (B, T, H, d), jnp.float32)
     k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, d))
     v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, d))
-    out = flash_attention(q, k, v)
     want = R.flash_attention_ref(q.transpose(0, 2, 1, 3),
                                  k.transpose(0, 2, 1, 3),
-                                 v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
-    ok3 = bool(jnp.allclose(out, want, atol=1e-3))
+                                 v.transpose(0, 2, 1, 3)
+                                 ).transpose(0, 2, 1, 3)
+    ok = bool(jnp.allclose(flash_attention(q, k, v), want, atol=1e-3))
     t = timeit(lambda: flash_attention(q, k, v), iters=2)
-    emit("kernel_flash_attention", t, f"allclose={ok3};T={T}")
+    emit("aux_flash_attention", t, f"allclose={ok};T={T}")
 
-    xk = jax.random.normal(key, (256, 200, 10), jnp.float32)
-    x0 = jax.random.normal(jax.random.fold_in(key, 3), (256, 39, 10))
-    w = jax.random.normal(jax.random.fold_in(key, 4), (200, 200, 39)) * 0.01
-    out = cin_layer(xk, x0, w)
-    want = R.cin_layer_ref(xk, x0, w)
-    ok4 = bool(jnp.allclose(out, want, rtol=1e-3, atol=1e-3))
+    xk = jax.random.normal(key, (64, 50, 10), jnp.float32)
+    x0 = jax.random.normal(jax.random.fold_in(key, 3), (64, 20, 10))
+    w = jax.random.normal(jax.random.fold_in(key, 4), (50, 50, 20)) * 0.01
+    ok = bool(jnp.allclose(cin_layer(xk, x0, w), R.cin_layer_ref(xk, x0, w),
+                           rtol=1e-3, atol=1e-3))
     t = timeit(lambda: cin_layer(xk, x0, w), iters=2)
-    emit("kernel_cin", t, f"allclose={ok4};B=256;H=200")
-    return ok1 and ok2 and ok3 and ok4
+    emit("aux_cin", t, f"allclose={ok};B=64;H=50")
 
 
 if __name__ == "__main__":

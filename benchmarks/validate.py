@@ -10,9 +10,10 @@ Uses ``jsonschema`` when installed; otherwise falls back to a built-in
 validator covering the subset of draft-07 the schema uses (type,
 required, properties, additionalProperties, items, enum, minimum, $ref).
 Rows named ``pushpull_*`` additionally have their ``derived`` payload
-checked against ``definitions/pushpull_cell``, and rows named
-``service_*`` against ``definitions/service_cell`` — the conventions
-the schema documents.
+checked against ``definitions/pushpull_cell``, rows named ``service_*``
+against ``definitions/service_cell``, and rows named ``kernel_*``
+against ``definitions/kernel_cell`` — the conventions the schema
+documents.
 """
 
 from __future__ import annotations
@@ -83,14 +84,17 @@ def validate_report(report: dict) -> bool:
         jsonschema.validate(report, schema)
     except ImportError:
         _check(report, schema, defs)
-    # schema-documented conventions: pushpull_* and service_* rows
-    # carry structured cells
+    # schema-documented conventions: pushpull_*, service_*, and
+    # kernel_* rows carry structured cells
     for row in report.get("rows", ()):
         if row.get("name", "").startswith("pushpull_"):
             _check(row["derived"], defs["pushpull_cell"], defs,
                    f"$.rows[{row['name']}].derived")
         elif row.get("name", "").startswith("service_"):
             _check(row["derived"], defs["service_cell"], defs,
+                   f"$.rows[{row['name']}].derived")
+        elif row.get("name", "").startswith("kernel_"):
+            _check(row["derived"], defs["kernel_cell"], defs,
                    f"$.rows[{row['name']}].derived")
     return True
 

@@ -50,8 +50,12 @@ def main():
     assert np.allclose(np.asarray(r.state), np.asarray(pull.ranks),
                        atol=1e-6)
     w = api.solve(g, "wcc", policy=GenericSwitch())
+    k = api.solve(g, "pagerank", iters=10, backend="pallas")
+    assert np.allclose(np.asarray(k.state), np.asarray(pull.ranks),
+                       atol=1e-6)
     print(f"\napi.solve: algorithms={api.algorithms()}")
-    print(f"  pagerank@ELL == pagerank@dense; wcc converged in "
+    print(f"  pagerank@ELL == pagerank@Pallas == pagerank@dense; "
+          f"wcc converged in "
           f"{int(w.steps)} steps ({int(w.push_steps)} push)")
 
     # --- Phase-structured programs: every paper workload, one solve() ---

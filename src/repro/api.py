@@ -13,6 +13,7 @@ implementations. This module is that claim as an interface:
     r = api.solve(g, "bfs", root=0, policy="auto")          # AutoSwitch
     r = api.solve(g, "sssp_delta", source=0, delta=2.0)     # Δ-stepping
     r = api.solve(g, "mst_boruvka", backend=EllBackend())   # ELL layout
+    r = api.solve(g, "bfs", root=0, backend="pallas")       # Pallas kernels
 
 Every algorithm is a :class:`~repro.core.engine.VertexProgram` — or a
 multi-phase :class:`~repro.core.engine.PhaseProgram` (Δ-stepping's bucket
@@ -20,10 +21,10 @@ epochs, Brandes BC's forward/backward pair, Borůvka's find-min/contract
 rounds, Boman coloring's color/fix iterations) — executed by the
 :class:`~repro.core.engine.PushPullEngine`; ``policy`` chooses the
 direction per step (Fixed / GenericSwitch / GreedySwitch) and ``backend``
-chooses the memory system (Dense / ELL / Distributed) — any algorithm
-runs under any (policy × backend) cell it declares supported and returns
-the same states. Unsupported combinations raise a ``ValueError`` naming
-the combination.
+chooses the memory system (Dense / ELL / Pallas / Distributed) — any
+algorithm runs under any (policy × backend) cell it declares supported
+and returns the same states. Unsupported combinations raise a
+``ValueError`` naming the combination.
 
 ``solve`` returns a :class:`RunResult` with a unified surface:
 ``state`` (algorithm-specific pytree), ``cost`` (paper Table-1
@@ -61,7 +62,7 @@ from .core.algorithms.triangle_count import (triangle_finalize,
                                              triangle_program)
 from .core.algorithms.wcc import wcc_init, wcc_program
 from .core.backend import (DenseBackend, DistributedBackend, EllBackend,
-                           ExchangeBackend)
+                           ExchangeBackend, PallasBackend)
 from .core.cost_model import Cost, StepTrace
 from .core.direction import (AutoSwitch, Direction, DirectionPolicy, Fixed,
                              GenericSwitch, GreedySwitch)
@@ -70,9 +71,10 @@ from .graphs.structure import Graph
 
 __all__ = ["RunResult", "AlgorithmSpec", "register", "algorithms",
            "get_spec", "solve", "solve_batch", "POLICY_SHORTHANDS",
-           "DenseBackend", "EllBackend", "DistributedBackend",
-           "ExchangeBackend", "Fixed", "GenericSwitch", "GreedySwitch",
-           "AutoSwitch", "Direction"]
+           "BACKEND_SHORTHANDS", "DenseBackend", "EllBackend",
+           "PallasBackend", "DistributedBackend", "ExchangeBackend",
+           "Fixed", "GenericSwitch", "GreedySwitch", "AutoSwitch",
+           "Direction"]
 
 
 class RunResult(NamedTuple):
@@ -139,7 +141,7 @@ class AlgorithmSpec:
     finalize: Callable = staticmethod(lambda g, state: state)
     default_policy: DirectionPolicy = GenericSwitch()
     runtime_keys: tuple = ()
-    backends: tuple = ("dense", "ell", "distributed")
+    backends: tuple = ("dense", "ell", "pallas", "distributed")
     policies: tuple = ("push", "pull", "gs", "grs", "auto")
     paper: str = ""
 
@@ -208,6 +210,18 @@ POLICY_SHORTHANDS: dict[str, Callable[[], DirectionPolicy]] = {
     "auto": AutoSwitch,
 }
 
+# String shorthands accepted wherever an ExchangeBackend is expected.
+# One shared instance per name (not a factory): engines are cached per
+# backend instance, and the Pallas backend additionally keeps its
+# autotuner cache warm across solves. "distributed" is absent on
+# purpose — it is graph-specific and must go through
+# DistributedBackend.prepare(g).
+BACKEND_SHORTHANDS: dict[str, ExchangeBackend] = {
+    "dense": DenseBackend(),
+    "ell": EllBackend(),
+    "pallas": PallasBackend(),
+}
+
 # solve(trace=True) records up to this many steps
 _DEFAULT_TRACE_CAPACITY = 256
 
@@ -254,9 +268,23 @@ def _resolve_policy(policy) -> DirectionPolicy:
             "instance)") from None
 
 
+def _resolve_backend(backend) -> ExchangeBackend:
+    if backend is None:
+        return BACKEND_SHORTHANDS["dense"]
+    if not isinstance(backend, str):
+        return backend
+    try:
+        return BACKEND_SHORTHANDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend shorthand {backend!r}; valid options: "
+            f"{sorted(BACKEND_SHORTHANDS)} (or pass an ExchangeBackend "
+            "instance, e.g. DistributedBackend.prepare(g))") from None
+
+
 def solve(g: Graph, algorithm: str, *,
           policy: Optional[DirectionPolicy | str] = None,
-          backend: Optional[ExchangeBackend] = None,
+          backend: Optional[ExchangeBackend | str] = None,
           max_steps: Optional[int] = None,
           trace: int | bool = 0, **kw) -> RunResult:
     """Run ``algorithm`` on ``g`` under a direction policy and an
@@ -270,8 +298,10 @@ def solve(g: Graph, algorithm: str, *,
             ``"gs"`` (GenericSwitch), ``"grs"`` (GreedySwitch), ``"auto"``
             (cost-model-driven AutoSwitch). Default: the algorithm's
             declared default policy.
-        backend: the exchange backend (Dense / ELL / Distributed);
-            default :class:`DenseBackend`.
+        backend: an :class:`ExchangeBackend` instance or one of the
+            string shorthands ``"dense"``, ``"ell"``, ``"pallas"``
+            (kernel-dispatching :class:`PallasBackend`); default
+            :class:`DenseBackend`.
         max_steps: per-phase step bound override (bounds *epochs* for
             phase programs).
         trace: record a per-step
@@ -283,14 +313,14 @@ def solve(g: Graph, algorithm: str, *,
     Example::
 
         r = api.solve(g, "bfs", root=0, policy="auto")
-        r = api.solve(g, "pagerank", iters=30, backend=EllBackend())
+        r = api.solve(g, "pagerank", iters=30, backend="pallas")
         r = api.solve(g, "sssp_delta", source=0, delta=2.0, trace=128)
 
     Raises:
         KeyError: unknown algorithm name.
-        ValueError: unknown policy shorthand, a (policy × backend)
-            combination the algorithm declares unsupported, or a
-            ``root``/``source`` vertex index outside ``[0, n)``.
+        ValueError: unknown policy or backend shorthand, a (policy ×
+            backend) combination the algorithm declares unsupported, or
+            a ``root``/``source`` vertex index outside ``[0, n)``.
     """
     spec = get_spec(algorithm)
     for vkey in _VERTEX_KEYS:
@@ -298,7 +328,7 @@ def solve(g: Graph, algorithm: str, *,
             validate_vertex_indices(g, vkey, kw[vkey])
     policy = (spec.default_policy if policy is None
               else _resolve_policy(policy))
-    backend = DenseBackend() if backend is None else backend
+    backend = _resolve_backend(backend)
     trace_capacity = (_DEFAULT_TRACE_CAPACITY if trace is True
                       else int(trace))
     static_kw = {k: v for k, v in kw.items() if k not in spec.runtime_keys}
@@ -333,7 +363,7 @@ def solve(g: Graph, algorithm: str, *,
 
 def solve_batch(g: Graph, algorithm: str, *, sources,
                 policy: Optional[DirectionPolicy | str] = None,
-                backend: Optional[ExchangeBackend] = None,
+                backend: Optional[ExchangeBackend | str] = None,
                 max_steps: Optional[int] = None, **kw):
     """Run one *batched* multi-query solve: B queries of ``algorithm``
     (one per entry of ``sources``) over one shared graph and backend.
@@ -384,7 +414,7 @@ register(AlgorithmSpec(
     name="ppr", build=ppr_program, init=ppr_init,
     finalize=ppr_finalize,
     default_policy=Fixed(Direction.PULL),
-    runtime_keys=("source",), backends=("dense", "ell"),
+    runtime_keys=("source",), backends=("dense", "ell", "pallas"),
     paper="§3.1 (personalized variant; service-layer batching)"))
 
 register(AlgorithmSpec(
@@ -397,29 +427,33 @@ register(AlgorithmSpec(
     name="sssp_delta", build=sssp_delta_program, init=sssp_delta_init,
     finalize=sssp_delta_finalize,
     default_policy=Fixed(Direction.PUSH),
-    runtime_keys=("source",), backends=("dense", "ell"),
+    runtime_keys=("source",), backends=("dense", "ell", "pallas"),
     paper="§3.4/§4.4 Alg. 4"))
 
 register(AlgorithmSpec(
     name="betweenness", build=betweenness_program, init=betweenness_init,
     finalize=betweenness_finalize,
-    default_policy=Fixed(Direction.PULL), backends=("dense", "ell"),
+    default_policy=Fixed(Direction.PULL),
+    backends=("dense", "ell", "pallas"),
     paper="§3.5/§4.5 Alg. 5"))
 
 register(AlgorithmSpec(
     name="coloring", build=coloring_program, init=coloring_init,
     finalize=coloring_finalize,
-    default_policy=Fixed(Direction.PUSH), backends=("dense", "ell"),
+    default_policy=Fixed(Direction.PUSH),
+    backends=("dense", "ell", "pallas"),
     paper="§3.6/§4.6 Alg. 6"))
 
 register(AlgorithmSpec(
     name="mst_boruvka", build=mst_program, init=mst_init,
     finalize=mst_finalize,
-    default_policy=Fixed(Direction.PULL), backends=("dense", "ell"),
+    default_policy=Fixed(Direction.PULL),
+    backends=("dense", "ell", "pallas"),
     paper="§3.7/§4.7 Alg. 7"))
 
 register(AlgorithmSpec(
     name="triangle_count", build=triangle_program, init=triangle_init,
     finalize=triangle_finalize,
-    default_policy=Fixed(Direction.PULL), backends=("dense", "ell"),
+    default_policy=Fixed(Direction.PULL),
+    backends=("dense", "ell", "pallas"),
     paper="§3.2/§4.2 Alg. 2"))

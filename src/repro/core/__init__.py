@@ -1,7 +1,8 @@
 """Core push-pull machinery (the paper's contribution)."""
 
 from .backend import (DenseBackend, DistributedBackend, EllBackend,
-                      ExchangeBackend, require_backend)
+                      ExchangeBackend, PallasBackend, classify_msg_fn,
+                      require_backend)
 from .cost_model import (Cost, CostPredictor, CostWeights, DEFAULT_WEIGHTS,
                          StepStats, StepTrace, zero_cost, counter,
                          counter_dtype)
@@ -16,8 +17,8 @@ from .primitives import (push_relax, pull_relax, pull_relax_ell, k_filter,
                          combine_identity)
 
 __all__ = [
-    "ExchangeBackend", "DenseBackend", "EllBackend", "DistributedBackend",
-    "require_backend",
+    "ExchangeBackend", "DenseBackend", "EllBackend", "PallasBackend",
+    "DistributedBackend", "require_backend", "classify_msg_fn",
     "Cost", "CostPredictor", "CostWeights", "DEFAULT_WEIGHTS", "StepStats",
     "StepTrace", "zero_cost", "counter", "counter_dtype",
     "Direction", "DirectionPolicy", "Fixed", "GenericSwitch", "GreedySwitch",

@@ -9,8 +9,14 @@ engine/API never care how:
   * ``DenseBackend``       — the dense-frontier segment ops
     (``push_relax`` / ``pull_relax``), shared-memory semantics.
   * ``EllBackend``         — pull in the ELL (padded-row) layout the
-    Pallas ``ell_spmv`` kernel tiles; push falls back to the COO scatter
-    (ELL is a pull-major layout).
+    Pallas ``ell_spmv`` kernel tiles; push falls back to the CSC
+    (push-major) segment scatter (ELL is a pull-major layout).
+  * ``PallasBackend``      — the ELL semantics executed by the actual
+    Pallas kernels (``ell_spmv_pallas`` pull, ``coo_push_pallas`` push)
+    with autotuned block sizes; cells the kernels do not cover
+    (exotic ``msg_fn``, unsupported combine/dtype/payload rank) fall
+    back transparently to the jnp primitives, so every registered
+    algorithm and policy string still runs.
   * ``DistributedBackend`` — the paper's §6 DM setting: a 1D partition +
     PA edge split; local edges are plain per-owner writes, remote edges
     go through ``dist.collectives`` (combined-alltoall push or
@@ -24,6 +30,7 @@ inside jitted loops.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Callable, Optional
 
 import jax
@@ -32,12 +39,13 @@ import jax.numpy as jnp
 from ..graphs.structure import Graph
 from .cost_model import Cost, counter, counter_dtype
 from .direction import Direction
-from .primitives import (combine_identity, frontier_in_edges,
+from .primitives import (COMBINE_FNS, combine_identity, frontier_in_edges,
                          frontier_out_edges, mask_untouched, pull_relax,
                          pull_relax_ell, push_relax)
 
 __all__ = ["ExchangeBackend", "DenseBackend", "EllBackend",
-           "DistributedBackend", "require_backend"]
+           "PallasBackend", "DistributedBackend", "require_backend",
+           "classify_msg_fn"]
 
 
 def require_backend(algorithm: str, backend, *allowed) -> None:
@@ -130,7 +138,8 @@ class DenseBackend(ExchangeBackend):
 @dataclasses.dataclass(frozen=True)
 class EllBackend(ExchangeBackend):
     """Pull in the ELL layout (rectangular VMEM tiles — what the
-    ``ell_spmv`` Pallas kernel consumes); push falls back to COO."""
+    ``ell_spmv`` Pallas kernel consumes); push falls back to the CSC
+    (push-major) segment scatter."""
 
     pull_scans_all = True
 
@@ -144,6 +153,232 @@ class EllBackend(ExchangeBackend):
         if touched is not None:
             out = mask_untouched(out, touched, combine)
         return out, cost
+
+
+# -- Pallas kernel dispatch --------------------------------------------
+# msg_fn classification: the kernels implement the three wire-message
+# shapes every registered algorithm uses. A msg_fn is classified by
+# probing it on concrete values (msg_fns are pure elementwise jnp
+# lambdas, so the probe runs eagerly even while an outer jit trace is
+# being built) and matching the result against the candidate modes. The
+# probe mixes signs, zero, and large magnitudes so functions that only
+# coincide with a mode on tame inputs (clipping/saturation, piecewise
+# definitions) are rejected rather than silently mis-dispatched.
+_MSG_PROBE_X = (0.5, -1.25, 2.0, 0.0, 3e6, -7e5, 1e-4, 64.0)
+_MSG_PROBE_W = (1.5, 0.25, -3.0, 2.0, -2e6, 4e5, 5e3, -0.125)
+_MSG_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def classify_msg_fn(msg_fn: Optional[Callable]) -> Optional[str]:
+    """Kernel message mode for ``msg_fn``: ``"copy"`` (msg = value,
+    the primitives' ``msg_fn=None`` convention), ``"mul"`` (value ×
+    weight — SpMV), ``"add"`` (value + weight — the min-plus
+    relaxation), or None when the function matches none of them (the
+    caller falls back to the jnp primitives)."""
+    if msg_fn is None:
+        return "copy"
+    try:
+        return _MSG_CACHE[msg_fn]
+    except (KeyError, TypeError):
+        pass
+    import numpy as np
+    mode = None
+    try:
+        # escape any ambient jit trace: the probe must execute eagerly
+        # even while the engine's loop is being traced
+        with jax.ensure_compile_time_eval():
+            x = jnp.asarray(_MSG_PROBE_X, jnp.float32)
+            w = jnp.asarray(_MSG_PROBE_W, jnp.float32)
+            got = np.asarray(msg_fn(x, w))
+            cands = (("copy", x), ("mul", x * w), ("add", x + w))
+            for cand, want in cands:
+                if got.shape == x.shape and np.allclose(
+                        got, np.asarray(want), rtol=1e-6, atol=1e-6):
+                    mode = cand
+                    break
+    except Exception:      # arbitrary callables may reject the probe
+        mode = None
+    try:
+        _MSG_CACHE[msg_fn] = mode
+    except TypeError:      # non-weakrefable callables skip the cache
+        pass
+    return mode
+
+
+_PALLAS_DTYPES = ("float32", "float64", "int32", "int64")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PallasBackend(EllBackend):
+    """The ELL backend's semantics executed by the Pallas kernels.
+
+    ``pull`` dispatches to ``ell_spmv_pallas`` (padded-row gather +
+    combine) and ``push`` to ``coo_push_pallas`` (dst-sorted tile-serial
+    combine); both inherit ``pull_scans_all=True`` (the rectangular
+    gather touches every edge), so AutoSwitch prices kernel pulls
+    correctly. Block sizes come from ``kernels/tune.py`` — probed once
+    per (graph shape, payload shape) and cached on this instance —
+    unless pinned via ``block_n``/``block_e``. ``interpret=None``
+    auto-detects (compiled on TPU, interpreter elsewhere).
+
+    Cells outside the kernels' coverage — a ``msg_fn`` that is not one
+    of the three wire-message shapes, a combine outside {sum, max, min},
+    payload rank > 2, or a dtype outside float32/float64/int32/int64 —
+    fall back to the jnp primitives (``EllBackend``'s paths), charging
+    identical costs, so every (algorithm × policy) cell keeps running.
+
+        >>> r = api.solve(g, "bfs", root=0, backend="pallas")  # doctest: +SKIP
+
+    ``stats`` counts trace-time dispatch decisions (kernel vs fallback,
+    per direction) — observability for tests and benchmarks.
+    """
+    interpret: Optional[bool] = None
+    block_n: Optional[int] = None     # pull tile rows (None = autotune)
+    block_e: Optional[int] = None     # push edge-tile size
+    push_block_n: Optional[int] = None  # push window node block
+    autotune: bool = True
+    stats: dict = dataclasses.field(
+        default_factory=lambda: {"kernel_pull": 0, "kernel_push": 0,
+                                 "fallback_pull": 0, "fallback_push": 0})
+    _tuned: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    # identity eq/hash, explicitly: instances carry mutable caches and
+    # distinct block/interpret configs, and the engine cache keys on the
+    # backend. eq=False alone would inherit EllBackend's *value*-based
+    # __eq__/__hash__ (which see no PallasBackend fields), making every
+    # instance compare equal and collide in the cache.
+    __hash__ = object.__hash__
+
+    def __eq__(self, other):
+        return self is other
+
+    # -- dispatch help -----------------------------------------------------
+    def _mode(self, values, combine, msg_fn) -> Optional[str]:
+        if combine not in ("sum", "max", "min"):
+            return None
+        if values.ndim not in (1, 2):
+            return None
+        if str(values.dtype) not in _PALLAS_DTYPES:
+            return None
+        return classify_msg_fn(msg_fn)
+
+    def _pull_block_n(self, g: Graph, values, combine, mode) -> int:
+        if self.block_n is not None:
+            return self.block_n
+        from ..kernels.tune import pull_candidates, tune_pull
+        width = 1 if values.ndim == 1 else int(values.shape[-1])
+        key = ("pull", g.n, g.d_ell, width, str(values.dtype), combine,
+               mode)
+        if key not in self._tuned:
+            self._tuned[key] = (
+                tune_pull(g.n, g.d_ell, width, values.dtype, combine,
+                          mode, self.interpret)
+                if self.autotune else pull_candidates(g.n)[0])
+        return self._tuned[key]
+
+    def _push_blocks(self, g: Graph, values, combine,
+                     mode) -> tuple[int, int]:
+        if self.block_e is not None and self.push_block_n is not None:
+            return self.block_e, self.push_block_n
+        from ..kernels.tune import push_candidates, tune_push
+        width = 1 if values.ndim == 1 else int(values.shape[-1])
+        key = ("push", g.n, g.m, width, str(values.dtype), combine, mode)
+        if key not in self._tuned:
+            self._tuned[key] = (
+                tune_push(g.n, g.m, width, values.dtype, combine, mode,
+                          self.interpret)
+                if self.autotune else push_candidates(g.n, g.m)[0])
+        be, bn = self._tuned[key]
+        # partial pins override only their own component
+        if self.block_e is not None:
+            be = self.block_e
+        if self.push_block_n is not None:
+            bn = self.push_block_n
+        return be, bn
+
+    # -- ExchangeBackend ---------------------------------------------------
+    def pull(self, g, values, touched, combine, msg_fn, cost):
+        mode = self._mode(values, combine, msg_fn)
+        if mode is None:
+            self.stats["fallback_pull"] += 1
+            return super().pull(g, values, touched, combine, msg_fn, cost)
+        from ..graphs.structure import pad_values
+        from ..kernels.ell_spmv import ell_spmv_pallas
+        self.stats["kernel_pull"] += 1
+        out = ell_spmv_pallas(
+            pad_values(values), g.ell_idx, g.ell_w, combine=combine,
+            msg=mode, block_n=self._pull_block_n(g, values, combine, mode),
+            interpret=self.interpret)
+        if touched is not None:
+            out = mask_untouched(out, touched, combine)
+        width = 1 if values.ndim == 1 else values.shape[-1]
+        # identical charge to pull_relax_ell: the rectangular gather
+        # reads every edge, private writes per destination
+        cost = cost.charge(reads=counter(g.m) * width,
+                           writes=counter(g.n) * width)
+        return out, cost
+
+    def push(self, g, values, frontier, combine, msg_fn, cost):
+        mode = self._mode(values, combine, msg_fn)
+        if mode is None:
+            self.stats["fallback_push"] += 1
+            return super().push(g, values, frontier, combine, msg_fn,
+                                cost)
+        from ..kernels.coo_push import coo_push_pallas, push_window_fits
+        self.stats["kernel_push"] += 1
+        block_e, block_n = self._push_blocks(g, values, combine, mode)
+
+        def kernel(v, f):
+            return coo_push_pallas(
+                v, f, g.coo_src, g.coo_dst, g.coo_w, g.n, combine=combine,
+                msg=mode, block_e=block_e, block_n=block_n,
+                interpret=self.interpret)
+
+        if block_e + block_n >= g.n:
+            # window covers every destination: precondition holds
+            # statically (the tuner's ladder always lands here)
+            out = kernel(values, frontier)
+        else:
+            # caller-pinned small blocks: guard the kernel's window
+            # precondition at runtime, falling back to the same combine
+            # over the same dst-sorted edge order. The O(m) fits check
+            # is traced per step on purpose: g is a tracer here, and
+            # engines are cached per graph *shape* — deciding the
+            # branch eagerly per concrete graph would bake one graph's
+            # answer into an engine other same-shape graphs reuse.
+            out = jax.lax.cond(
+                push_window_fits(g.coo_dst, g.n, block_e, block_n),
+                kernel, lambda v, f: _coo_push_jnp(g, v, f, combine,
+                                                   mode),
+                values, frontier)
+        k = frontier_out_edges(g, frontier)
+        width = 1 if values.ndim == 1 else values.shape[-1]
+        cost = cost.charge(reads=k * width).charge_combining_writes(
+            k * width,
+            float_data=jnp.issubdtype(values.dtype, jnp.floating))
+        return out, cost
+
+
+def _coo_push_jnp(g: Graph, values, frontier, combine: str, mode: str):
+    """Segment-op push over the *dst-sorted* edge order — the runtime
+    fallback branch when a pinned block configuration cannot guarantee
+    the COO kernel's window precondition (same combine, same order, so
+    the two branches agree)."""
+    x = jnp.take(values, g.coo_src, axis=0, mode="fill", fill_value=0)
+    if mode == "mul":
+        w = g.coo_w
+        msgs = x * (w[:, None] if x.ndim == 2 else w)
+    elif mode == "add":
+        w = g.coo_w
+        msgs = x + (w[:, None] if x.ndim == 2 else w)
+    else:
+        msgs = x
+    active_e = jnp.take(frontier, g.coo_src, axis=0, mode="fill",
+                        fill_value=False)
+    if msgs.ndim == 2:
+        active_e = active_e[:, None]
+    msgs = jnp.where(active_e, msgs, combine_identity(combine, msgs.dtype))
+    return COMBINE_FNS[combine](msgs, g.coo_dst, g.n)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -166,8 +401,16 @@ class DistributedBackend(ExchangeBackend):
     cut_edges: int = 0
     axis: str = "data"
 
-    # identity-based hash/eq (eq=False): instances hold jnp arrays, and
-    # jit static-arg hashing only needs per-instance identity.
+    # identity hash/eq, explicitly (eq=False would inherit the parent
+    # dataclass's value-based comparison, which sees none of this
+    # class's fields — two backends prepared for different same-shape
+    # graphs would collide in the engine cache): instances hold jnp
+    # arrays, and jit static-arg hashing only needs per-instance
+    # identity.
+    __hash__ = object.__hash__
+
+    def __eq__(self, other):
+        return self is other
 
     @classmethod
     def prepare(cls, g: Graph, mesh=None, num_parts: Optional[int] = None,

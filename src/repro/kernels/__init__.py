@@ -1,5 +1,6 @@
 from .ops import pull_spmv, push_combine, flash_attention, cin_layer
+from .tune import tune_pull, tune_push
 from . import ref
 
 __all__ = ["pull_spmv", "push_combine", "flash_attention", "cin_layer",
-           "ref"]
+           "tune_pull", "tune_push", "ref"]

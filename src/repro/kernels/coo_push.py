@@ -5,18 +5,29 @@ updates into destination slots (CSC SpMSpV, §7.1). On CPU this is an
 atomic per edge; the TPU adaptation replaces atomics with **tile-serial
 combining**: edges arrive sorted by destination, the grid walks edge
 tiles *sequentially*, and each tile accumulates into an output vector
-held resident across grid steps. Combining inside a tile uses a one-hot
-matmul (MXU-friendly CRCW-CB combine); cross-tile conflicts are resolved
-by the sequential grid — deterministic, atomic-free.
+held resident across grid steps. Combining a sum inside a tile uses a
+one-hot matmul (MXU-friendly CRCW-CB combine); max/min combine via a
+masked window reduce; cross-tile conflicts are resolved by the
+sequential grid — deterministic, atomic-free.
 
 Window invariant: ``block_e`` consecutive dst-sorted edges touch at most
 ``block_e`` distinct destinations, so a window of ``block_e + block_n``
-anchored at the tile's first destination block always covers the tile.
+anchored at the tile's first destination block covers the tile **when
+the tile's destination span fits the window** (always true when
+``block_e + block_n >= n``; :func:`push_window_fits` checks the general
+case so callers can guard with ``lax.cond`` — the PallasBackend does).
 
 Frontier masking implements the SpMSpV sparsity: edges whose source is
-inactive contribute the identity. The accumulator is kept whole (fits
-VMEM for the kernel-benchmark sizes; a production variant would shard
-nodes over cores — see DESIGN.md §9).
+inactive contribute the identity. Padded edges carry the sentinel
+``n`` on *both* endpoints and are masked on both (padding used to aim
+at the real vertex ``n - 1``; see tests/test_pallas_backend.py for the
+regression). The accumulator is kept whole (fits VMEM for the
+kernel-benchmark sizes; a production variant would shard nodes over
+cores — see DESIGN.md §9).
+
+Production surface matches ``ell_spmv_pallas``: combine ∈
+{sum, max, min}, payloads [n] or [n, B], float32/float64/int32/int64,
+msg ∈ {"mul", "copy", "add"}, ``interpret=None`` auto-detect.
 """
 
 from __future__ import annotations
@@ -27,73 +38,168 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["coo_push_pallas"]
+from ..core.primitives import combine_identity
+from .ell_spmv import default_interpret
+
+__all__ = ["coo_push_pallas", "push_window_fits"]
+
+
+def push_window_fits(dst: jax.Array, n: int, block_e: int,
+                     block_n: int) -> jax.Array:
+    """True iff every ``block_e`` edge tile's destination span fits the
+    ``block_e + block_n`` accumulation window — the kernel's coverage
+    precondition. Statically true when the window covers all of [0, n);
+    otherwise a cheap traced reduction over the dst vector (callers
+    guard the kernel with ``lax.cond`` on it)."""
+    win = block_e + block_n
+    if win >= n:
+        return jnp.bool_(True)
+    m = dst.shape[0]
+    m_pad = -(-m // block_e) * block_e
+    dstp = jnp.pad(dst, (0, m_pad - m), constant_values=n).reshape(
+        -1, block_e)
+    first = dstp[:, 0]
+    anchors = (first // block_n) * block_n
+    last = jnp.max(jnp.where(dstp < n, dstp, -1), axis=1)
+    return jnp.all(last - anchors < win)
+
+
+def _combine_window(window, local, combine: str):
+    if combine == "sum":
+        return window + local
+    if combine == "max":
+        return jnp.maximum(window, local)
+    return jnp.minimum(window, local)
 
 
 def _kernel(x_ref, active_ref, src_ref, dst_ref, w_ref, dstblk_ref,
-            acc_ref, *, n: int, block_e: int, block_n: int, win: int):
+            acc_ref, *, n: int, combine: str, msg: str, win: int):
     e = pl.program_id(0)
+    ident = combine_identity(combine, acc_ref.dtype)
 
     @pl.when(e == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[...] = jnp.full_like(acc_ref, ident)
 
     src = src_ref[...]
     dst = dst_ref[...]
     w = w_ref[...]
-    valid = src < n
+    # sentinel-padded edges carry n on both endpoints: mask on both
+    valid = (src < n) & (dst < n)
     safe_src = jnp.where(valid, src, 0)
-    x = x_ref[safe_src]
+    x = x_ref[safe_src]                    # [block_e(, B)]
     act = active_ref[safe_src] > 0
-    msg = jnp.where(valid & act, x * w, 0.0)
+    if msg == "copy":
+        m_val = x
+    else:
+        wb = w[..., None] if x.ndim == 2 else w
+        m_val = x * wb if msg == "mul" else x + wb
     base = dstblk_ref[0]
-    rel = dst - base                       # in [0, win) by construction
-    ok = (rel >= 0) & (rel < win)
+    rel = dst - base                       # in [0, win) when it fits
+    ok = valid & act & (rel >= 0) & (rel < win)
     rel = jnp.clip(rel, 0, win - 1)
-    msg = jnp.where(ok, msg, 0.0)
-    # CRCW-CB combine inside the tile: one-hot matmul (MXU path on TPU)
-    onehot = (rel[None, :] == jnp.arange(win)[:, None]).astype(jnp.float32)
-    local = onehot @ msg                   # [win]
-    window = jax.lax.dynamic_slice(acc_ref[...], (base,), (win,))
-    acc_ref[...] = jax.lax.dynamic_update_slice(
-        acc_ref[...], window + local, (base,))
+    if m_val.ndim == 2:
+        ok = ok[:, None]
+    m_val = jnp.where(ok, m_val, ident)
+    if combine == "sum" and jnp.issubdtype(acc_ref.dtype, jnp.floating):
+        # CRCW-CB combine inside the tile: one-hot matmul (MXU on TPU)
+        onehot = (rel[None, :] == jnp.arange(win)[:, None]).astype(
+            acc_ref.dtype)
+        local = onehot @ m_val             # [win(, B)]
+    else:
+        # masked window reduce (max/min and integer sums)
+        sel = rel[None, :] == jnp.arange(win)[:, None]   # [win, block_e]
+        if m_val.ndim == 2:
+            sel = sel[..., None]
+        expanded = jnp.where(sel, m_val[None, ...], ident)
+        if combine == "sum":
+            # cast back: segment_sum (the primitive this must match)
+            # accumulates in the message dtype, unlike jnp.sum
+            local = expanded.sum(axis=1).astype(acc_ref.dtype)
+        elif combine == "max":
+            local = expanded.max(axis=1)
+        else:
+            local = expanded.min(axis=1)
+    if acc_ref.ndim == 2:
+        zero = jnp.zeros((), base.dtype)
+        window = jax.lax.dynamic_slice(
+            acc_ref[...], (base, zero), (win, acc_ref.shape[1]))
+        acc_ref[...] = jax.lax.dynamic_update_slice(
+            acc_ref[...], _combine_window(window, local, combine),
+            (base, zero))
+    else:
+        window = jax.lax.dynamic_slice(acc_ref[...], (base,), (win,))
+        acc_ref[...] = jax.lax.dynamic_update_slice(
+            acc_ref[...], _combine_window(window, local, combine),
+            (base,))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n", "block_e", "block_n", "interpret"))
+                   static_argnames=("n", "combine", "msg", "block_e",
+                                    "block_n", "interpret"))
 def coo_push_pallas(x: jax.Array, active: jax.Array, src: jax.Array,
                     dst: jax.Array, w: jax.Array, n: int,
+                    combine: str = "sum", msg: str = "mul",
                     block_e: int = 512, block_n: int = 256,
-                    interpret: bool = True) -> jax.Array:
-    """Push-combine sum over dst-sorted COO edges.
+                    interpret: bool | None = None) -> jax.Array:
+    """Push-combine over dst-sorted COO edges.
 
-    x: f32[n] source payloads; active: bool[n] frontier; src/dst: i32[m]
-    (sorted by dst); w: f32[m]. Returns f32[n] (sum semiring).
+    x: [n] or [n, B] source payloads; active: bool[n] frontier;
+    src/dst: i32[m] (sorted by dst); w: f32[m]. Returns combined
+    updates per destination ([n] or [n, B]); destinations with no
+    active in-edge hold the combine identity.
+
+    Precondition: :func:`push_window_fits` — callers with graphs that
+    can violate it guard with ``lax.cond`` (see PallasBackend.push).
     """
+    if interpret is None:
+        interpret = default_interpret()
     m = src.shape[0]
+    out_dtype = (x.dtype if msg == "copy"
+                 else jnp.result_type(x.dtype, w.dtype))
+    if m == 0:
+        # edgeless graph: grid=(0,) would never run the init step (and
+        # pallas rejects empty edge operands) — no edges means every
+        # destination holds the combine identity, like segment ops
+        shape = (n,) if x.ndim == 1 else (n, x.shape[1])
+        return jnp.full(shape, combine_identity(combine, out_dtype),
+                        out_dtype)
     win = block_e + block_n
     m_pad = -(-m // block_e) * block_e
     srcp = jnp.pad(src, (0, m_pad - m), constant_values=n)
-    dstp = jnp.pad(dst, (0, m_pad - m), constant_values=n - 1)
+    # sentinel >= n on the destination too — padding must never alias a
+    # real vertex (n - 1 previously; masked only via src, fragile)
+    dstp = jnp.pad(dst, (0, m_pad - m), constant_values=n)
     wp = jnp.pad(w, (0, m_pad - m))
     n_pad = -(-n // block_n) * block_n + win
     first_dst = dstp.reshape(-1, block_e)[:, 0]
-    anchors = ((first_dst // block_n) * block_n).astype(jnp.int32)
+    anchors = jnp.minimum((first_dst // block_n) * block_n,
+                          n_pad - win).astype(jnp.int32)
     grid = (m_pad // block_e,)
+    batched = x.ndim == 2
+    if batched:
+        b = x.shape[1]
+        acc_spec = pl.BlockSpec((n_pad, b), lambda e: (0, 0))
+        acc_shape = jax.ShapeDtypeStruct((n_pad, b), out_dtype)
+        x_spec = pl.BlockSpec(x.shape, lambda e: (0, 0))
+    else:
+        acc_spec = pl.BlockSpec((n_pad,), lambda e: (0,))
+        acc_shape = jax.ShapeDtypeStruct((n_pad,), out_dtype)
+        x_spec = pl.BlockSpec(x.shape, lambda e: (0,))
     acc = pl.pallas_call(
-        functools.partial(_kernel, n=n, block_e=block_e, block_n=block_n,
+        functools.partial(_kernel, n=n, combine=combine, msg=msg,
                           win=win),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(x.shape, lambda e: (0,)),
+            x_spec,
             pl.BlockSpec(active.shape, lambda e: (0,)),
             pl.BlockSpec((block_e,), lambda e: (e,)),
             pl.BlockSpec((block_e,), lambda e: (e,)),
             pl.BlockSpec((block_e,), lambda e: (e,)),
             pl.BlockSpec((1,), lambda e: (e,)),
         ],
-        out_specs=pl.BlockSpec((n_pad,), lambda e: (0,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        out_specs=acc_spec,
+        out_shape=acc_shape,
         interpret=interpret,
     )(x, active.astype(jnp.int32), srcp, dstp, wp, anchors)
     return acc[:n]

@@ -7,7 +7,7 @@ graph substrate materializes an ELL view — a rectangular [n, d_ell]
 padded neighbor matrix — and the kernel becomes a dense-shaped
 gather+reduce with sentinel masking:
 
-    out[v] = combine_{j < d_ell} x[ell_idx[v, j]] * ell_w[v, j]
+    out[v] = combine_{j < d_ell} msg(x[ell_idx[v, j]], ell_w[v, j])
 
 Grid: one program per (node-block); the padded value vector x lives in
 ANY/HBM and is gathered per tile; indices/weights stream through VMEM
@@ -16,7 +16,20 @@ into the x ref — irregular reads stay inside the tile (the paper's
 "communication" axis), while writes are private per block (zero
 synchronization — the pull property).
 
-Supports combine in {sum, max, min} over f32 payloads.
+Production surface (the PallasBackend hot path):
+
+  * combine ∈ {sum, max, min};
+  * payloads [n] or [n, B] (the service layer's batched multi-query
+    columns ride the same tile, amortizing the structure scan);
+  * float32/float64/int32/int64 payloads (BFS parent ids are int32);
+  * msg ∈ {"mul", "copy", "add"} — the wire-message shapes every
+    registered algorithm uses (x·w SpMV, unweighted label copy, min-plus
+    x+w relaxation);
+  * empty rows return the combine identity (exactly what
+    ``pull_relax_ell`` returns, so ``mask_untouched``/convergence checks
+    agree bit-for-bit);
+  * ``interpret=None`` auto-detects: compiled on TPU, interpreter
+    elsewhere.
 """
 
 from __future__ import annotations
@@ -27,53 +40,98 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["ell_spmv_pallas"]
+from ..core.primitives import combine_identity
+
+__all__ = ["ell_spmv_pallas", "default_interpret"]
 
 
-def _kernel(x_ref, idx_ref, w_ref, out_ref, *, combine: str, n: int,
-            block_n: int, d_ell: int):
-    # idx_ref/w_ref: [block_n, d_ell] VMEM tiles; x_ref: [n+1] in ANY/VMEM
+def default_interpret() -> bool:
+    """Interpret unless a real TPU backs the default device."""
+    return jax.default_backend() != "tpu"
+
+
+def _apply_msg(gathered, w, msg: str):
+    """gathered: [block_n, d_ell] or [block_n, d_ell, B]; w: [block_n,
+    d_ell]. Mirrors the promotion the jnp primitives' msg_fn performs."""
+    if msg == "copy":
+        return gathered
+    if gathered.ndim == 3:
+        w = w[..., None]
+    return gathered * w if msg == "mul" else gathered + w
+
+
+def _kernel(x_ref, idx_ref, w_ref, out_ref, *, combine: str, msg: str,
+            n: int):
+    # idx_ref/w_ref: [block_n, d_ell] VMEM tiles; x_ref: full padded
+    # value vector/matrix in ANY
     idx = idx_ref[...]
-    w = w_ref[...]
     valid = idx < n
     safe = jnp.where(valid, idx, 0)
-    gathered = x_ref[safe]                  # [block_n, d_ell] gather
-    msgs = gathered * w
+    gathered = x_ref[safe]            # [block_n, d_ell(, B)] gather
+    msgs = _apply_msg(gathered, w_ref[...], msg)
+    ident = combine_identity(combine, msgs.dtype)
+    if msgs.ndim == 3:
+        valid = valid[..., None]
+    masked = jnp.where(valid, msgs, ident)
     if combine == "sum":
-        out = jnp.where(valid, msgs, 0.0).sum(axis=1)
+        out = masked.sum(axis=1)
     elif combine == "max":
-        out = jnp.where(valid, msgs, -jnp.inf).max(axis=1)
-        out = jnp.where(jnp.isfinite(out), out, 0.0)
+        out = masked.max(axis=1)
     else:
-        out = jnp.where(valid, msgs, jnp.inf).min(axis=1)
-        out = jnp.where(jnp.isfinite(out), out, 0.0)
-    out_ref[...] = out
+        out = masked.min(axis=1)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def _out_dtype(x_dtype, w_dtype, msg: str, combine: str):
+    """Mirror pull_relax_ell exactly: msg_fn promotion plus jnp.sum's
+    sub-default-int widening (int32 sums accumulate as int64 under x64)."""
+    d = x_dtype if msg == "copy" else jnp.result_type(x_dtype, w_dtype)
+    if combine == "sum":
+        d = jnp.zeros((1,), d).sum().dtype
+    return d
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("combine", "block_n", "interpret"))
+                   static_argnames=("combine", "msg", "block_n",
+                                    "interpret"))
 def ell_spmv_pallas(x_padded: jax.Array, ell_idx: jax.Array,
                     ell_w: jax.Array, combine: str = "sum",
-                    block_n: int = 256, interpret: bool = True
-                    ) -> jax.Array:
-    """x_padded: f32[n+1] (sentinel row 0.0 at index n);
-    ell_idx: i32[n, d_ell]; ell_w: f32[n, d_ell]. Returns f32[n]."""
+                    msg: str = "mul", block_n: int = 256,
+                    interpret: bool | None = None) -> jax.Array:
+    """Pull k-relaxation over the ELL layout.
+
+    x_padded: [n+1] or [n+1, B] payloads (sentinel row at index n);
+    ell_idx: i32[n, d_ell]; ell_w: f32[n, d_ell]. Returns [n] or [n, B]
+    combined messages; empty rows hold the combine identity.
+    """
+    if interpret is None:
+        interpret = default_interpret()
     n, d_ell = ell_idx.shape
+    batched = x_padded.ndim == 2
     n_pad = -(-n // block_n) * block_n
     idx = jnp.pad(ell_idx, ((0, n_pad - n), (0, 0)), constant_values=n)
     w = jnp.pad(ell_w, ((0, n_pad - n), (0, 0)))
     grid = (n_pad // block_n,)
+    out_dtype = _out_dtype(x_padded.dtype, ell_w.dtype, msg, combine)
+    if batched:
+        b = x_padded.shape[1]
+        out_spec = pl.BlockSpec((block_n, b), lambda i: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((n_pad, b), out_dtype)
+        x_spec = pl.BlockSpec(x_padded.shape, lambda i: (0, 0))
+    else:
+        out_spec = pl.BlockSpec((block_n,), lambda i: (i,))
+        out_shape = jax.ShapeDtypeStruct((n_pad,), out_dtype)
+        x_spec = pl.BlockSpec(x_padded.shape, lambda i: (0,))
     out = pl.pallas_call(
-        functools.partial(_kernel, combine=combine, n=n, block_n=block_n,
-                          d_ell=d_ell),
+        functools.partial(_kernel, combine=combine, msg=msg, n=n),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(x_padded.shape, lambda i: (0,)),   # full vector
+            x_spec,                                    # full vector
             pl.BlockSpec((block_n, d_ell), lambda i: (i, 0)),
             pl.BlockSpec((block_n, d_ell), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        out_specs=out_spec,
+        out_shape=out_shape,
         interpret=interpret,
     )(x_padded, idx, w)
     return out[:n]

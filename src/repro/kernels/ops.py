@@ -1,9 +1,11 @@
 """jit'd public wrappers over the Pallas kernels.
 
-`interpret` defaults to True (this container is CPU-only; on real TPUs
-pass interpret=False — the kernels are written against TPU BlockSpec/VMEM
-semantics). Wrappers adapt framework-level structures (Graph, GQA heads)
-to kernel-level layouts.
+The graph kernels auto-detect `interpret` (compiled on TPU, interpreter
+elsewhere — this container is CPU-only); the model kernels keep the
+explicit `interpret=True` default. Wrappers adapt framework-level
+structures (Graph, GQA heads) to kernel-level layouts. The engine hot
+path does not go through these wrappers — it dispatches via
+``repro.core.backend.PallasBackend`` (autotuned blocks, fallbacks).
 """
 
 from __future__ import annotations
@@ -21,7 +23,7 @@ __all__ = ["pull_spmv", "push_combine", "flash_attention", "cin_layer"]
 
 
 def pull_spmv(g: Graph, x: jax.Array, combine: str = "sum",
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
     """Pull k-relaxation via the ELL kernel. x: f32[n] -> f32[n]."""
     x_pad = jnp.pad(x.astype(jnp.float32), (0, 1))
     return ell_spmv_pallas(x_pad, g.ell_idx, g.ell_w, combine=combine,
@@ -29,10 +31,12 @@ def pull_spmv(g: Graph, x: jax.Array, combine: str = "sum",
 
 
 def push_combine(g: Graph, x: jax.Array, active: jax.Array,
-                 interpret: bool = True) -> jax.Array:
-    """Push k-relaxation (sum) via the COO kernel over dst-sorted edges."""
+                 combine: str = "sum",
+                 interpret: bool | None = None) -> jax.Array:
+    """Push k-relaxation via the COO kernel over dst-sorted edges."""
     return coo_push_pallas(x.astype(jnp.float32), active, g.coo_src,
-                           g.coo_dst, g.coo_w, g.n, interpret=interpret)
+                           g.coo_dst, g.coo_w, g.n, combine=combine,
+                           interpret=interpret)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -10,16 +10,16 @@ __all__ = ["ell_spmv_ref", "coo_push_ref", "flash_attention_ref",
 
 
 def ell_spmv_ref(x_padded, ell_idx, ell_w, combine: str = "sum"):
+    # empty rows hold the combine identity (±inf for max/min), matching
+    # pull_relax_ell — what mask_untouched/convergence checks expect
     n = ell_idx.shape[0]
     gathered = x_padded[jnp.minimum(ell_idx, n)] * ell_w
     valid = ell_idx < n
     if combine == "sum":
         return jnp.where(valid, gathered, 0.0).sum(axis=1)
     if combine == "max":
-        out = jnp.where(valid, gathered, -jnp.inf).max(axis=1)
-        return jnp.where(jnp.isfinite(out), out, 0.0)
-    out = jnp.where(valid, gathered, jnp.inf).min(axis=1)
-    return jnp.where(jnp.isfinite(out), out, 0.0)
+        return jnp.where(valid, gathered, -jnp.inf).max(axis=1)
+    return jnp.where(valid, gathered, jnp.inf).min(axis=1)
 
 
 def coo_push_ref(x, active, src, dst, w, n):

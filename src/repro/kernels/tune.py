@@ -1,0 +1,136 @@
+"""Block-size autotuner for the push/pull Pallas kernels.
+
+The right tile shape depends on the execution mode and the graph shape:
+compiled TPU kernels want VMEM-sized tiles; the interpreter (CPU CI)
+amortizes per-grid-step overhead with the largest block that fits. A
+static choice is wrong for one of the two, so the ``PallasBackend``
+probes a small candidate ladder **once per (graph shape, payload
+shape)** and caches the winner on the backend instance.
+
+Probing is eager and synthetic: candidates are timed on random data of
+the *shape* being solved (gather/scatter cost is shape-dominated, not
+value-dominated), so the tuner can run while an outer ``jit`` trace is
+being built — which is exactly when the backend discovers a new shape.
+Each probe is one warmup (compile) + one timed call; the ladder is kept
+short (≤ 4 rungs) so tuning stays a per-shape one-off.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .coo_push import coo_push_pallas
+from .ell_spmv import default_interpret, ell_spmv_pallas
+
+__all__ = ["pull_candidates", "push_candidates", "tune_pull", "tune_push"]
+
+_LADDER = (256, 1024, 4096)
+
+
+def _round_up(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def pull_candidates(n: int) -> tuple[int, ...]:
+    """block_n ladder for the ELL pull kernel: fixed rungs below n plus
+    the whole (padded) vertex range (grid of 1 — what the interpreter
+    prefers; real TPUs pick a VMEM-sized rung)."""
+    n_pad = _round_up(max(n, 8), 8)
+    cands = [c for c in _LADDER if c < n_pad]
+    cands.append(n_pad)
+    return tuple(cands)
+
+
+def push_candidates(n: int, m: int) -> tuple[int, ...]:
+    """(block_e, block_n) ladder for the COO push kernel. Every rung
+    keeps ``block_e + block_n >= n`` so the window precondition holds
+    statically and no rung silently drops edges."""
+    m_pad = _round_up(max(m, 8), 8)
+    n_pad = _round_up(max(n, 8), 8)
+    cands = [(c, n_pad) for c in _LADDER if c < m_pad]
+    cands.append((m_pad, n_pad))
+    return tuple(cands)
+
+
+def _time(fn, *args) -> float:
+    jax.block_until_ready(fn(*args))              # warmup = compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+# Probes run while the backend is being traced into an engine loop, and
+# JAX's trace context is ambient (thread-local): any op issued here —
+# even on concrete arrays — would be spliced into the engine's jaxpr
+# instead of executing. A single worker thread has no ambient trace, so
+# candidates execute (and are timed) for real.
+_EXECUTOR = None
+
+
+def _escaped(fn):
+    global _EXECUTOR
+    if _EXECUTOR is None:
+        from concurrent.futures import ThreadPoolExecutor
+        _EXECUTOR = ThreadPoolExecutor(max_workers=1,
+                                       thread_name_prefix="kernel-tune")
+    return _EXECUTOR.submit(fn).result()
+
+
+def tune_pull(n: int, d_ell: int, width: int, dtype, combine: str,
+              msg: str, interpret: bool | None = None) -> int:
+    """Best ``block_n`` for an ELL pull of this shape (synthetic probe)."""
+    if interpret is None:
+        interpret = default_interpret()
+    cands = pull_candidates(n)
+    if len(cands) == 1:                   # nothing to probe
+        return cands[0]
+
+    def probe():
+        key = jax.random.PRNGKey(0)
+        idx = jax.random.randint(key, (n, d_ell), 0, n + 1, jnp.int32)
+        w = jnp.ones((n, d_ell), jnp.float32)
+        shape = (n + 1,) if width == 1 else (n + 1, width)
+        x = jnp.ones(shape, dtype)
+        best, best_t = None, None
+        for block_n in cands:
+            t = _time(lambda b=block_n: ell_spmv_pallas(
+                x, idx, w, combine=combine, msg=msg, block_n=b,
+                interpret=interpret))
+            if best_t is None or t < best_t:
+                best, best_t = block_n, t
+        return best
+
+    return _escaped(probe)
+
+
+def tune_push(n: int, m: int, width: int, dtype, combine: str,
+              msg: str, interpret: bool | None = None) -> tuple[int, int]:
+    """Best ``(block_e, block_n)`` for a COO push of this shape."""
+    if interpret is None:
+        interpret = default_interpret()
+    cands = push_candidates(n, m)
+    if len(cands) == 1:
+        return cands[0]
+
+    def probe():
+        key = jax.random.PRNGKey(1)
+        dst = jnp.sort(jax.random.randint(key, (m,), 0, n, jnp.int32))
+        src = jax.random.randint(jax.random.fold_in(key, 1), (m,), 0, n,
+                                 jnp.int32)
+        w = jnp.ones((m,), jnp.float32)
+        shape = (n,) if width == 1 else (n, width)
+        x = jnp.ones(shape, dtype)
+        active = jnp.ones((n,), bool)
+        best, best_t = None, None
+        for block_e, block_n in cands:
+            t = _time(lambda be=block_e, bn=block_n: coo_push_pallas(
+                x, active, src, dst, w, n, combine=combine, msg=msg,
+                block_e=be, block_n=bn, interpret=interpret))
+            if best_t is None or t < best_t:
+                best, best_t = (block_e, block_n), t
+        return best
+
+    return _escaped(probe)

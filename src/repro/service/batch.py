@@ -20,7 +20,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 
 from .. import api
-from ..core.backend import DenseBackend, ExchangeBackend
+from ..core.backend import ExchangeBackend
 from ..core.cost_model import Cost
 from ..core.direction import DirectionPolicy
 from ..core.engine import PushPullEngine
@@ -90,7 +90,7 @@ def _resolve(g: Graph, algorithm: str, sources, policy, backend, kw):
         api.validate_vertex_indices(g, "sources", sources)
     policy = (spec.default_policy if policy is None
               else api._resolve_policy(policy))
-    backend = DenseBackend() if backend is None else backend
+    backend = api._resolve_backend(backend)
     static_kw = {k: v for k, v in kw.items()
                  if k not in bspec.runtime_keys}
     return bspec, policy, backend, static_kw

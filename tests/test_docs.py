@@ -17,15 +17,28 @@ DOCS = ROOT / "docs"
 
 def test_docs_tree_exists():
     for page in ("architecture.md", "push-pull.md", "algorithms.md",
-                 "results.md"):
+                 "kernels.md", "results.md"):
         assert (DOCS / page).is_file(), f"missing docs/{page}"
 
 
 def test_readme_links_docs():
     readme = (ROOT / "README.md").read_text()
     for page in ("docs/architecture.md", "docs/push-pull.md",
-                 "docs/algorithms.md", "docs/results.md"):
+                 "docs/algorithms.md", "docs/kernels.md",
+                 "docs/results.md"):
         assert page in readme, f"README does not link {page}"
+
+
+def test_kernels_page_covers_dispatch_surface():
+    """docs/kernels.md stays honest: both kernels, the backend, the
+    fallback axes, and the autotuner are named."""
+    page = (DOCS / "kernels.md").read_text()
+    for needle in ("ell_spmv_pallas", "coo_push_pallas", "PallasBackend",
+                   "push_window_fits", "classify_msg_fn", "tune.py",
+                   "fallback"):
+        assert needle in page, f"docs/kernels.md does not mention {needle}"
+    # the architecture backend table links here
+    assert "kernels.md" in (DOCS / "architecture.md").read_text()
 
 
 def test_every_registered_algorithm_documented():
@@ -84,6 +97,13 @@ def _sample_report():
                               "collective_bytes": 0, "barriers": 5,
                               "iterations": 5},
                  "weighted_total": 2.0}},
+            {"name": "kernel_pull_sum_rmat_b8", "us_per_call": 420.0,
+             "derived": {
+                 "direction": "pull", "combine": "sum", "graph": "rmat",
+                 "n": 128, "m": 982, "d_ell": 72, "batch": 8,
+                 "dtype": "float32", "msg": "copy", "block_n": 128,
+                 "us_jnp": 515.4, "us_pallas": 419.7, "speedup": 1.23,
+                 "match": True}},
         ],
         "failures": [],
     }
@@ -102,7 +122,12 @@ def test_schema_rejects_malformed_reports():
     del bad_cell["rows"][1]["derived"]["counters"]
     bad_policy = _sample_report()
     bad_policy["rows"][1]["derived"]["policy"] = "fastest"
-    for bad in (bad_missing_rows, bad_row, bad_cell, bad_policy):
+    bad_kernel = _sample_report()
+    del bad_kernel["rows"][2]["derived"]["us_pallas"]
+    bad_kernel_dir = _sample_report()
+    bad_kernel_dir["rows"][2]["derived"]["direction"] = "sideways"
+    for bad in (bad_missing_rows, bad_row, bad_cell, bad_policy,
+                bad_kernel, bad_kernel_dir):
         with pytest.raises(Exception):
             validate_report(bad)
 
@@ -127,6 +152,21 @@ def test_committed_bench_json_validates():
     assert reports, "no BENCH_*.json trajectory committed at repo root"
     for path in reports:
         validate_report(json.loads(path.read_text()))
+
+
+def test_bench_kernels_json_covers_kernel_cells():
+    """The committed wall-clock kernel trajectory: both directions, the
+    RMAT family, batched cells, and every cell's correctness
+    cross-check true. (CI asserts existence/validity, not speedups —
+    the interpreter's absolute numbers are machine-relative.)"""
+    report = json.loads((ROOT / "BENCH_kernels.json").read_text())
+    cells = [r["derived"] for r in report["rows"]
+             if r["name"].startswith("kernel_")]
+    assert cells, "BENCH_kernels.json has no kernel_* rows"
+    assert {c["direction"] for c in cells} == {"push", "pull"}
+    assert "rmat" in {c["graph"] for c in cells}
+    assert any(c["batch"] > 1 for c in cells)
+    assert all(c["match"] for c in cells)
 
 
 def test_bench_json_covers_matrix():
