@@ -11,9 +11,9 @@ validator covering the subset of draft-07 the schema uses (type,
 required, properties, additionalProperties, items, enum, minimum, $ref).
 Rows named ``pushpull_*`` additionally have their ``derived`` payload
 checked against ``definitions/pushpull_cell``, rows named ``service_*``
-against ``definitions/service_cell``, and rows named ``kernel_*``
-against ``definitions/kernel_cell`` — the conventions the schema
-documents.
+against ``definitions/service_cell``, rows named ``kernel_*`` against
+``definitions/kernel_cell``, and rows named ``scaling_*`` against
+``definitions/scaling_cell`` — the conventions the schema documents.
 """
 
 from __future__ import annotations
@@ -95,6 +95,9 @@ def validate_report(report: dict) -> bool:
                    f"$.rows[{row['name']}].derived")
         elif row.get("name", "").startswith("kernel_"):
             _check(row["derived"], defs["kernel_cell"], defs,
+                   f"$.rows[{row['name']}].derived")
+        elif row.get("name", "").startswith("scaling_"):
+            _check(row["derived"], defs["scaling_cell"], defs,
                    f"$.rows[{row['name']}].derived")
     return True
 

@@ -141,7 +141,7 @@ class AlgorithmSpec:
     finalize: Callable = staticmethod(lambda g, state: state)
     default_policy: DirectionPolicy = GenericSwitch()
     runtime_keys: tuple = ()
-    backends: tuple = ("dense", "ell", "pallas", "distributed")
+    backends: tuple = ("dense", "ell", "pallas", "distributed", "shard")
     policies: tuple = ("push", "pull", "gs", "grs", "auto")
     paper: str = ""
 
@@ -268,18 +268,48 @@ def _resolve_policy(policy) -> DirectionPolicy:
             "instance)") from None
 
 
-def _resolve_backend(backend) -> ExchangeBackend:
+# Graph-specific "shard" backends, cached per live graph object (keyed
+# by id with a weakref guard against id reuse after collection).
+_SHARD_BACKENDS: dict[int, tuple] = {}
+
+
+def _shard_backend_for(g: Graph) -> ExchangeBackend:
+    import weakref
+
+    from .shard import ShardedBackend
+    key = id(g)
+    hit = _SHARD_BACKENDS.get(key)
+    if hit is not None and hit[0]() is g:
+        return hit[1]
+    prepared = ShardedBackend.prepare(g)
+    ref = weakref.ref(g, lambda _: _SHARD_BACKENDS.pop(key, None))
+    _SHARD_BACKENDS[key] = (ref, prepared)
+    return prepared
+
+
+def _resolve_backend(backend, g: Optional[Graph] = None
+                     ) -> ExchangeBackend:
     if backend is None:
         return BACKEND_SHORTHANDS["dense"]
     if not isinstance(backend, str):
         return backend
+    if backend == "shard":
+        # graph-specific: prepared per graph (mesh over all visible
+        # devices), not a shared instance like the other shorthands
+        if g is None:
+            raise ValueError(
+                "backend='shard' is graph-specific; pass it through "
+                "solve()/solve_batch(), or prepare an instance with "
+                "repro.shard.ShardedBackend.prepare(g)")
+        return _shard_backend_for(g)
     try:
         return BACKEND_SHORTHANDS[backend]
     except KeyError:
         raise ValueError(
             f"unknown backend shorthand {backend!r}; valid options: "
-            f"{sorted(BACKEND_SHORTHANDS)} (or pass an ExchangeBackend "
-            "instance, e.g. DistributedBackend.prepare(g))") from None
+            f"{sorted(BACKEND_SHORTHANDS) + ['shard']} (or pass an "
+            "ExchangeBackend instance, e.g. "
+            "DistributedBackend.prepare(g))") from None
 
 
 def solve(g: Graph, algorithm: str, *,
@@ -328,7 +358,7 @@ def solve(g: Graph, algorithm: str, *,
             validate_vertex_indices(g, vkey, kw[vkey])
     policy = (spec.default_policy if policy is None
               else _resolve_policy(policy))
-    backend = _resolve_backend(backend)
+    backend = _resolve_backend(backend, g)
     trace_capacity = (_DEFAULT_TRACE_CAPACITY if trace is True
                       else int(trace))
     static_kw = {k: v for k, v in kw.items() if k not in spec.runtime_keys}
@@ -414,7 +444,8 @@ register(AlgorithmSpec(
     name="ppr", build=ppr_program, init=ppr_init,
     finalize=ppr_finalize,
     default_policy=Fixed(Direction.PULL),
-    runtime_keys=("source",), backends=("dense", "ell", "pallas"),
+    runtime_keys=("source",),
+    backends=("dense", "ell", "pallas", "shard"),
     paper="§3.1 (personalized variant; service-layer batching)"))
 
 register(AlgorithmSpec(
@@ -427,7 +458,8 @@ register(AlgorithmSpec(
     name="sssp_delta", build=sssp_delta_program, init=sssp_delta_init,
     finalize=sssp_delta_finalize,
     default_policy=Fixed(Direction.PUSH),
-    runtime_keys=("source",), backends=("dense", "ell", "pallas"),
+    runtime_keys=("source",),
+    backends=("dense", "ell", "pallas", "shard"),
     paper="§3.4/§4.4 Alg. 4"))
 
 register(AlgorithmSpec(

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from ...graphs.structure import Graph
+from ...shard.backend import ShardedBackend
 from ..backend import DenseBackend, EllBackend, require_backend
 from ..cost_model import Cost
 from ..direction import Direction, Fixed
@@ -56,7 +57,8 @@ def sssp_delta_program(g: Graph, delta: float = 2.0, max_inner: int = 64,
     (∞ elsewhere); combine=min with msg ⊗ = d+w is the relaxation. Pull
     only touches the unsettled set (d ≥ bΔ), exactly the paper's scan.
     """
-    require_backend("sssp_delta", backend, DenseBackend, EllBackend)
+    require_backend("sssp_delta", backend, DenseBackend, EllBackend,
+                    ShardedBackend)
     delta = float(delta)
 
     def enter(g_, state, frontier, epoch):

@@ -117,6 +117,45 @@ class ExchangeBackend:
             lambda v, f, c: self.pull(g, v, touched, combine, msg_fn, c),
             values, frontier, cost)
 
+    # -- cross-step exchange state (sharded/compressed backends) ----------
+    def init_exchange_state(self, g: Graph):
+        """Initial exchange-carried state for a run on ``g``.
+
+        Backends whose exchange is stateful *across steps* — e.g. the
+        sharded push's error-feedback compression accumulator — return a
+        pytree here; the engine threads it through the loop carry and
+        hands it back to every :meth:`relax_ex` call. The default is an
+        empty pytree: stateless, zero carry overhead.
+        """
+        return ()
+
+    def relax_ex(self, g: Graph, values: jax.Array, frontier: jax.Array,
+                 *, direction, combine: str = "sum",
+                 msg_fn: Optional[Callable] = None,
+                 touched: Optional[jax.Array] = None,
+                 cost: Cost = Cost(), xstate=()) -> tuple:
+        """``relax`` with exchange-state threading: returns
+        ``(combined_msgs, cost, new_xstate)``. The default forwards to
+        :meth:`relax` and passes ``xstate`` through unchanged — the
+        engine always calls this surface, so stateless backends pay
+        nothing while stateful ones override it."""
+        out, cost = self.relax(g, values, frontier, direction=direction,
+                               combine=combine, msg_fn=msg_fn,
+                               touched=touched, cost=cost)
+        return out, cost, xstate
+
+    def predict_comm_bytes(self, g: Graph, values, frontier) -> tuple:
+        """Predicted inter-device wire bytes of one (push, pull) step.
+
+        The engine folds the pair into ``StepStats.push_wire_bytes`` /
+        ``pull_wire_bytes`` so ``AutoSwitch`` prices the §6 comm
+        asymmetry; the formulas must match what the backend's own
+        ``push``/``pull`` then charge to ``Cost.collective_bytes``
+        (keeping the predictor exact for exchange steps). Single-device
+        backends move nothing: (0, 0).
+        """
+        return counter(0), counter(0)
+
     @property
     def name(self) -> str:
         return type(self).__name__
@@ -482,3 +521,14 @@ class DistributedBackend(ExchangeBackend):
         cost = cost.charge(reads=k, writes=wr,
                            collective_bytes=nbytes * self.part.num_parts)
         return out, cost
+
+    def predict_comm_bytes(self, g, values, frontier):
+        # mirror exactly what push/pull charge: the combined-alltoall
+        # moves n_padded·itemsize per device, the all_gather
+        # n_padded·itemsize·(P-1)/P — both scaled by P devices
+        Pn = self.part.num_parts
+        npad = self.part.n_padded
+        item = values.dtype.itemsize
+        push_b = counter(npad * item) * Pn
+        pull_b = counter(npad * item * (Pn - 1) // max(Pn, 1)) * Pn
+        return push_b, pull_b

@@ -118,7 +118,8 @@ class Cost:
         """
         w = DEFAULT_WEIGHTS if weights is None else weights
         return (self.reads * w.read + self.writes * w.write
-                + self.atomics * w.atomic + self.locks * w.lock)
+                + self.atomics * w.atomic + self.locks * w.lock
+                + self.collective_bytes * w.collective_byte)
 
 
 def zero_cost() -> Cost:
@@ -134,11 +135,20 @@ class CostWeights:
     CPUs offer atomics operating on such values', §4.1) costs more. The
     defaults are deliberately coarse: AutoSwitch only needs the *ordering*
     of push vs pull per step, which is robust to the exact ratios.
+
+    ``collective_byte`` prices one inter-device wire byte (the paper's
+    §6 DM traffic) relative to a local access — zero on a single device,
+    where the distinction vanishes. With a multi-shard backend the two
+    directions put *different* byte counts on the wire (push sends the
+    remote-update stream, optionally compressed; pull gathers the whole
+    frontier row), so this weight is what lets ``AutoSwitch`` flip
+    direction for distributed reasons alone.
     """
     read: float = 1.0
     write: float = 1.0
     atomic: float = 2.0
     lock: float = 4.0
+    collective_byte: float = 0.5
 
 
 DEFAULT_WEIGHTS = CostWeights()
@@ -165,6 +175,13 @@ class StepStats(NamedTuple):
     union-frontier degree sum and every payload count scales by
     ``width`` — the batch-aware pricing the service layer's AutoSwitch
     decisions rest on.
+
+    ``push_wire_bytes`` / ``pull_wire_bytes`` are the *inter-device*
+    bytes a push or pull step of this backend would move (0 on
+    single-device backends). The engine fills them from
+    ``backend.predict_comm_bytes`` so distributed comm asymmetry —
+    compressed push updates vs full-row pull gathers — reaches the
+    predictor; they are priced by ``CostWeights.collective_byte``.
     """
     frontier_vertices: jax.Array
     frontier_edges: jax.Array
@@ -176,6 +193,8 @@ class StepStats(NamedTuple):
     float_data: bool = False
     k_filter_push: bool = False
     width: int = 1
+    push_wire_bytes: jax.Array | int = 0
+    pull_wire_bytes: jax.Array | int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,6 +212,12 @@ class CostPredictor:
       pull: width reads per in-edge of the touched destination set (all
             m under a dense destination set or the ELL layout) plus
             width private writes per touched destination.
+
+    Both formulas add the backend's predicted inter-device wire bytes
+    (``StepStats.push_wire_bytes`` / ``pull_wire_bytes``, priced by
+    ``CostWeights.collective_byte``) — zero on single-device backends,
+    and the §6 DM asymmetry (compressed push updates vs full-row pull
+    gathers) on sharded ones.
 
     The engine charges the *same* formulas after the step runs, so the
     prediction is exact for exchange steps — which is what lets tests
@@ -222,12 +247,14 @@ class CostPredictor:
             # frontier size — the compacted set rarely exceeds it). One
             # mask compaction per step, batch-width-independent.
             cost = cost + stats.frontier_vertices * (w.read + w.write)
-        return cost
+        # inter-device traffic of the push exchange (0 on one device)
+        return cost + stats.push_wire_bytes * w.collective_byte
 
     def predict_pull(self, stats: StepStats) -> jax.Array:
         w = self.weights
-        return (stats.pull_edges * w.read
-                + stats.pull_vertices * w.write) * stats.width
+        return ((stats.pull_edges * w.read
+                 + stats.pull_vertices * w.write) * stats.width
+                + stats.pull_wire_bytes * w.collective_byte)
 
 
 _B = lambda c: jnp.zeros((c,), bool)              # noqa: E731

@@ -176,6 +176,9 @@ class _Loop(NamedTuple):
     pushes: jax.Array
     last_push: jax.Array
     trace: StepTrace
+    # backend exchange-carried state (compression error feedback); an
+    # empty pytree for stateless backends
+    xstate: Any = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,6 +207,11 @@ class PushPullEngine:
         # multi-query values [n, B] (repro.service), 1 for plain vectors
         width = (1 if values is None or values.ndim == 1
                  else int(values.shape[-1]))
+        # inter-device bytes each direction would move (0 on one device)
+        push_wb = pull_wb = counter(0)
+        if values is not None:
+            push_wb, pull_wb = self.backend.predict_comm_bytes(
+                g, values, st.frontier)
         return StepStats(
             frontier_vertices=jnp.sum(
                 st.frontier.astype(counter_dtype())),
@@ -212,11 +220,12 @@ class PushPullEngine:
             unvisited_edges=frontier_in_edges(g, unvisited),
             step=st.step, prev_push=st.last_push,
             float_data=float_data, k_filter_push=prog.k_filter_push,
-            width=width)
+            width=width, push_wire_bytes=push_wb, pull_wire_bytes=pull_wb)
 
     # -- one phase: the classic fixed-point loop --------------------------
     def _run_phase(self, g: Graph, phase: Phase, state0, frontier0, epoch,
-                   cost0: Cost, steps0, pushes0, trace0: StepTrace):
+                   cost0: Cost, steps0, pushes0, trace0: StepTrace,
+                   xstate0=()):
         prog = phase.program
         values_fn = prog.values_fn or (lambda g_, s, f: s)
         greedy = (isinstance(self.policy, GreedySwitch)
@@ -259,14 +268,15 @@ class PushPullEngine:
                 direction = do_push = self.policy.decide(
                     g, st.frontier, stats)
             cost = st.cost
+            xstate = st.xstate
             if prog.local_fn is not None:
                 state, frontier, conv, cost = prog.local_fn(
                     g, st.state, st.frontier, st.step, do_push, cost)
             else:
-                msgs, cost = self.backend.relax(
+                msgs, cost, xstate = self.backend.relax_ex(
                     g, values, st.frontier, direction=direction,
                     combine=prog.combine, msg_fn=prog.msg_fn,
-                    touched=touched, cost=cost)
+                    touched=touched, cost=cost, xstate=xstate)
                 state, frontier, conv = prog.update_fn(st.state, msgs,
                                                        st.step)
                 if prog.k_filter_push:
@@ -296,7 +306,7 @@ class PushPullEngine:
                          visited=st.visited | frontier, converged=conv,
                          handoff=handoff, step=st.step + 1, cost=cost,
                          pushes=st.pushes + do_push.astype(jnp.int32),
-                         last_push=do_push, trace=trace)
+                         last_push=do_push, trace=trace, xstate=xstate)
 
         # an empty entering frontier is already converged (matches the
         # seed loops, whose cond checked the frontier before any work)
@@ -304,7 +314,8 @@ class PushPullEngine:
                      converged=~jnp.any(frontier0),
                      handoff=jnp.bool_(False), step=jnp.int32(0),
                      cost=cost0, pushes=jnp.int32(0),
-                     last_push=jnp.bool_(False), trace=trace0)
+                     last_push=jnp.bool_(False), trace=trace0,
+                     xstate=xstate0)
         fin = jax.lax.while_loop(cond, body, init)
 
         state, frontier, cost = fin.state, fin.frontier, fin.cost
@@ -319,7 +330,7 @@ class PushPullEngine:
         if phase.exit_fn is not None:
             state, frontier, cost = phase.exit_fn(g, state, frontier, cost)
         return (state, frontier, cost, steps0 + fin.step,
-                pushes0 + fin.pushes, converged, fin.trace)
+                pushes0 + fin.pushes, converged, fin.trace, fin.xstate)
 
     # -- the full program: phases under an epoch loop ---------------------
     @partial(jax.jit, static_argnames=("self",))
@@ -337,16 +348,20 @@ class PushPullEngine:
             max_epochs, epoch_cond, epoch_exit = 1, None, None
 
         trace0 = StepTrace.empty(self.trace_capacity)
+        xstate0 = self.backend.init_exchange_state(g)
 
-        def run_epoch(state, frontier, epoch, cost, steps, pushes, trace):
+        def run_epoch(state, frontier, epoch, cost, steps, pushes, trace,
+                      xstate):
             conv = jnp.bool_(True)
             for ph in phases:         # statically unrolled: phases differ
-                state, frontier, cost, steps, pushes, conv, trace = \
-                    self._run_phase(g, ph, state, frontier, epoch, cost,
-                                    steps, pushes, trace)
+                (state, frontier, cost, steps, pushes, conv, trace,
+                 xstate) = self._run_phase(g, ph, state, frontier, epoch,
+                                           cost, steps, pushes, trace,
+                                           xstate)
             if epoch_exit is not None:
                 state, frontier = epoch_exit(g, state, frontier, epoch)
-            return state, frontier, cost, steps, pushes, conv, trace
+            return state, frontier, cost, steps, pushes, conv, trace, \
+                xstate
 
         def result(state, cost, steps, pushes, converged, epochs, trace):
             return EngineResult(
@@ -357,30 +372,33 @@ class PushPullEngine:
         if max_epochs == 1 and epoch_cond is None:
             # single-epoch programs (the PR-1 algorithms) skip the outer
             # loop entirely — same trace as the old flat engine
-            state, frontier, cost, steps, pushes, conv, trace = run_epoch(
-                init_state, init_frontier, jnp.int32(0), Cost(),
-                jnp.int32(0), jnp.int32(0), trace0)
+            state, frontier, cost, steps, pushes, conv, trace, _ = \
+                run_epoch(init_state, init_frontier, jnp.int32(0), Cost(),
+                          jnp.int32(0), jnp.int32(0), trace0, xstate0)
             return result(state, cost, steps, pushes, conv, jnp.int32(1),
                           trace)
 
         def cond(carry):
             (state, frontier, epoch, cost, steps, pushes, conv,
-             trace) = carry
+             trace, xstate) = carry
             go = epoch < max_epochs
             if epoch_cond is not None:
                 go = go & epoch_cond(g, state, epoch)
             return go
 
         def body(carry):
-            state, frontier, epoch, cost, steps, pushes, _, trace = carry
-            state, frontier, cost, steps, pushes, conv, trace = run_epoch(
-                state, frontier, epoch, cost, steps, pushes, trace)
+            (state, frontier, epoch, cost, steps, pushes, _, trace,
+             xstate) = carry
+            state, frontier, cost, steps, pushes, conv, trace, xstate = \
+                run_epoch(state, frontier, epoch, cost, steps, pushes,
+                          trace, xstate)
             return (state, frontier, epoch + 1, cost, steps, pushes, conv,
-                    trace)
+                    trace, xstate)
 
         init = (init_state, init_frontier, jnp.int32(0), Cost(),
-                jnp.int32(0), jnp.int32(0), jnp.bool_(True), trace0)
-        state, frontier, epochs, cost, steps, pushes, conv, trace = \
+                jnp.int32(0), jnp.int32(0), jnp.bool_(True), trace0,
+                xstate0)
+        state, frontier, epochs, cost, steps, pushes, conv, trace, _ = \
             jax.lax.while_loop(cond, body, init)
         if epoch_cond is not None:
             # converged iff the work test (not the epoch bound) ended it

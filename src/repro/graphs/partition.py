@@ -49,6 +49,26 @@ class Partition:
 
 
 def partition_1d(n: int, num_parts: int) -> Partition:
+    """Contiguous 1D decomposition of ``n`` vertices into ``num_parts``
+    owner blocks.
+
+    ``num_parts`` must lie in ``[1, n]``: fewer than one part is
+    meaningless, and more parts than vertices would leave empty shards
+    whose collective slices silently alias the last real owner. When
+    ``n`` is not divisible by ``num_parts`` the decomposition pads
+    explicitly — ``n_padded = shard_size * num_parts >= n`` — and every
+    consumer (exchanges, sharded backends) masks the ``[n, n_padded)``
+    tail; vertices are never truncated.
+    """
+    if num_parts < 1:
+        raise ValueError(
+            f"num_parts={num_parts} is invalid: a partition needs at "
+            "least one part")
+    if num_parts > n:
+        raise ValueError(
+            f"num_parts={num_parts} exceeds the vertex count n={n}: "
+            "every part must own at least one vertex (empty shards would "
+            "alias the last owner's slice)")
     shard = _round_up(n, num_parts) // num_parts
     return Partition(n=n, num_parts=num_parts, shard_size=shard,
                      n_padded=shard * num_parts)

@@ -93,23 +93,33 @@ def _out_dtype(x_dtype, w_dtype, msg: str, combine: str):
 
 @functools.partial(jax.jit,
                    static_argnames=("combine", "msg", "block_n",
-                                    "interpret"))
+                                    "interpret", "num_sources"))
 def ell_spmv_pallas(x_padded: jax.Array, ell_idx: jax.Array,
                     ell_w: jax.Array, combine: str = "sum",
                     msg: str = "mul", block_n: int = 256,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    num_sources: int | None = None) -> jax.Array:
     """Pull k-relaxation over the ELL layout.
 
     x_padded: [n+1] or [n+1, B] payloads (sentinel row at index n);
     ell_idx: i32[n, d_ell]; ell_w: f32[n, d_ell]. Returns [n] or [n, B]
     combined messages; empty rows hold the combine identity.
+
+    ``num_sources`` decouples the index validity bound from the row
+    count: by default indices are valid below ``n`` (the square-matrix
+    case), but a *row block* of a larger graph — the sharded backend's
+    per-shard ELL slice, whose rows gather from the full gathered value
+    vector — passes the global vertex count here. Requires
+    ``x_padded.shape[0] > max valid index`` as usual.
     """
     if interpret is None:
         interpret = default_interpret()
     n, d_ell = ell_idx.shape
+    n_src = n if num_sources is None else num_sources
     batched = x_padded.ndim == 2
     n_pad = -(-n // block_n) * block_n
-    idx = jnp.pad(ell_idx, ((0, n_pad - n), (0, 0)), constant_values=n)
+    idx = jnp.pad(ell_idx, ((0, n_pad - n), (0, 0)),
+                  constant_values=n_src)
     w = jnp.pad(ell_w, ((0, n_pad - n), (0, 0)))
     grid = (n_pad // block_n,)
     out_dtype = _out_dtype(x_padded.dtype, ell_w.dtype, msg, combine)
@@ -123,7 +133,7 @@ def ell_spmv_pallas(x_padded: jax.Array, ell_idx: jax.Array,
         out_shape = jax.ShapeDtypeStruct((n_pad,), out_dtype)
         x_spec = pl.BlockSpec(x_padded.shape, lambda i: (0,))
     out = pl.pallas_call(
-        functools.partial(_kernel, combine=combine, msg=msg, n=n),
+        functools.partial(_kernel, combine=combine, msg=msg, n=n_src),
         grid=grid,
         in_specs=[
             x_spec,                                    # full vector

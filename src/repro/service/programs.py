@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from ..core.backend import DenseBackend, EllBackend, require_backend
 from ..core.engine import Phase, PhaseProgram, VertexProgram
 from ..graphs.structure import Graph
+from ..shard.backend import ShardedBackend
 
 __all__ = ["BatchSpec", "register_batch", "batchable", "get_batch_spec"]
 
@@ -128,8 +129,10 @@ def bfs_batch_program(g: Graph, batch: int, policy=None, backend=None
     assigning correct distances.
     """
     # DistributedBackend charges width-blind counters, which would break
-    # the batch-aware predictor's exactness — batching is dense/ELL only
-    require_backend("bfs (batched)", backend, DenseBackend, EllBackend)
+    # the batch-aware predictor's exactness — batching runs on the
+    # dense/ELL layouts or the width-aware sharded backend
+    require_backend("bfs (batched)", backend, DenseBackend, EllBackend,
+                    ShardedBackend)
     n = g.n
 
     def values_fn(g_, state, frontier):
@@ -219,7 +222,8 @@ def ppr_batch_program(g: Graph, batch: int, iters: int = 100,
     run stops — so batched results stay bit-identical even though the
     engine keeps stepping until every query converges.
     """
-    require_backend("ppr (batched)", backend, DenseBackend, EllBackend)
+    require_backend("ppr (batched)", backend, DenseBackend, EllBackend,
+                    ShardedBackend)
     n = g.n
     damp = float(damp)
     tol = float(tol)
@@ -312,7 +316,8 @@ def sssp_batch_program(g: Graph, batch: int, delta: float = 2.0,
     buckets; incumbents' settled vertices stay outside their ``qfront``
     and contribute no exchange work.
     """
-    require_backend("sssp_delta", backend, DenseBackend, EllBackend)
+    require_backend("sssp_delta", backend, DenseBackend, EllBackend,
+                    ShardedBackend)
     delta = float(delta)
 
     def _guard(state):

@@ -1,0 +1,20 @@
+"""repro.shard — the engine's k-relaxation sharded across a device mesh.
+
+The paper's §6 DM setting as a production subsystem: a 1D vertex
+partition, Partition-Aware local/remote edge split, fused shard_map
+push/pull exchanges (push optionally compressed with error feedback),
+and adaptive inter-device wire-byte accounting that lets ``AutoSwitch``
+flip direction for communication reasons alone.
+
+Entry points: ``ShardedBackend.prepare(g, ...)`` or
+``api.solve(g, algo, backend="shard")``.
+"""
+
+from .backend import ShardedBackend
+from .exchange import active_remote_edges, sharded_pull, sharded_push
+from .mesh import make_shard_mesh
+from .topology import ShardTopology, build_topology
+
+__all__ = ["ShardedBackend", "make_shard_mesh", "ShardTopology",
+           "build_topology", "sharded_push", "sharded_pull",
+           "active_remote_edges"]

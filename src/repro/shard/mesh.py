@@ -1,0 +1,37 @@
+"""Device mesh construction for the sharded engine (paper §6 DM setting).
+
+One mesh shape serves the whole subsystem: ``(P, 1)`` over axes
+``(axis, "model")`` — a 1D data decomposition matching the 1D vertex
+partition, with a trivial model axis so the same mesh composes with the
+training-side utilities in ``repro.dist``. Vertex shard ``p`` lives on
+device ``p``; all exchanges run along ``axis``.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_shard_mesh"]
+
+
+def make_shard_mesh(num_shards: int | None = None,
+                    axis: str = "data") -> Mesh:
+    """Build the ``(P, 1)`` mesh the sharded backend runs under.
+
+    ``num_shards=None`` takes every visible device. Rejects requests for
+    more shards than devices (shard_map cannot oversubscribe an axis)
+    and for fewer than one.
+    """
+    devices = jax.devices()
+    P = len(devices) if num_shards is None else num_shards
+    if P < 1:
+        raise ValueError(
+            f"num_shards={P} is invalid: a mesh needs at least one shard")
+    if P > len(devices):
+        raise ValueError(
+            f"num_shards={P} exceeds the {len(devices)} visible devices; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count to fake "
+            "more on CPU")
+    return Mesh(np.array(devices[:P]).reshape(P, 1), (axis, "model"))

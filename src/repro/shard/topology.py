@@ -1,0 +1,81 @@
+"""Sharded graph topology — the per-shard views every exchange consumes.
+
+Built host-side once per (graph, partition) pair, mirroring how
+``graphs.structure`` materializes multi-layout views once per graph:
+
+  * **push layout** — the Partition-Awareness split (paper §5-PA):
+    ``local`` edges (both endpoints owned by one shard) grouped by that
+    owner, and ``remote`` cut edges grouped by the *source* owner (the
+    shard that sends).
+  * **pull layout** — ALL edges grouped by the *destination* owner,
+    preserving the global dst-sorted COO order. Each destination's
+    in-edges therefore stay contiguous and in the same relative order as
+    the single-device ``pull_relax`` segment ops, which keeps the
+    per-destination combine order identical across shard counts (exact
+    reproducibility for order-sensitive sums).
+  * **ELL row blocks** — the ``[n, d_ell]`` padded in-neighbor matrix
+    cut into ``[P, shard_size, d_ell]`` row slices, so the per-shard
+    pull can run the ELL gather+reduce (or the Pallas ``ell_spmv``
+    kernel) against the all_gathered value vector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from ..graphs.partition import (Partition, PartitionedEdges, _pack,
+                                pa_split)
+from ..graphs.structure import Graph
+
+__all__ = ["ShardTopology", "build_topology"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardTopology:
+    """Per-shard edge/row views for one (graph, partition) pair."""
+    part: Partition
+    local: PartitionedEdges       # PA local edges, by owner (push layout)
+    remote: PartitionedEdges      # PA cut edges, by src owner (push layout)
+    pull_edges: PartitionedEdges  # ALL edges by dst owner, coo order kept
+    ell_idx: jax.Array            # int32[P, shard_size, d_ell]
+    ell_w: jax.Array              # float32[P, shard_size, d_ell]
+    cut_edges: int = dataclasses.field(metadata=dict(static=True))
+    border_vertices: int = dataclasses.field(metadata=dict(static=True))
+
+
+def build_topology(g: Graph, part: Partition,
+                   align: int = 128) -> ShardTopology:
+    """Materialize every per-shard view of ``g`` under ``part``."""
+    P = part.num_parts
+    local, remote, stats = pa_split(g, part, align=align)
+
+    # pull layout: all edges grouped by dst owner. Boolean-mask selection
+    # preserves the global coo (dst-sorted) order inside each group, so
+    # each destination's in-edges keep their single-device combine order.
+    src = np.asarray(g.coo_src)
+    dst = np.asarray(g.coo_dst)
+    w = np.asarray(g.coo_w)
+    own_d = part.owner_np(dst)
+    rows = [src[own_d == p] for p in range(P)]
+    cols = [dst[own_d == p] for p in range(P)]
+    ws = [w[own_d == p] for p in range(P)]
+    pull_edges = _pack(rows, cols, ws, P, g.n, align)
+
+    # ELL row blocks: pad the row axis to n_padded (sentinel rows are
+    # empty — index n is already the ELL invalid marker) and cut into
+    # per-shard slices.
+    extra = part.n_padded - g.n
+    ell_idx = np.pad(np.asarray(g.ell_idx), ((0, extra), (0, 0)),
+                     constant_values=g.n)
+    ell_w = np.pad(np.asarray(g.ell_w), ((0, extra), (0, 0)))
+    return ShardTopology(
+        part=part, local=local, remote=remote, pull_edges=pull_edges,
+        ell_idx=jax.numpy.asarray(
+            ell_idx.reshape(P, part.shard_size, g.d_ell)),
+        ell_w=jax.numpy.asarray(ell_w.reshape(P, part.shard_size, g.d_ell)),
+        cut_edges=int(stats["cut_edges"]),
+        border_vertices=int(stats["border_vertices"]))

@@ -1,0 +1,214 @@
+"""dist.compression — error-feedback compression of the DM exchange.
+
+Properties, single-device: round-trip identities (kind="none" and a
+top-k that keeps everything are exact), the error-feedback telescoping
+invariant (the carried residual is exactly the cumulative
+sent-vs-true gap, so the compressed stream is unbiased over time), and
+the analytic wire-byte model. Multi-device (fresh interpreter, fake
+devices): the raw ``dist.collectives`` exchanges agree with a numpy
+reference at 1/2/4 parts, and a compressed sharded PageRank converges
+to the uncompressed fixed point.
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.compression import (CompressionConfig, compress_tree,
+                                    compressed_bytes, init_error_state)
+
+
+def _run_sub(script: str) -> subprocess.CompletedProcess:
+    import os
+    from pathlib import Path
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900,
+                          env=env, cwd=str(root))
+
+
+def test_none_kind_is_identity():
+    g = jnp.arange(8.0)
+    e = jnp.ones((8,))
+    dec, err = compress_tree(g, e, CompressionConfig(kind="none"))
+    assert dec is g and err is e
+
+
+def test_topk_keeping_everything_is_exact_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,),
+                          dtype=jnp.float32)
+    err0 = init_error_state(x)
+    dec, err = compress_tree(x, err0, CompressionConfig(
+        kind="topk", topk_frac=1.0))
+    assert bool(jnp.all(dec == x))
+    assert bool(jnp.all(err == 0.0))
+
+
+def test_topk_keeps_largest_magnitudes():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -0.3],
+                    jnp.float32)
+    dec, err = compress_tree(x, jnp.zeros_like(x), CompressionConfig(
+        kind="topk", topk_frac=0.25))        # k = 2 of 8
+    kept = np.flatnonzero(np.asarray(dec))
+    assert set(kept) == {1, 3}
+    np.testing.assert_allclose(np.asarray(dec + err), np.asarray(x),
+                               rtol=1e-6)
+
+
+def test_error_feedback_telescoping_invariant():
+    """After T compressed steps, sent + carried == true cumulative
+    signal exactly: err_T = Σ grads − Σ decs. This is the unbiasedness
+    that lets a compressed push converge to the uncompressed fixed
+    point."""
+    cfg = CompressionConfig(kind="topk", topk_frac=0.1)
+    key = jax.random.PRNGKey(7)
+    err = init_error_state(jnp.zeros((50,), jnp.float32))
+    sent = jnp.zeros((50,), jnp.float32)
+    true = jnp.zeros((50,), jnp.float32)
+    for t in range(10):
+        key, k = jax.random.split(key)
+        grad = jax.random.normal(k, (50,), dtype=jnp.float32)
+        dec, err = compress_tree(grad, err, cfg)
+        sent = sent + dec
+        true = true + grad
+    np.testing.assert_allclose(np.asarray(sent + err), np.asarray(true),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_int8_roundtrip_bounded_error():
+    x = jax.random.normal(jax.random.PRNGKey(1), (256,),
+                          dtype=jnp.float32) * 3.0
+    dec, err = compress_tree(x, jnp.zeros_like(x),
+                             CompressionConfig(kind="int8"))
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(err))) <= scale * 0.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(dec + err), np.asarray(x),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_compressed_bytes_model():
+    tree = {"a": jnp.zeros((100,)), "b": jnp.zeros((10, 10))}
+    assert compressed_bytes(tree, CompressionConfig(kind="none")) == 800
+    assert compressed_bytes(
+        tree, CompressionConfig(kind="int8")) == 2 * (100 + 4)
+    assert compressed_bytes(tree, CompressionConfig(
+        kind="topk", topk_frac=0.05)) == 2 * 5 * 8
+
+
+# ---------------------------------------------------------------------
+# multi-device: collectives parity + compressed fixed point
+
+COLLECTIVES_PARITY = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.dist.collectives import push_exchange, pull_exchange
+from repro.graphs.generators import erdos_renyi
+from repro.graphs.partition import (pa_regroup_by_dst, pa_split,
+                                    partition_1d)
+
+g = erdos_renyi(110, 4.0, seed=9, weighted=True)
+vals_full = np.random.default_rng(0).random(110).astype(np.float32)
+for P in (1, 2, 4):
+    mesh = Mesh(np.array(jax.devices()[:P]).reshape(P, 1),
+                ("data", "model"))
+    part = partition_1d(g.n, P)
+    local, remote, _ = pa_split(g, part)
+    remote_dst = pa_regroup_by_dst(part, remote, g.n)
+    vals = jnp.asarray(np.pad(vals_full, (0, part.n_padded - g.n)))
+    # numpy reference: value*weight combined per destination over the
+    # cut (the collectives' default message)
+    ok = np.asarray(remote.valid).reshape(-1)
+    src = np.asarray(remote.src).reshape(-1)[ok]
+    dst = np.asarray(remote.dst).reshape(-1)[ok]
+    w = np.asarray(remote.w).reshape(-1)[ok]
+    want = np.zeros((part.n_padded,), np.float32)
+    np.add.at(want, dst, vals_full[src] * w)
+    got_push, _ = push_exchange(mesh, part, remote, vals)
+    got_pull, _ = pull_exchange(mesh, part, remote_dst, vals)
+    okp = np.allclose(np.asarray(got_push), want, atol=1e-5)
+    okl = np.allclose(np.asarray(got_pull), want, atol=1e-5)
+    print(f"collectives P={P} push ok: {okp} pull ok: {okl}")
+"""
+
+
+@pytest.mark.dist
+@pytest.mark.subprocess
+def test_collectives_parity_across_parts():
+    """push_exchange and pull_exchange agree with a numpy combining
+    reference over the cut at 1, 2, and 4 parts."""
+    r = _run_sub(COLLECTIVES_PARITY)
+    assert r.returncode == 0, r.stdout + r.stderr
+    for P in (1, 2, 4):
+        line = f"collectives P={P} push ok: True pull ok: True"
+        assert line in r.stdout, (line, r.stdout + r.stderr)
+
+
+COMPRESSED_PAGERANK = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax.numpy as jnp
+from repro import api
+from repro.dist.compression import CompressionConfig
+from repro.graphs.generators import erdos_renyi
+from repro.shard import ShardedBackend
+
+g = erdos_renyi(130, 4.0, seed=5, weighted=True)
+ref = api.solve(g, "pagerank", policy="push", iters=40)
+
+def run(frac):
+    cfg = CompressionConfig(kind="topk", topk_frac=frac)
+    sb = ShardedBackend.prepare(g, num_shards=4, compression=cfg)
+    return api.solve(g, "pagerank", policy="push", backend=sb, iters=40)
+
+err, mass = {}, {}
+for frac in (0.25, 0.5, 0.75, 1.0):
+    got = run(frac)
+    err[frac] = float(jnp.max(jnp.abs(got.state - ref.state))
+                      / jnp.max(ref.state))
+    mass[frac] = float(jnp.sum(got.state))
+    print(f"frac={frac} sup_rel={err[frac]:.3e} mass={mass[frac]:.4f}")
+# once k covers the remote accumulator's support, the compressed
+# exchange IS the uncompressed exchange (up to reassociation)
+print("exact when support covered ok:",
+      err[0.75] < 1e-5 and err[1.0] < 1e-5)
+# below that, EF cycling wobble shrinks monotonically with the budget
+print("error monotone in budget ok:",
+      err[0.25] >= err[0.5] >= err[0.75])
+# error feedback conserves rank mass over time even while compressing
+print("mass conserved ok:",
+      all(abs(mass[f] - 1.0) < 0.05 for f in (0.25, 0.5, 0.75, 1.0)))
+un = api.solve(g, "pagerank", policy="push",
+               backend=ShardedBackend.prepare(g, num_shards=4), iters=40)
+cb = run(0.05)
+print("wire bytes shrink ok:",
+      int(cb.cost.collective_bytes) < int(un.cost.collective_bytes))
+"""
+
+
+@pytest.mark.dist
+@pytest.mark.subprocess
+def test_compressed_push_converges_to_uncompressed_fixed_point():
+    """PageRank through the sharded push with error-feedback top-k:
+    once the top-k budget covers the remote accumulator's support the
+    run is the uncompressed fixed point (≤1e-5 sup-norm); below that
+    the EF cycling error shrinks monotonically with the budget while
+    total rank mass stays conserved; and the charged wire bytes shrink
+    versus the uncompressed exchange."""
+    r = _run_sub(COMPRESSED_PAGERANK)
+    assert r.returncode == 0, r.stdout + r.stderr
+    checks = [l for l in r.stdout.splitlines() if "ok:" in l]
+    assert len(checks) == 4, r.stdout + r.stderr
+    for line in checks:
+        assert line.rstrip().endswith("True"), \
+            (line, r.stdout + r.stderr)

@@ -17,7 +17,7 @@ DOCS = ROOT / "docs"
 
 def test_docs_tree_exists():
     for page in ("architecture.md", "push-pull.md", "algorithms.md",
-                 "kernels.md", "results.md"):
+                 "kernels.md", "distributed.md", "results.md"):
         assert (DOCS / page).is_file(), f"missing docs/{page}"
 
 
@@ -25,7 +25,7 @@ def test_readme_links_docs():
     readme = (ROOT / "README.md").read_text()
     for page in ("docs/architecture.md", "docs/push-pull.md",
                  "docs/algorithms.md", "docs/kernels.md",
-                 "docs/results.md"):
+                 "docs/distributed.md", "docs/results.md"):
         assert page in readme, f"README does not link {page}"
 
 
@@ -39,6 +39,22 @@ def test_kernels_page_covers_dispatch_surface():
         assert needle in page, f"docs/kernels.md does not mention {needle}"
     # the architecture backend table links here
     assert "kernels.md" in (DOCS / "architecture.md").read_text()
+
+
+def test_distributed_page_covers_shard_surface():
+    """docs/distributed.md stays honest: the backend, its entry points,
+    the exchange pieces, the compression lever, and the scaling suite
+    are all named."""
+    page = (DOCS / "distributed.md").read_text()
+    for needle in ("ShardedBackend", "shard_map", "make_shard_mesh",
+                   "build_topology", "psum_scatter", "all_gather",
+                   "predict_comm_bytes", "CompressionConfig",
+                   "scaling_throughput", "BENCH_scaling.json",
+                   "partition_1d"):
+        assert needle in page, (
+            f"docs/distributed.md does not mention {needle}")
+    # the architecture backend table links here
+    assert "distributed.md" in (DOCS / "architecture.md").read_text()
 
 
 def test_every_registered_algorithm_documented():
@@ -104,6 +120,14 @@ def _sample_report():
                  "dtype": "float32", "msg": "copy", "block_n": 128,
                  "us_jnp": 515.4, "us_pallas": 419.7, "speedup": 1.23,
                  "match": True}},
+            {"name": "scaling_bfs_push_P4", "us_per_call": 150.0,
+             "derived": {
+                 "algorithm": "bfs", "graph": "orc", "n": 128, "m": 982,
+                 "policy": "push", "backend": "shard", "shards": 4,
+                 "compression": "none", "wall_us": 150.0,
+                 "collective_bytes": 4096, "steps": 5, "push_steps": 5,
+                 "cut_edges": 300, "converged": True,
+                 "weighted_total": 2.0, "match": True}},
         ],
         "failures": [],
     }
@@ -126,8 +150,13 @@ def test_schema_rejects_malformed_reports():
     del bad_kernel["rows"][2]["derived"]["us_pallas"]
     bad_kernel_dir = _sample_report()
     bad_kernel_dir["rows"][2]["derived"]["direction"] = "sideways"
+    bad_scaling = _sample_report()
+    del bad_scaling["rows"][3]["derived"]["collective_bytes"]
+    bad_scaling_comp = _sample_report()
+    bad_scaling_comp["rows"][3]["derived"]["compression"] = "gzip"
     for bad in (bad_missing_rows, bad_row, bad_cell, bad_policy,
-                bad_kernel, bad_kernel_dir):
+                bad_kernel, bad_kernel_dir, bad_scaling,
+                bad_scaling_comp):
         with pytest.raises(Exception):
             validate_report(bad)
 
@@ -167,6 +196,34 @@ def test_bench_kernels_json_covers_kernel_cells():
     assert "rmat" in {c["graph"] for c in cells}
     assert any(c["batch"] > 1 for c in cells)
     assert all(c["match"] for c in cells)
+
+
+def test_bench_scaling_json_covers_shard_cells():
+    """The committed sharded-scaling trajectory: multiple shard counts
+    incl. multi-device, both directions, a compressed cell, every
+    cross-check true, and the §6 asymmetry — some frontier-sparse cell
+    where push moves fewer bytes than its pull counterpart."""
+    report = json.loads((ROOT / "BENCH_scaling.json").read_text())
+    cells = [r["derived"] for r in report["rows"]
+             if r["name"].startswith("scaling_")]
+    assert cells, "BENCH_scaling.json has no scaling_* rows"
+    shards = {c["shards"] for c in cells}
+    assert 1 in shards and max(shards) >= 4, shards
+    assert {c["policy"] for c in cells} >= {"push", "pull", "auto"}
+    assert any(c["compression"] != "none" for c in cells)
+    assert all(c["match"] for c in cells)
+    by_key = {(c["algorithm"], c["policy"], c["compression"],
+               c["shards"]): c for c in cells}
+    sparse_wins = [
+        (alg, P)
+        for (alg, pol, comp, P), c in by_key.items()
+        if pol == "push" and comp == "none" and P > 1
+        and (alg, "pull", "none", P) in by_key
+        and c["collective_bytes"]
+        < by_key[(alg, "pull", "none", P)]["collective_bytes"]]
+    assert sparse_wins, (
+        "no cell with push wire bytes < pull wire bytes; the "
+        "frontier-sparse asymmetry is the suite's point")
 
 
 def test_bench_json_covers_matrix():
