@@ -8,7 +8,8 @@ report shape that downstream trajectory tooling parses.
 
 Uses ``jsonschema`` when installed; otherwise falls back to a built-in
 validator covering the subset of draft-07 the schema uses (type,
-required, properties, additionalProperties, items, enum, minimum, $ref).
+required, properties, additionalProperties, items, enum, minimum,
+exclusiveMinimum, maximum, $ref).
 Rows named ``pushpull_*`` additionally have their ``derived`` payload
 checked against ``definitions/pushpull_cell``, rows named ``service_*``
 against ``definitions/service_cell``, rows named ``kernel_*`` against
@@ -46,11 +47,18 @@ def _check(instance, schema: dict, defs: dict, path: str = "$") -> None:
                              f"got {type(instance).__name__}")
     if "enum" in schema and instance not in schema["enum"]:
         raise ValueError(f"{path}: {instance!r} not in {schema['enum']}")
-    if "minimum" in schema and isinstance(instance, (int, float)) \
-            and not isinstance(instance, bool) \
-            and instance < schema["minimum"]:
-        raise ValueError(f"{path}: {instance} < minimum "
-                         f"{schema['minimum']}")
+    if isinstance(instance, (int, float)) and not isinstance(instance,
+                                                             bool):
+        if "minimum" in schema and instance < schema["minimum"]:
+            raise ValueError(f"{path}: {instance} < minimum "
+                             f"{schema['minimum']}")
+        if "exclusiveMinimum" in schema \
+                and instance <= schema["exclusiveMinimum"]:
+            raise ValueError(f"{path}: {instance} <= exclusiveMinimum "
+                             f"{schema['exclusiveMinimum']}")
+        if "maximum" in schema and instance > schema["maximum"]:
+            raise ValueError(f"{path}: {instance} > maximum "
+                             f"{schema['maximum']}")
     if isinstance(instance, dict):
         for req in schema.get("required", ()):
             if req not in instance:

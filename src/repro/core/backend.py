@@ -252,13 +252,18 @@ class PallasBackend(EllBackend):
     """The ELL backend's semantics executed by the Pallas kernels.
 
     ``pull`` dispatches to ``ell_spmv_pallas`` (padded-row gather +
-    combine) and ``push`` to ``coo_push_pallas`` (dst-sorted tile-serial
-    combine); both inherit ``pull_scans_all=True`` (the rectangular
-    gather touches every edge), so AutoSwitch prices kernel pulls
-    correctly. Block sizes come from ``kernels/tune.py`` — probed once
-    per (graph shape, payload shape) and cached on this instance —
-    unless pinned via ``block_n``/``block_e``. ``interpret=None``
-    auto-detects (compiled on TPU, interpreter elsewhere).
+    combine) and ``push`` to ``coo_push_pallas`` (two-phase
+    contention-free bin reduce: a per-graph bin layout — cached here
+    alongside the tuner results for concrete graphs, gathered in-trace
+    from ``in_ptr`` under jit — feeding a grid parallel over
+    destination bins); both inherit ``pull_scans_all=True`` (the
+    rectangular gather touches every edge), so AutoSwitch prices
+    kernel pulls correctly. Block sizes and the push reduce strategy
+    come from ``kernels/tune.py`` — probed once per (graph shape,
+    payload shape, platform), cached on this instance and on disk —
+    unless pinned via ``block_n``/``block_e``/``push_block_n``/
+    ``push_strategy``. ``interpret=None`` auto-detects (compiled on
+    TPU, interpreter elsewhere).
 
     Cells outside the kernels' coverage — a ``msg_fn`` that is not one
     of the three wire-message shapes, a combine outside {sum, max, min},
@@ -273,13 +278,16 @@ class PallasBackend(EllBackend):
     """
     interpret: Optional[bool] = None
     block_n: Optional[int] = None     # pull tile rows (None = autotune)
-    block_e: Optional[int] = None     # push edge-tile size
-    push_block_n: Optional[int] = None  # push window node block
+    block_e: Optional[int] = None     # push edge-chunk size
+    push_block_n: Optional[int] = None  # push destination-bin width
+    push_strategy: Optional[str] = None  # phase-2 reduce ("scan"|"mxu")
+    push_bin_cap: Optional[int] = None  # traced-bin capacity override
     autotune: bool = True
     stats: dict = dataclasses.field(
         default_factory=lambda: {"kernel_pull": 0, "kernel_push": 0,
                                  "fallback_pull": 0, "fallback_push": 0})
     _tuned: dict = dataclasses.field(default_factory=dict, repr=False)
+    _plans: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # identity eq/hash, explicitly: instances carry mutable caches and
     # distinct block/interpret configs, and the engine cache keys on the
@@ -316,9 +324,10 @@ class PallasBackend(EllBackend):
         return self._tuned[key]
 
     def _push_blocks(self, g: Graph, values, combine,
-                     mode) -> tuple[int, int]:
-        if self.block_e is not None and self.push_block_n is not None:
-            return self.block_e, self.push_block_n
+                     mode) -> tuple[int, int, str]:
+        if (self.block_e is not None and self.push_block_n is not None
+                and self.push_strategy is not None):
+            return self.block_e, self.push_block_n, self.push_strategy
         from ..kernels.tune import push_candidates, tune_push
         width = 1 if values.ndim == 1 else int(values.shape[-1])
         key = ("push", g.n, g.m, width, str(values.dtype), combine, mode)
@@ -327,13 +336,30 @@ class PallasBackend(EllBackend):
                 tune_push(g.n, g.m, width, values.dtype, combine, mode,
                           self.interpret)
                 if self.autotune else push_candidates(g.n, g.m)[0])
-        be, bn = self._tuned[key]
+        be, bn, strat = self._tuned[key]
         # partial pins override only their own component
         if self.block_e is not None:
             be = self.block_e
         if self.push_block_n is not None:
             bn = self.push_block_n
-        return be, bn
+        if self.push_strategy is not None:
+            strat = self.push_strategy
+        return be, bn, strat
+
+    def _push_plan(self, g: Graph, block_n: int, block_e: int):
+        """Cached phase-1 bin layout for a concrete graph — built once
+        per (graph, bin width, edge block) via the host regroup and
+        stored alongside the tuner results. Keys carry a weakref so an
+        id() reused by a new Graph cannot resurrect a stale plan."""
+        from ..kernels.coo_push import build_push_plan
+        key = (id(g), block_n, block_e)
+        hit = self._plans.get(key)
+        if hit is not None and hit[0]() is g:
+            return hit[1]
+        plan = build_push_plan(g.coo_src, g.coo_dst, g.coo_w, g.n,
+                               block_n, align=block_e)
+        self._plans[key] = (weakref.ref(g), plan)
+        return plan
 
     # -- ExchangeBackend ---------------------------------------------------
     def pull(self, g, values, touched, combine, msg_fn, cost):
@@ -363,35 +389,47 @@ class PallasBackend(EllBackend):
             self.stats["fallback_push"] += 1
             return super().push(g, values, frontier, combine, msg_fn,
                                 cost)
-        from ..kernels.coo_push import coo_push_pallas, push_window_fits
+        from ..kernels.coo_push import (bin_plan_traced, coo_push_pallas,
+                                        default_bin_cap)
         self.stats["kernel_push"] += 1
-        block_e, block_n = self._push_blocks(g, values, combine, mode)
+        block_e, block_n, strategy = self._push_blocks(g, values,
+                                                       combine, mode)
 
-        def kernel(v, f):
+        def kernel(v, f, plan):
             return coo_push_pallas(
                 v, f, g.coo_src, g.coo_dst, g.coo_w, g.n, combine=combine,
                 msg=mode, block_e=block_e, block_n=block_n,
-                interpret=self.interpret)
+                interpret=self.interpret, plan=plan, strategy=strategy)
 
-        if block_e + block_n >= g.n:
-            # window covers every destination: precondition holds
-            # statically (the tuner's ladder always lands here)
-            out = kernel(values, frontier)
+        if not isinstance(g.coo_src, jax.core.Tracer):
+            # concrete graph (direct calls, benchmarks): the host
+            # regroup builds the exact bin layout once; cached per
+            # (graph, bin width, edge block) next to the tuner results
+            out = kernel(values, frontier,
+                         self._push_plan(g, block_n, block_e))
         else:
-            # caller-pinned small blocks: guard the kernel's window
-            # precondition at runtime, falling back to the same combine
-            # over the same dst-sorted edge order. The O(m) fits check
-            # is traced per step on purpose: g is a tracer here, and
-            # engines are cached per graph *shape* — deciding the
-            # branch eagerly per concrete graph would bake one graph's
-            # answer into an engine other same-shape graphs reuse.
+            # the engine jits the graph: bin in-trace from in_ptr (one
+            # gather, no scatter) under a static capacity, guarded by
+            # the plan's fits bit. The guard is traced per step on
+            # purpose: engines are cached per graph *shape* — deciding
+            # eagerly per concrete graph would bake one graph's answer
+            # into an engine other same-shape graphs reuse.
+            cap = (self.push_bin_cap
+                   or default_bin_cap(g.n, g.m, g.d_ell, block_n,
+                                      block_e))
+            plan, fits = bin_plan_traced(
+                g.coo_src, g.coo_dst, g.coo_w, g.in_ptr, g.n, block_n,
+                cap=cap, align=block_e, max_run=g.d_ell)
             out = jax.lax.cond(
-                push_window_fits(g.coo_dst, g.n, block_e, block_n),
-                kernel, lambda v, f: _coo_push_jnp(g, v, f, combine,
-                                                   mode),
+                fits,
+                lambda v, f: kernel(v, f, plan),
+                lambda v, f: _coo_push_jnp(g, v, f, combine, mode),
                 values, frontier)
         k = frontier_out_edges(g, frontier)
         width = 1 if values.ndim == 1 else values.shape[-1]
+        # the phase-1 binning pass reads and rewrites every edge once
+        # (frontier-independent: the layout covers the whole edge list)
+        cost = cost.charge(reads=counter(g.m), writes=counter(g.m))
         cost = cost.charge(reads=k * width).charge_combining_writes(
             k * width,
             float_data=jnp.issubdtype(values.dtype, jnp.floating))
@@ -400,9 +438,9 @@ class PallasBackend(EllBackend):
 
 def _coo_push_jnp(g: Graph, values, frontier, combine: str, mode: str):
     """Segment-op push over the *dst-sorted* edge order — the runtime
-    fallback branch when a pinned block configuration cannot guarantee
-    the COO kernel's window precondition (same combine, same order, so
-    the two branches agree)."""
+    fallback branch when the traced binning pass's static capacity
+    cannot hold the skewest bin (same combine, same order, so the two
+    branches agree)."""
     x = jnp.take(values, g.coo_src, axis=0, mode="fill", fill_value=0)
     if mode == "mul":
         w = g.coo_w

@@ -1,29 +1,46 @@
-"""Pallas TPU kernel: frontier-masked push relaxation (segment combine).
+"""Pallas TPU kernel: two-phase contention-free push relaxation.
 
 Paper hot spot: the push k-relaxation — active sources scatter combined
 updates into destination slots (CSC SpMSpV, §7.1). On CPU this is an
-atomic per edge; the TPU adaptation replaces atomics with **tile-serial
-combining**: edges arrive sorted by destination, the grid walks edge
-tiles *sequentially*, and each tile accumulates into an output vector
-held resident across grid steps. Combining a sum inside a tile uses a
-one-hot matmul (MXU-friendly CRCW-CB combine); max/min combine via a
-masked window reduce; cross-tile conflicts are resolved by the
-sequential grid — deterministic, atomic-free.
+atomic per edge; the old TPU adaptation serialized the whole grid to
+avoid write conflicts and lost to jnp ``segment_sum`` everywhere. This
+version removes the contention instead of serializing around it:
 
-Window invariant: ``block_e`` consecutive dst-sorted edges touch at most
-``block_e`` distinct destinations, so a window of ``block_e + block_n``
-anchored at the tile's first destination block covers the tile **when
-the tile's destination span fits the window** (always true when
-``block_e + block_n >= n``; :func:`push_window_fits` checks the general
-case so callers can guard with ``lax.cond`` — the PallasBackend does).
+**Phase 1 — binning.** Edges are regrouped by destination *bin*: bin
+``b`` owns destinations ``[b·bin_n, (b+1)·bin_n)``. Because the COO
+edges are already dst-sorted, each bin is a *contiguous slice* of the
+edge list; the layout is a padded ``[nb, cap]`` matrix plus a per-bin
+CSR row pointer ``ptr[nb, bin_n+1]`` locating every destination's run
+of edges inside its bin. Host-side the regroup goes through the
+existing :func:`~repro.graphs.partition.pa_regroup_by_dst` primitive
+(:func:`build_push_plan`); under a trace (the engine jits the graph)
+the same layout is gathered from ``in_ptr`` (:func:`bin_plan_traced`)
+with a static capacity and a runtime fits guard.
 
-Frontier masking implements the SpMSpV sparsity: edges whose source is
-inactive contribute the identity. Padded edges carry the sentinel
-``n`` on *both* endpoints and are masked on both (padding used to aim
-at the real vertex ``n - 1``; see tests/test_pallas_backend.py for the
-regression). The accumulator is kept whole (fits VMEM for the
-kernel-benchmark sizes; a production variant would shard nodes over
-cores — see DESIGN.md §9).
+**Phase 2 — per-bin reduce.** The grid runs *in parallel over
+destination bins* (axis 0) while streaming edge blocks (axis 1, which
+Pallas double-buffers); each bin owns a private ``[bin_n(, B)]``
+accumulator block, so no two grid cells ever write the same
+destination — contention-free by construction, no atomics, no
+sequential grid. Two reduce strategies, selected by the autotuner:
+
+  * ``"scan"`` — bandwidth-bound: float/int sums gather two prefix
+    sums at each destination's run boundaries (``cumsum`` + ``ptr``
+    difference; floats accumulate the prefix in float64 so the
+    difference never cancels below the parity tolerance), min/max use
+    a segmented log-step (Hillis–Steele) scan over the dst runs. Work
+    is O(cap + bin_n) per bin — what the roofline says this memory-
+    bound kernel should cost.
+  * ``"mxu"`` — compute-bound: the one-hot-matmul sum (float sums hit
+    the MXU) and the masked window reduce (min/max, integer sums).
+    O(bin_n × cap) multiply-accumulates per bin, which the MXU does
+    essentially for free on real TPUs but the interpreter does not.
+
+Sentinel discipline: padded slots carry ``n`` on both endpoints and
+weight 0; they are masked to the combine identity and, in the scan
+strategy, live beyond ``ptr[bin_n]`` so the boundary gathers never
+read them. Destinations with no (active) in-edge hold the combine
+identity — including whole edgeless bins (all-padding blocks).
 
 Production surface matches ``ell_spmv_pallas``: combine ∈
 {sum, max, min}, payloads [n] or [n, B], float32/float64/int32/int64,
@@ -32,174 +49,340 @@ msg ∈ {"mul", "copy", "add"}, ``interpret=None`` auto-detect.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from ..core.primitives import combine_identity
 from .ell_spmv import default_interpret
 
-__all__ = ["coo_push_pallas", "push_window_fits"]
+__all__ = ["PushBinPlan", "build_push_plan", "bin_plan_traced",
+           "default_bin_cap", "coo_push_pallas", "PUSH_STRATEGIES"]
+
+PUSH_STRATEGIES = ("scan", "mxu")
 
 
-def push_window_fits(dst: jax.Array, n: int, block_e: int,
-                     block_n: int) -> jax.Array:
-    """True iff every ``block_e`` edge tile's destination span fits the
-    ``block_e + block_n`` accumulation window — the kernel's coverage
-    precondition. Statically true when the window covers all of [0, n);
-    otherwise a cheap traced reduction over the dst vector (callers
-    guard the kernel with ``lax.cond`` on it)."""
-    win = block_e + block_n
-    if win >= n:
-        return jnp.bool_(True)
-    m = dst.shape[0]
-    m_pad = -(-m // block_e) * block_e
-    dstp = jnp.pad(dst, (0, m_pad - m), constant_values=n).reshape(
-        -1, block_e)
-    first = dstp[:, 0]
-    anchors = (first // block_n) * block_n
-    last = jnp.max(jnp.where(dstp < n, dstp, -1), axis=1)
-    return jnp.all(last - anchors < win)
+def _round_up(x: int, q: int) -> int:
+    return -(-x // q) * q
 
 
-def _combine_window(window, local, combine: str):
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PushBinPlan:
+    """Phase-1 output: the per-graph bin layout the reduce phase tiles.
+
+    ``src/dst/w`` are ``[nb, cap]`` — row ``b`` holds the (dst-sorted)
+    edges whose destination falls in bin ``b``, padded with the
+    sentinel ``n`` / weight 0. ``ptr`` is ``int32[nb, bin_n+1]``: the
+    within-bin CSR row pointer (destination ``b·bin_n + j`` owns slots
+    ``ptr[b, j]:ptr[b, j+1]`` of row ``b``; ``ptr[b, bin_n]`` is the
+    bin's true edge count, so everything at or beyond it is padding).
+    ``max_run`` bounds the longest single-destination run — it sizes
+    the segmented scan's static pass count.
+    """
+    src: jax.Array   # int32[nb, cap]
+    dst: jax.Array   # int32[nb, cap]
+    w: jax.Array     # [nb, cap]
+    ptr: jax.Array   # int32[nb, bin_n+1]
+    bin_n: int = dataclasses.field(metadata=dict(static=True))
+    cap: int = dataclasses.field(metadata=dict(static=True))
+    nb: int = dataclasses.field(metadata=dict(static=True))
+    max_run: int = dataclasses.field(metadata=dict(static=True))
+
+
+def build_push_plan(src, dst, w, n: int, bin_n: int,
+                    align: int = 128) -> PushBinPlan:
+    """Host-side (concrete-graph) binning pass.
+
+    Promotes :func:`~repro.graphs.partition.pa_regroup_by_dst` into the
+    kernel path: the destination-owner regroup that packs the
+    distributed pull exchange is exactly the phase-1 bin layout, with
+    ``shard_size = bin_n`` and the row capacity aligned to the edge
+    block so the reduce grid divides evenly. The within-bin order is
+    the dst-sorted input order (the regroup is stable), which the scan
+    strategy's run pointers require.
+    """
+    from ..graphs.partition import (Partition, PartitionedEdges,
+                                    pa_regroup_by_dst)
+    nb = max(1, _round_up(n, bin_n) // bin_n)
+    part = Partition(n=n, num_parts=nb, shard_size=bin_n,
+                     n_padded=nb * bin_n)
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    w = np.asarray(w)
+    m = int(src.shape[0])
+    flat = PartitionedEdges(
+        src=jnp.asarray(src.reshape(1, -1), jnp.int32)
+        if m else jnp.full((1, 1), n, jnp.int32),
+        dst=jnp.asarray(dst.reshape(1, -1), jnp.int32)
+        if m else jnp.full((1, 1), n, jnp.int32),
+        w=jnp.asarray(w.reshape(1, -1), jnp.float32)
+        if m else jnp.zeros((1, 1), jnp.float32),
+        valid=jnp.asarray(np.ones((1, max(m, 1)), bool)
+                          if m else np.zeros((1, 1), bool)),
+        count=jnp.asarray([m], jnp.int32), cap=max(m, 1), num_parts=1)
+    binned = pa_regroup_by_dst(part, flat, n, align=align)
+    bd = np.asarray(binned.dst)
+    # per-bin CSR over the bin-relative destinations (rows are sorted:
+    # the regroup preserves the dst-sorted input order)
+    rel = np.where(bd < n, bd - np.arange(nb)[:, None] * bin_n, bin_n)
+    ptr = np.stack([np.searchsorted(rel[b], np.arange(bin_n + 1))
+                    for b in range(nb)]).astype(np.int32)
+    runs = np.diff(ptr, axis=1)
+    max_run = int(runs.max()) if runs.size else 1
+    return PushBinPlan(src=binned.src, dst=binned.dst, w=binned.w,
+                       ptr=jnp.asarray(ptr), bin_n=int(bin_n),
+                       cap=int(binned.cap), nb=int(nb),
+                       max_run=max(max_run, 1))
+
+
+def default_bin_cap(n: int, m: int, d_ell: int, bin_n: int,
+                    align: int) -> int:
+    """Static bin capacity for the traced binning pass: twice the mean
+    bin load with at least one full max-degree row, never more than the
+    whole edge list. Real skew on the benchmark families is ~1.2–1.5×
+    the mean, so the 2× slack fits; callers guard the residual risk
+    with ``lax.cond`` on the plan's ``fits`` bit."""
+    nb = max(1, _round_up(n, bin_n) // bin_n)
+    mean = -(-max(m, 1) // nb)
+    return _round_up(min(max(m, 1), max(d_ell, 2 * mean)),
+                     max(align, 1))
+
+
+def bin_plan_traced(src, dst, w, in_ptr, n: int, bin_n: int, cap: int,
+                    align: int = 128, max_run: int | None = None
+                    ) -> tuple[PushBinPlan, jax.Array]:
+    """In-trace binning pass (the engine jits the graph, so the host
+    regroup is unavailable). dst-sorted edges make every bin a
+    contiguous slice of the edge list: the layout is one gather at
+    ``in_ptr``-derived offsets — O(nb·cap) reads, no scatter. Returns
+    ``(plan, fits)`` where ``fits`` is the runtime guard (true iff no
+    bin overflows the static ``cap``); callers branch to the jnp
+    segment fallback when it fails. ``max_run`` must be a static upper
+    bound on any destination's in-degree (the graph's ``d_ell``
+    qualifies); it defaults to ``cap``."""
+    m = src.shape[0]
+    nb = max(1, _round_up(n, bin_n) // bin_n)
+    cap = _round_up(max(cap, 1), max(align, 1))
+    if m == 0:     # edgeless graph: all-sentinel layout, trivially fits
+        return PushBinPlan(
+            src=jnp.full((nb, cap), n, jnp.int32),
+            dst=jnp.full((nb, cap), n, jnp.int32),
+            w=jnp.zeros((nb, cap), w.dtype),
+            ptr=jnp.zeros((nb, bin_n + 1), jnp.int32),
+            bin_n=int(bin_n), cap=int(cap), nb=int(nb),
+            max_run=1), jnp.bool_(True)
+    starts = jnp.minimum(jnp.arange(nb + 1, dtype=jnp.int32) * bin_n, n)
+    off = in_ptr[starts]                             # [nb+1]
+    counts = off[1:] - off[:-1]
+    fits = jnp.max(counts) <= cap
+    pos = off[:-1, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    in_bin = jnp.arange(cap, dtype=jnp.int32)[None, :] < counts[:, None]
+    pos = jnp.where(in_bin, pos, m)                  # padding -> fill
+    bsrc = jnp.take(src, pos, mode="fill", fill_value=n)
+    bdst = jnp.take(dst, pos, mode="fill", fill_value=n)
+    bw = jnp.take(w, pos, mode="fill", fill_value=0)
+    ridx = jnp.minimum(
+        starts[:-1, None] + jnp.arange(bin_n + 1, dtype=jnp.int32)[None],
+        n)
+    ptr = jnp.minimum(in_ptr[ridx] - off[:-1, None], cap).astype(
+        jnp.int32)
+    return PushBinPlan(src=bsrc, dst=bdst, w=bw, ptr=ptr,
+                       bin_n=int(bin_n), cap=int(cap), nb=int(nb),
+                       max_run=int(cap if max_run is None
+                                   else min(max_run, cap))), fits
+
+
+def _acc_combine(acc, local, combine: str):
     if combine == "sum":
-        return window + local
+        return acc + local
     if combine == "max":
-        return jnp.maximum(window, local)
-    return jnp.minimum(window, local)
+        return jnp.maximum(acc, local)
+    return jnp.minimum(acc, local)
 
 
-def _kernel(x_ref, active_ref, src_ref, dst_ref, w_ref, dstblk_ref,
-            acc_ref, *, n: int, combine: str, msg: str, win: int):
-    e = pl.program_id(0)
+def _kernel(x_ref, active_ref, src_ref, dst_ref, w_ref, ptr_ref, acc_ref,
+            *, n: int, bin_n: int, combine: str, msg: str, block_e: int,
+            passes: int, strategy: str):
+    b = pl.program_id(0)
+    e = pl.program_id(1)
     ident = combine_identity(combine, acc_ref.dtype)
 
     @pl.when(e == 0)
     def _init():
         acc_ref[...] = jnp.full_like(acc_ref, ident)
 
-    src = src_ref[...]
-    dst = dst_ref[...]
-    w = w_ref[...]
-    # sentinel-padded edges carry n on both endpoints: mask on both
-    valid = (src < n) & (dst < n)
+    src = src_ref[0]
+    dst = dst_ref[0]
+    w = w_ref[0]
+    # sentinel-padded slots carry n on both endpoints: mask everything
+    valid = dst < n
     safe_src = jnp.where(valid, src, 0)
-    x = x_ref[safe_src]                    # [block_e(, B)]
+    x = x_ref[safe_src]                       # [block_e(, B)]
     act = active_ref[safe_src] > 0
     if msg == "copy":
         m_val = x
     else:
         wb = w[..., None] if x.ndim == 2 else w
         m_val = x * wb if msg == "mul" else x + wb
-    base = dstblk_ref[0]
-    rel = dst - base                       # in [0, win) when it fits
-    ok = valid & act & (rel >= 0) & (rel < win)
-    rel = jnp.clip(rel, 0, win - 1)
+    ok = valid & act
     if m_val.ndim == 2:
         ok = ok[:, None]
-    m_val = jnp.where(ok, m_val, ident)
-    if combine == "sum" and jnp.issubdtype(acc_ref.dtype, jnp.floating):
-        # CRCW-CB combine inside the tile: one-hot matmul (MXU on TPU)
-        onehot = (rel[None, :] == jnp.arange(win)[:, None]).astype(
-            acc_ref.dtype)
-        local = onehot @ m_val             # [win(, B)]
-    else:
-        # masked window reduce (max/min and integer sums)
-        sel = rel[None, :] == jnp.arange(win)[:, None]   # [win, block_e]
-        if m_val.ndim == 2:
-            sel = sel[..., None]
-        expanded = jnp.where(sel, m_val[None, ...], ident)
-        if combine == "sum":
-            # cast back: segment_sum (the primitive this must match)
-            # accumulates in the message dtype, unlike jnp.sum
-            local = expanded.sum(axis=1).astype(acc_ref.dtype)
-        elif combine == "max":
-            local = expanded.max(axis=1)
+    m_val = jnp.where(ok, m_val.astype(acc_ref.dtype), ident)
+    # bin-relative destination; padding gets the one-past row bin_n so
+    # it can never merge into (or one-hot onto) a real destination's run
+    rel = jnp.where(valid, dst - b * bin_n, bin_n)
+
+    if strategy == "mxu":
+        in_bin = rel < bin_n
+        relc = jnp.clip(rel, 0, bin_n - 1)
+        if combine == "sum" and jnp.issubdtype(acc_ref.dtype,
+                                               jnp.floating):
+            # CRCW-CB combine on the MXU: one-hot matmul
+            onehot = ((relc[None, :] == jnp.arange(bin_n)[:, None])
+                      & in_bin[None, :]).astype(acc_ref.dtype)
+            local = onehot @ m_val            # [bin_n(, B)]
         else:
-            local = expanded.min(axis=1)
-    if acc_ref.ndim == 2:
-        zero = jnp.zeros((), base.dtype)
-        window = jax.lax.dynamic_slice(
-            acc_ref[...], (base, zero), (win, acc_ref.shape[1]))
-        acc_ref[...] = jax.lax.dynamic_update_slice(
-            acc_ref[...], _combine_window(window, local, combine),
-            (base, zero))
+            sel = ((relc[None, :] == jnp.arange(bin_n)[:, None])
+                   & in_bin[None, :])          # [bin_n, block_e]
+            if m_val.ndim == 2:
+                sel = sel[..., None]
+            expanded = jnp.where(sel, m_val[None, ...], ident)
+            if combine == "sum":
+                # segment_sum accumulates in the message dtype
+                local = expanded.sum(axis=1).astype(acc_ref.dtype)
+            elif combine == "max":
+                local = expanded.max(axis=1)
+            else:
+                local = expanded.min(axis=1)
     else:
-        window = jax.lax.dynamic_slice(acc_ref[...], (base,), (win,))
-        acc_ref[...] = jax.lax.dynamic_update_slice(
-            acc_ref[...], _combine_window(window, local, combine),
-            (base,))
+        # "scan": run boundaries from the plan's per-bin row pointer,
+        # rebased to this edge chunk
+        ptr = ptr_ref[0]
+        base = e * block_e
+        lo = jnp.clip(ptr[:-1] - base, 0, block_e)   # [bin_n]
+        hi = jnp.clip(ptr[1:] - base, 0, block_e)
+        if combine == "sum":
+            # prefix-sum difference: O(block_e + bin_n). Floats carry
+            # the prefix in f64 so cs[hi] - cs[lo] never cancels below
+            # the parity tolerance; ints are exact under wraparound.
+            acc_dt = (jnp.float64
+                      if jnp.issubdtype(acc_ref.dtype, jnp.floating)
+                      else acc_ref.dtype)
+            cs = jnp.cumsum(m_val.astype(acc_dt), axis=0)
+            cs = jnp.concatenate(
+                [jnp.zeros((1,) + cs.shape[1:], cs.dtype), cs], axis=0)
+            local = (cs[hi] - cs[lo]).astype(acc_ref.dtype)
+        else:
+            # segmented Hillis-Steele min/max scan over dst runs:
+            # passes = ceil(log2(longest run within a chunk))
+            y = m_val
+            for s in (1 << k for k in range(passes)):
+                if s >= block_e:
+                    break
+                same = rel[s:] == rel[:-s]
+                if y.ndim == 2:
+                    same = same[:, None]
+                red = (jnp.minimum(y[s:], y[:-s]) if combine == "min"
+                       else jnp.maximum(y[s:], y[:-s]))
+                y = jnp.concatenate([y[:s], jnp.where(same, red, y[s:])],
+                                    axis=0)
+            last = jnp.clip(hi - 1, 0, block_e - 1)
+            got = y[last]                     # run tails, one per dst
+            nonempty = hi > lo
+            if got.ndim == 2:
+                nonempty = nonempty[:, None]
+            local = jnp.where(nonempty, got, ident)
+    acc_ref[...] = _acc_combine(acc_ref[...], local, combine)
+
+
+def _scan_passes(max_run: int, block_e: int) -> int:
+    span = max(2, min(max_run, block_e))
+    return max(1, math.ceil(math.log2(span)))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n", "combine", "msg", "block_e",
-                                    "block_n", "interpret"))
+                                    "block_n", "interpret", "strategy"))
 def coo_push_pallas(x: jax.Array, active: jax.Array, src: jax.Array,
                     dst: jax.Array, w: jax.Array, n: int,
                     combine: str = "sum", msg: str = "mul",
                     block_e: int = 512, block_n: int = 256,
-                    interpret: bool | None = None) -> jax.Array:
-    """Push-combine over dst-sorted COO edges.
+                    interpret: bool | None = None,
+                    plan: PushBinPlan | None = None,
+                    strategy: str = "scan") -> jax.Array:
+    """Two-phase push-combine over dst-sorted COO edges.
 
     x: [n] or [n, B] source payloads; active: bool[n] frontier;
     src/dst: i32[m] (sorted by dst); w: f32[m]. Returns combined
     updates per destination ([n] or [n, B]); destinations with no
     active in-edge hold the combine identity.
 
-    Precondition: :func:`push_window_fits` — callers with graphs that
-    can violate it guard with ``lax.cond`` (see PallasBackend.push).
+    ``block_n`` is the destination-bin width, ``block_e`` the streamed
+    edge-chunk size, ``strategy`` the phase-2 reduce ("scan" |
+    "mxu") — all three are the autotuner's search axes. ``plan`` is
+    the phase-1 bin layout; pass one built by :func:`build_push_plan`
+    (the PallasBackend caches it per graph) to skip re-binning. The
+    plan-free path bins in-trace with ``cap = m`` — always correct,
+    sized for tests and small graphs, not the hot path.
     """
+    if strategy not in PUSH_STRATEGIES:
+        raise ValueError(f"strategy={strategy!r} not in "
+                         f"{PUSH_STRATEGIES}")
     if interpret is None:
         interpret = default_interpret()
     m = src.shape[0]
     out_dtype = (x.dtype if msg == "copy"
                  else jnp.result_type(x.dtype, w.dtype))
     if m == 0:
-        # edgeless graph: grid=(0,) would never run the init step (and
-        # pallas rejects empty edge operands) — no edges means every
-        # destination holds the combine identity, like segment ops
+        # edgeless graph: no edges means every destination holds the
+        # combine identity, like the segment primitives
         shape = (n,) if x.ndim == 1 else (n, x.shape[1])
         return jnp.full(shape, combine_identity(combine, out_dtype),
                         out_dtype)
-    win = block_e + block_n
-    m_pad = -(-m // block_e) * block_e
-    srcp = jnp.pad(src, (0, m_pad - m), constant_values=n)
-    # sentinel >= n on the destination too — padding must never alias a
-    # real vertex (n - 1 previously; masked only via src, fragile)
-    dstp = jnp.pad(dst, (0, m_pad - m), constant_values=n)
-    wp = jnp.pad(w, (0, m_pad - m))
-    n_pad = -(-n // block_n) * block_n + win
-    first_dst = dstp.reshape(-1, block_e)[:, 0]
-    anchors = jnp.minimum((first_dst // block_n) * block_n,
-                          n_pad - win).astype(jnp.int32)
-    grid = (m_pad // block_e,)
-    batched = x.ndim == 2
-    if batched:
-        b = x.shape[1]
-        acc_spec = pl.BlockSpec((n_pad, b), lambda e: (0, 0))
-        acc_shape = jax.ShapeDtypeStruct((n_pad, b), out_dtype)
-        x_spec = pl.BlockSpec(x.shape, lambda e: (0, 0))
+    if plan is None:
+        in_ptr = jnp.searchsorted(dst, jnp.arange(n + 1, dtype=dst.dtype)
+                                  ).astype(jnp.int32)
+        plan, _ = bin_plan_traced(src, dst, w, in_ptr, n, block_n,
+                                  cap=m, align=block_e)
+    bin_n, cap, nb = plan.bin_n, plan.cap, plan.nb
+    block_e = min(block_e, cap)
+    if cap % block_e:
+        raise ValueError(
+            f"plan cap={cap} not a multiple of block_e={block_e}: "
+            "build the plan with align=block_e")
+    passes = _scan_passes(plan.max_run, block_e)
+    grid = (nb, cap // block_e)
+    n_pad = nb * bin_n
+    if x.ndim == 2:
+        b_width = x.shape[1]
+        acc_spec = pl.BlockSpec((bin_n, b_width), lambda b, e: (b, 0))
+        acc_shape = jax.ShapeDtypeStruct((n_pad, b_width), out_dtype)
+        x_spec = pl.BlockSpec(x.shape, lambda b, e: (0, 0))
     else:
-        acc_spec = pl.BlockSpec((n_pad,), lambda e: (0,))
+        acc_spec = pl.BlockSpec((bin_n,), lambda b, e: (b,))
         acc_shape = jax.ShapeDtypeStruct((n_pad,), out_dtype)
-        x_spec = pl.BlockSpec(x.shape, lambda e: (0,))
+        x_spec = pl.BlockSpec(x.shape, lambda b, e: (0,))
     acc = pl.pallas_call(
-        functools.partial(_kernel, n=n, combine=combine, msg=msg,
-                          win=win),
+        functools.partial(_kernel, n=n, bin_n=bin_n, combine=combine,
+                          msg=msg, block_e=block_e, passes=passes,
+                          strategy=strategy),
         grid=grid,
         in_specs=[
             x_spec,
-            pl.BlockSpec(active.shape, lambda e: (0,)),
-            pl.BlockSpec((block_e,), lambda e: (e,)),
-            pl.BlockSpec((block_e,), lambda e: (e,)),
-            pl.BlockSpec((block_e,), lambda e: (e,)),
-            pl.BlockSpec((1,), lambda e: (e,)),
+            pl.BlockSpec(active.shape, lambda b, e: (0,)),
+            pl.BlockSpec((1, block_e), lambda b, e: (b, e)),
+            pl.BlockSpec((1, block_e), lambda b, e: (b, e)),
+            pl.BlockSpec((1, block_e), lambda b, e: (b, e)),
+            pl.BlockSpec((1, bin_n + 1), lambda b, e: (b, 0)),
         ],
         out_specs=acc_spec,
         out_shape=acc_shape,
         interpret=interpret,
-    )(x, active.astype(jnp.int32), srcp, dstp, wp, anchors)
+    )(x, active.astype(jnp.int32), plan.src, plan.dst, plan.w, plan.ptr)
     return acc[:n]

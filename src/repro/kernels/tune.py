@@ -1,58 +1,160 @@
-"""Block-size autotuner for the push/pull Pallas kernels.
+"""Autotuner for the push/pull Pallas kernels: real search, disk cache.
 
-The right tile shape depends on the execution mode and the graph shape:
-compiled TPU kernels want VMEM-sized tiles; the interpreter (CPU CI)
-amortizes per-grid-step overhead with the largest block that fits. A
-static choice is wrong for one of the two, so the ``PallasBackend``
-probes a small candidate ladder **once per (graph shape, payload
-shape)** and caches the winner on the backend instance.
+The right configuration depends on the execution mode and the shape:
+compiled TPU kernels want VMEM-sized tiles and the MXU reduce; the
+interpreter (CPU CI) wants the largest block that amortizes per-step
+overhead and the bandwidth-bound scan reduce. A static choice is wrong
+for one of the two, so the ``PallasBackend`` probes a candidate grid
+once per (graph shape, payload shape, platform) and caches the winner
+twice over:
 
-Probing is eager and synthetic: candidates are timed on random data of
-the *shape* being solved (gather/scatter cost is shape-dominated, not
-value-dominated), so the tuner can run while an outer ``jit`` trace is
-being built — which is exactly when the backend discovers a new shape.
-Each probe is one warmup (compile) + one timed call; the ladder is kept
-short (≤ 4 rungs) so tuning stays a per-shape one-off.
+  * **on disk** under ``~/.cache/repro/tune.json`` (override with
+    ``$REPRO_CACHE_DIR``), keyed by platform × kernel × shape × dtype ×
+    combine × msg, so repeated runs (benchmarks, CI, services) skip the
+    probe entirely;
+  * **in memory** (module-level dict), which also serves as the
+    fallback when the cache directory is unwritable.
+
+Search space — pull: ``block_n`` rungs; push: the (block_e, block_n
+= bin width, strategy) grid over both phase-2 reduce strategies
+(``"scan"`` | ``"mxu"``). Probes time each candidate on synthetic data
+of the shape being solved (one warmup + one timed call) with **early
+pruning**: candidates are grouped by (strategy, bin width), and a
+group whose first rung lands ≥ ``_PRUNE``× behind the incumbent is
+abandoned — the rest of its rungs only move block_e, which never
+recovers that much.
+
+Probing is eager and runs in a single worker thread so it escapes any
+ambient jit trace (the backend discovers new shapes mid-trace).
 """
 
 from __future__ import annotations
 
+import json
+import os
+import threading
 import time
 
 import jax
 import jax.numpy as jnp
 
-from .coo_push import coo_push_pallas
+from .coo_push import build_push_plan, coo_push_pallas
 from .ell_spmv import default_interpret, ell_spmv_pallas
 
-__all__ = ["pull_candidates", "push_candidates", "tune_pull", "tune_push"]
+__all__ = ["pull_candidates", "push_candidates", "tune_pull",
+           "tune_push", "cache_dir", "clear_memory_cache"]
 
-_LADDER = (256, 1024, 4096)
+_PULL_LADDER = (128, 256, 512, 1024, 2048, 4096)
+_EDGE_LADDER = (1024, 4096, 16384)
+_BIN_LADDER = (128, 256, 1024)
+_PRUNE = 2.0
 
 
 def _round_up(x: int, q: int) -> int:
     return -(-x // q) * q
 
 
-def pull_candidates(n: int) -> tuple[int, ...]:
-    """block_n ladder for the ELL pull kernel: fixed rungs below n plus
-    the whole (padded) vertex range (grid of 1 — what the interpreter
-    prefers; real TPUs pick a VMEM-sized rung)."""
+def pull_candidates(n: int, width: int | None = None) -> tuple[int, ...]:
+    """``block_n`` rungs for the ELL pull kernel: the ladder below n
+    plus the whole (padded) vertex range. Single-column payloads
+    (``width == 1``) drop the full-row rung whenever sub-n rungs
+    exist — the b1 gather is too thin to amortize a grid of one, and
+    the full-row rung measurably loses to jnp there (the
+    kernel_pull_*_b1 regression)."""
     n_pad = _round_up(max(n, 8), 8)
-    cands = [c for c in _LADDER if c < n_pad]
-    cands.append(n_pad)
+    cands = [c for c in _PULL_LADDER if c < n_pad]
+    if not (width == 1 and cands):
+        cands.append(n_pad)
     return tuple(cands)
 
 
-def push_candidates(n: int, m: int) -> tuple[int, ...]:
-    """(block_e, block_n) ladder for the COO push kernel. Every rung
-    keeps ``block_e + block_n >= n`` so the window precondition holds
-    statically and no rung silently drops edges."""
+def push_candidates(n: int, m: int) -> tuple[tuple[int, int, str], ...]:
+    """(block_e, block_n, strategy) grid for the two-phase push kernel.
+
+    ``block_n`` is the destination-bin width (phase 1), ``block_e`` the
+    streamed edge-chunk size (phase 2), ``strategy`` the reduce. Scan
+    rungs cover the full bin ladder; MXU rungs are limited to bins the
+    window/one-hot expansion can afford (its work is bin_n × cap).
+    Ordered scan-first so pruning meets the incumbent early.
+    """
+    n_pad = _round_up(max(n, 8), 8)
     m_pad = _round_up(max(m, 8), 8)
-    n_pad = _round_up(max(n, 8), 8)
-    cands = [(c, n_pad) for c in _LADDER if c < m_pad]
-    cands.append((m_pad, n_pad))
+    bins = sorted({min(b, n_pad) for b in _BIN_LADDER} | {n_pad})
+    edges = sorted({min(e, m_pad) for e in _EDGE_LADDER} | {m_pad})
+    cands = [(e, b, "scan") for b in bins for e in edges]
+    cands += [(e, b, "mxu") for b in bins if b <= 256 for e in edges]
     return tuple(cands)
+
+
+# -- persistent cache ---------------------------------------------------
+_MEM_CACHE: dict[str, tuple] = {}
+_DISK: dict | None = None
+_LOCK = threading.Lock()
+
+
+def cache_dir() -> str:
+    return os.environ.get(
+        "REPRO_CACHE_DIR",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro"))
+
+
+def _cache_path() -> str:
+    return os.path.join(cache_dir(), "tune.json")
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-memory tier (tests re-point $REPRO_CACHE_DIR)."""
+    global _DISK
+    with _LOCK:
+        _MEM_CACHE.clear()
+        _DISK = None
+
+
+def _platform(interpret: bool) -> str:
+    return "interpret" if interpret else jax.default_backend()
+
+
+def _cache_key(kernel: str, interpret: bool, shape: tuple, width: int,
+               dtype, combine: str, msg: str) -> str:
+    dims = "x".join(str(s) for s in shape)
+    return (f"{_platform(interpret)}|{kernel}|{dims}|w{width}|"
+            f"{jnp.dtype(dtype).name}|{combine}|{msg}")
+
+
+def _cache_get(key: str):
+    global _DISK
+    with _LOCK:
+        if key in _MEM_CACHE:
+            return _MEM_CACHE[key]
+        if _DISK is None:
+            try:
+                with open(_cache_path()) as f:
+                    _DISK = json.load(f)
+            except (OSError, ValueError):
+                _DISK = {}
+        hit = _DISK.get(key)
+        if hit is not None:
+            hit = tuple(hit) if isinstance(hit, list) else hit
+            _MEM_CACHE[key] = hit
+        return hit
+
+
+def _cache_put(key: str, value) -> None:
+    global _DISK
+    with _LOCK:
+        _MEM_CACHE[key] = value
+        if _DISK is None:
+            _DISK = {}
+        _DISK[key] = list(value) if isinstance(value, tuple) else value
+        path = _cache_path()
+        try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = f"{path}.{os.getpid()}.tmp"
+            with open(tmp, "w") as f:
+                json.dump(_DISK, f, indent=0, sort_keys=True)
+            os.replace(tmp, path)
+        except OSError:
+            pass  # unwritable home: the in-memory tier still serves
 
 
 def _time(fn, *args) -> float:
@@ -81,16 +183,22 @@ def _escaped(fn):
 
 def tune_pull(n: int, d_ell: int, width: int, dtype, combine: str,
               msg: str, interpret: bool | None = None) -> int:
-    """Best ``block_n`` for an ELL pull of this shape (synthetic probe)."""
+    """Best ``block_n`` for an ELL pull of this shape (synthetic probe,
+    shape-and-platform-keyed, persisted)."""
     if interpret is None:
         interpret = default_interpret()
-    cands = pull_candidates(n)
+    cands = pull_candidates(n, width)
     if len(cands) == 1:                   # nothing to probe
         return cands[0]
+    key = _cache_key("pull", interpret, (n, d_ell), width, dtype,
+                     combine, msg)
+    hit = _cache_get(key)
+    if hit is not None:
+        return int(hit)
 
     def probe():
-        key = jax.random.PRNGKey(0)
-        idx = jax.random.randint(key, (n, d_ell), 0, n + 1, jnp.int32)
+        key_ = jax.random.PRNGKey(0)
+        idx = jax.random.randint(key_, (n, d_ell), 0, n + 1, jnp.int32)
         w = jnp.ones((n, d_ell), jnp.float32)
         shape = (n + 1,) if width == 1 else (n + 1, width)
         x = jnp.ones(shape, dtype)
@@ -103,34 +211,64 @@ def tune_pull(n: int, d_ell: int, width: int, dtype, combine: str,
                 best, best_t = block_n, t
         return best
 
-    return _escaped(probe)
+    best = _escaped(probe)
+    _cache_put(key, best)
+    return best
 
 
 def tune_push(n: int, m: int, width: int, dtype, combine: str,
-              msg: str, interpret: bool | None = None) -> tuple[int, int]:
-    """Best ``(block_e, block_n)`` for a COO push of this shape."""
+              msg: str, interpret: bool | None = None
+              ) -> tuple[int, int, str]:
+    """Best ``(block_e, block_n, strategy)`` for a two-phase push of
+    this shape: grid search with early pruning, shape-and-platform-
+    keyed, persisted to the on-disk cache."""
     if interpret is None:
         interpret = default_interpret()
     cands = push_candidates(n, m)
     if len(cands) == 1:
         return cands[0]
+    key = _cache_key("push", interpret, (n, m), width, dtype, combine,
+                     msg)
+    hit = _cache_get(key)
+    if hit is not None:
+        be, bn, strat = hit
+        return int(be), int(bn), str(strat)
 
     def probe():
-        key = jax.random.PRNGKey(1)
-        dst = jnp.sort(jax.random.randint(key, (m,), 0, n, jnp.int32))
-        src = jax.random.randint(jax.random.fold_in(key, 1), (m,), 0, n,
-                                 jnp.int32)
+        key_ = jax.random.PRNGKey(1)
+        dst = jnp.sort(jax.random.randint(key_, (m,), 0, n, jnp.int32))
+        src = jax.random.randint(jax.random.fold_in(key_, 1), (m,), 0,
+                                 n, jnp.int32)
         w = jnp.ones((m,), jnp.float32)
         shape = (n,) if width == 1 else (n, width)
         x = jnp.ones(shape, dtype)
         active = jnp.ones((n,), bool)
+        plans: dict[tuple[int, int], object] = {}
         best, best_t = None, None
-        for block_e, block_n in cands:
-            t = _time(lambda be=block_e, bn=block_n: coo_push_pallas(
+        pruned: set[tuple[str, int]] = set()
+        group_seen: set[tuple[str, int]] = set()
+        for block_e, block_n, strategy in cands:
+            group = (strategy, block_n)
+            if group in pruned:
+                continue
+            pkey = (block_n, block_e)
+            if pkey not in plans:
+                plans[pkey] = build_push_plan(src, dst, w, n, block_n,
+                                              align=block_e)
+            t = _time(lambda be=block_e, bn=block_n, st=strategy,
+                      p=plans[pkey]: coo_push_pallas(
                 x, active, src, dst, w, n, combine=combine, msg=msg,
-                block_e=be, block_n=bn, interpret=interpret))
+                block_e=be, block_n=bn, interpret=interpret, plan=p,
+                strategy=st))
+            first = group not in group_seen
+            group_seen.add(group)
             if best_t is None or t < best_t:
-                best, best_t = (block_e, block_n), t
+                best, best_t = (block_e, block_n, strategy), t
+            elif first and t > _PRUNE * best_t:
+                pruned.add(group)    # the rest of the group only moves
+                continue             # block_e; it won't close a 2x gap
         return best
 
-    return _escaped(probe)
+    best = _escaped(probe)
+    _cache_put(key, best)
+    return best

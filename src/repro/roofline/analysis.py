@@ -15,7 +15,7 @@ from __future__ import annotations
 import re
 
 __all__ = ["HW", "collective_bytes_from_hlo", "roofline_report",
-           "model_flops"]
+           "model_flops", "kernel_roofline"]
 
 HW = {
     "peak_flops": 197e12,     # bf16 per chip
@@ -83,6 +83,41 @@ def model_flops(kind: str, **kw) -> float:
     tokens = kw["tokens"]
     mult = 6.0 if kind == "train" else 2.0
     return mult * n_active * tokens
+
+
+def kernel_roofline(direction: str, *, n: int, d_ell: int = 0,
+                    batch: int = 1, itemsize: int = 4, nb: int = 1,
+                    cap: int = 0, bin_n: int = 0,
+                    measured_us: float = 0.0) -> dict:
+    """Analytic roofline bound for one graph-kernel launch.
+
+    Counts the bytes the kernel's tiling *must* move (graph structure +
+    payload gathers + destination writes, assuming perfect reuse of
+    VMEM-resident blocks) and the combine FLOPs, prices them against
+    the HW terms, and reports ``pct_roofline = bound_us /
+    measured_us`` — the fraction of the hardware bound actually
+    achieved. ``pull`` is the ELL gather (``n × d_ell`` rectangular
+    layout); ``push`` is the two-phase bin reduce (``nb × cap`` padded
+    edge bins + per-bin run pointers + ``nb × bin_n`` accumulators).
+    The ratio is clamped to the schema's 1.5 ceiling — anything past
+    ~1.0 means timing noise, not physics.
+    """
+    if direction == "pull":
+        bytes_moved = (n * d_ell * (4 + 4)              # ELL idx + w
+                       + n * d_ell * batch * itemsize   # payload gather
+                       + n * batch * itemsize)          # dst writes
+        flops = n * d_ell * batch
+    else:
+        bytes_moved = (nb * cap * (4 + 4 + 4)           # src / dst / w
+                       + nb * cap * batch * itemsize    # payload gather
+                       + nb * (bin_n + 1) * 4           # run pointers
+                       + nb * bin_n * batch * itemsize)  # accumulators
+        flops = nb * cap * batch
+    bound_us = 1e6 * max(flops / HW["peak_flops"],
+                         bytes_moved / HW["hbm_bw"])
+    return {"bytes_moved": int(bytes_moved), "flops": int(flops),
+            "bound_us": bound_us,
+            "pct_roofline": min(bound_us / max(measured_us, 1e-9), 1.5)}
 
 
 def roofline_report(result: dict, loop_factor: int = 1) -> dict:

@@ -34,8 +34,9 @@ def test_kernels_page_covers_dispatch_surface():
     fallback axes, and the autotuner are named."""
     page = (DOCS / "kernels.md").read_text()
     for needle in ("ell_spmv_pallas", "coo_push_pallas", "PallasBackend",
-                   "push_window_fits", "classify_msg_fn", "tune.py",
-                   "fallback"):
+                   "build_push_plan", "bin_plan_traced",
+                   "pa_regroup_by_dst", "classify_msg_fn", "tune.py",
+                   "fallback", "pct_roofline"):
         assert needle in page, f"docs/kernels.md does not mention {needle}"
     # the architecture backend table links here
     assert "kernels.md" in (DOCS / "architecture.md").read_text()
@@ -119,7 +120,8 @@ def _sample_report():
                  "n": 128, "m": 982, "d_ell": 72, "batch": 8,
                  "dtype": "float32", "msg": "copy", "block_n": 128,
                  "us_jnp": 515.4, "us_pallas": 419.7, "speedup": 1.23,
-                 "match": True}},
+                 "match": True, "pct_roofline": 0.00041,
+                 "bytes_moved": 330240, "flops": 73728}},
             {"name": "scaling_bfs_push_P4", "us_per_call": 150.0,
              "derived": {
                  "algorithm": "bfs", "graph": "orc", "n": 128, "m": 982,
@@ -150,12 +152,19 @@ def test_schema_rejects_malformed_reports():
     del bad_kernel["rows"][2]["derived"]["us_pallas"]
     bad_kernel_dir = _sample_report()
     bad_kernel_dir["rows"][2]["derived"]["direction"] = "sideways"
+    bad_roof_zero = _sample_report()
+    bad_roof_zero["rows"][2]["derived"]["pct_roofline"] = 0.0
+    bad_roof_high = _sample_report()
+    bad_roof_high["rows"][2]["derived"]["pct_roofline"] = 2.0
+    bad_roof_missing = _sample_report()
+    del bad_roof_missing["rows"][2]["derived"]["pct_roofline"]
     bad_scaling = _sample_report()
     del bad_scaling["rows"][3]["derived"]["collective_bytes"]
     bad_scaling_comp = _sample_report()
     bad_scaling_comp["rows"][3]["derived"]["compression"] = "gzip"
     for bad in (bad_missing_rows, bad_row, bad_cell, bad_policy,
-                bad_kernel, bad_kernel_dir, bad_scaling,
+                bad_kernel, bad_kernel_dir, bad_roof_zero,
+                bad_roof_high, bad_roof_missing, bad_scaling,
                 bad_scaling_comp):
         with pytest.raises(Exception):
             validate_report(bad)

@@ -9,6 +9,7 @@ from hypothesis import given, strategies as st
 from repro.graphs import (build_graph, erdos_renyi, kronecker, ring,
                           road_grid, star, standin, partition_1d, pa_split,
                           sample_blocks)
+from repro.graphs.partition import PartitionedEdges, pa_regroup_by_dst
 
 
 def test_build_graph_layout_consistency(small_graph):
@@ -111,3 +112,89 @@ def test_partition_covers(n, p):
     assert owners.min() >= 0 and owners.max() <= p - 1
     # contiguous blocks
     assert np.all(np.diff(owners) >= 0)
+
+
+# -- pa_regroup_by_dst properties ---------------------------------------
+# The destination-owner regroup is both the distributed pull layout and
+# the push kernel's phase-1 binning pass (kernels/coo_push.py), so its
+# invariants are load-bearing in two subsystems.
+def _flat_edges(src, dst, w, n):
+    """Wrap a flat edge list as a single-row PartitionedEdges."""
+    m = len(src)
+    if m == 0:
+        return PartitionedEdges(
+            src=jnp.full((1, 1), n, jnp.int32),
+            dst=jnp.full((1, 1), n, jnp.int32),
+            w=jnp.zeros((1, 1), jnp.float32),
+            valid=jnp.zeros((1, 1), bool),
+            count=jnp.zeros((1,), jnp.int32), cap=1, num_parts=1)
+    return PartitionedEdges(
+        src=jnp.asarray(src, jnp.int32).reshape(1, -1),
+        dst=jnp.asarray(dst, jnp.int32).reshape(1, -1),
+        w=jnp.asarray(w, jnp.float32).reshape(1, -1),
+        valid=jnp.ones((1, m), bool),
+        count=jnp.asarray([m], jnp.int32), cap=m, num_parts=1)
+
+
+def _bin_rows(part, binned):
+    """Per-bin edge tuples, in packed order, padding stripped."""
+    out = []
+    for p in range(part.num_parts):
+        k = int(binned.count[p])
+        out.append(list(zip(np.asarray(binned.src[p])[:k].tolist(),
+                            np.asarray(binned.dst[p])[:k].tolist(),
+                            np.asarray(binned.w[p])[:k].tolist())))
+    return out
+
+
+@given(n=st.integers(9, 120), m=st.integers(0, 240),
+       parts=st.integers(1, 6), seed=st.integers(0, 2))
+def test_regroup_by_dst_bins_every_edge_in_its_dst_bin(n, m, parts, seed):
+    """Totality + ownership: every input edge appears exactly once, in
+    the row owned by its destination; padding slots carry the sentinel."""
+    rng = np.random.RandomState(seed)
+    src = rng.randint(0, n, m)
+    dst = rng.randint(0, n, m)
+    w = rng.uniform(0.5, 2.0, m).astype(np.float32)
+    part = partition_1d(n, parts)
+    binned = pa_regroup_by_dst(part, _flat_edges(src, dst, w, n), n,
+                               align=8)
+    rows = _bin_rows(part, binned)
+    assert sum(len(r) for r in rows) == m
+    got = sorted(e for r in rows for e in r)
+    want = sorted(zip(src.tolist(), dst.tolist(),
+                      np.asarray(w, np.float32).tolist()))
+    assert got == want
+    for p, row in enumerate(rows):
+        assert all(int(part.owner_np(np.int64(d))) == p
+                   for _, d, _ in row)
+        pad_dst = np.asarray(binned.dst[p])[len(row):]
+        assert np.all(pad_dst == n)
+        assert not np.asarray(binned.valid[p])[len(row):].any()
+
+
+@given(n=st.integers(9, 120), m=st.integers(1, 240),
+       parts=st.integers(1, 6), seed=st.integers(0, 2))
+def test_regroup_by_dst_is_stable_and_permutation_invariant(n, m, parts,
+                                                            seed):
+    """Stability: within a bin, edges keep their input order (the push
+    kernel's run pointers require it). Permutation invariance: shuffling
+    the input permutes within-bin order but never the per-bin edge
+    multiset."""
+    rng = np.random.RandomState(seed + 100)
+    src = rng.randint(0, n, m)
+    dst = rng.randint(0, n, m)
+    w = rng.uniform(0.5, 2.0, m).astype(np.float32)
+    part = partition_1d(n, parts)
+    rows = _bin_rows(part, pa_regroup_by_dst(
+        part, _flat_edges(src, dst, w, n), n, align=8))
+    own = part.owner_np(dst)
+    triples = list(zip(src.tolist(), dst.tolist(),
+                       np.asarray(w, np.float32).tolist()))
+    for p, row in enumerate(rows):
+        assert row == [t for t, o in zip(triples, own) if o == p]
+    perm = rng.permutation(m)
+    shuf = _bin_rows(part, pa_regroup_by_dst(
+        part, _flat_edges(src[perm], dst[perm], w[perm], n), n, align=8))
+    for row, srow in zip(rows, shuf):
+        assert sorted(row) == sorted(srow)

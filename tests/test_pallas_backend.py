@@ -7,7 +7,8 @@ Three layers of evidence that the kernels are production-grade:
     payload rank × ragged n, interpret mode (bit-exact wherever the
     reduction order matches, incl. the empty-row combine identity);
   * dispatch — msg_fn classification, the jnp fallback for unsupported
-    cells, the push window guard, the shape-keyed autotuner cache;
+    cells, the traced bin-capacity guard, the shape-keyed autotuner
+    cache and its on-disk tier, the backend's per-graph bin-plan cache;
   * end to end — ``solve(..., backend="pallas")`` reproduces the dense
     backend on BFS / PageRank / SSSP for push, pull, and auto policies,
     and ``solve_batch`` runs [n, B] payloads through the kernel path.
@@ -23,7 +24,8 @@ from repro.core import Cost, EllBackend, PallasBackend, classify_msg_fn
 from repro.core.primitives import (combine_identity, pull_relax_ell,
                                    push_relax)
 from repro.graphs import build_graph, erdos_renyi
-from repro.kernels.coo_push import coo_push_pallas, push_window_fits
+from repro.kernels.coo_push import (PUSH_STRATEGIES, build_push_plan,
+                                    coo_push_pallas)
 from repro.kernels.ell_spmv import ell_spmv_pallas
 from repro.kernels.tune import pull_candidates, push_candidates
 
@@ -72,21 +74,22 @@ def test_ell_kernel_matches_pull_primitive(ragged_graph, combine, dtype,
     _assert_kernel_equal(got, want, order_matches=True)
 
 
+@pytest.mark.parametrize("strategy", PUSH_STRATEGIES)
 @pytest.mark.parametrize("batch", [None, 3])
 @pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
 @pytest.mark.parametrize("combine", COMBINES)
 def test_coo_kernel_matches_push_primitive(ragged_graph, combine, dtype,
-                                           batch):
+                                           batch, strategy):
     """Partial frontier push: kernel combine over dst-sorted edges ≡
     push_relax's segment combine (float sums differ only in edge
-    order)."""
+    order), for both phase-2 reduce strategies."""
     g = ragged_graph
     x = _payload(g, dtype, batch)
     frontier = jax.random.uniform(jax.random.PRNGKey(3), (g.n,)) < 0.4
     want, _ = push_relax(g, x, frontier, combine=combine)
     got = coo_push_pallas(x, frontier, g.coo_src, g.coo_dst, g.coo_w,
                           g.n, combine=combine, msg="copy", block_e=64,
-                          block_n=128)
+                          block_n=128, strategy=strategy)
     order_matches = not (combine == "sum"
                          and jnp.issubdtype(dtype, jnp.floating))
     _assert_kernel_equal(got, want, order_matches=order_matches)
@@ -147,22 +150,53 @@ def test_coo_push_padding_never_aims_at_last_vertex():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-def test_push_window_guard_falls_back_correctly():
-    """Pinned blocks whose window cannot cover a tile's dst span: the
-    backend's lax.cond guard must route to the jnp branch and still
-    produce the primitive's answer."""
-    # one tile of 8 edges spans dst 0 and dst 99 -> span 100 > win 12
-    src = np.arange(8)
-    dst = np.array([0, 0, 0, 0, 1, 1, 2, 99])
-    g = build_graph(src, dst, n=100)
-    assert not bool(push_window_fits(g.coo_dst, g.n, 8, 4))
-    backend = PallasBackend(block_e=8, push_block_n=4, autotune=False)
-    x = jnp.arange(100, dtype=jnp.float32)
-    out, _ = backend.push(g, x, jnp.ones((100,), bool), "sum", None,
-                          Cost())
-    want, _ = push_relax(g, x, jnp.ones((100,), bool))
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
-                               rtol=1e-6)
+def test_push_bin_cap_guard_falls_back_correctly():
+    """Traced path (the engine jits the graph): when the static bin
+    capacity cannot hold the skewest bin, the lax.cond fits guard must
+    route to the jnp branch and still produce the primitive's answer;
+    with enough capacity the same trace takes the kernel."""
+    # 16 edges all into dst 0: bin 0 holds 16 edges
+    src = np.arange(16)
+    dst = np.zeros(16, np.int64)
+    g = build_graph(src, dst, n=24)
+    x = jnp.arange(24, dtype=jnp.float32)
+    act = jnp.ones((24,), bool)
+    want, _ = push_relax(g, x, act)
+    for cap in (8, 32):  # 8 < 16 edges -> fallback; 32 -> kernel
+        backend = PallasBackend(block_e=8, push_block_n=8,
+                                push_strategy="scan", push_bin_cap=cap,
+                                autotune=False)
+        out = jax.jit(lambda g, v, f, b=backend: b.push(
+            g, v, f, "sum", None, Cost())[0])(g, x, act)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-6)
+
+
+def test_push_edgeless_bin_holds_combine_identity():
+    """Regression (mirrors the PR 5 empty-ELL-row fix): a bin whose
+    edge block is all padding must return the combine identity without
+    reading the sentinel row — a min over negative payloads would
+    surface any sentinel read as a wrong value."""
+    n = 256
+    # edges land only in bin 1 (dst >= 128): bin 0 is pure padding
+    src = np.arange(12)
+    dst = np.arange(130, 142)
+    g = build_graph(src, dst, n=n)
+    x = -jnp.arange(1.0, n + 1.0, dtype=jnp.float32)  # all negative
+    act = jnp.ones((n,), bool)
+    for strategy in PUSH_STRATEGIES:
+        for combine in COMBINES:
+            plan = build_push_plan(g.coo_src, g.coo_dst, g.coo_w, n,
+                                   bin_n=128, align=64)
+            got = coo_push_pallas(x, act, g.coo_src, g.coo_dst, g.coo_w,
+                                  n, combine=combine, msg="copy",
+                                  block_e=64, block_n=128, plan=plan,
+                                  strategy=strategy)
+            want, _ = push_relax(g, x, act, combine=combine)
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
+            ident = combine_identity(combine, jnp.float32)
+            assert (np.asarray(got)[:128] == np.asarray(ident)).all()
 
 
 def test_edgeless_graph_runs_on_pallas():
@@ -248,7 +282,12 @@ def test_pallas_pull_charges_ell_cost_and_scans_all(ragged_graph):
     _, p_kernel = backend.push(g, x, jnp.ones((g.n,), bool), "sum",
                                None, Cost())
     _, p_dense = push_relax(g, x, jnp.ones((g.n,), bool))
-    assert p_kernel.as_dict() == p_dense.as_dict()
+    # kernel push = primitive's charge + the phase-1 binning pass
+    # (reads and rewrites every edge once)
+    pk, pd = p_kernel.as_dict(), p_dense.as_dict()
+    assert pk.pop("reads") == pd.pop("reads") + g.m
+    assert pk.pop("writes") == pd.pop("writes") + g.m
+    assert pk == pd
 
 
 def test_autotuner_caches_per_shape(ragged_graph):
@@ -265,13 +304,74 @@ def test_autotuner_caches_per_shape(ragged_graph):
     backend.push(g, x, jnp.ones((g.n,), bool), "sum", None, Cost())
     (pk,) = [k for k in backend._tuned if k[0] == "push"]
     assert backend._tuned[pk] in push_candidates(g.n, g.m)
-    # every tuned push rung is statically window-safe
-    be, bn = backend._tuned[pk]
-    assert be + bn >= g.n
+    be, bn, strat = backend._tuned[pk]
+    assert strat in PUSH_STRATEGIES
     # a partial pin overrides only its own component
     half = PallasBackend(push_block_n=512, autotune=False)
-    pe, pn = half._push_blocks(g, x, "sum", "copy")
-    assert pn == 512 and pe == push_candidates(g.n, g.m)[0][0]
+    pe, pn, ps = half._push_blocks(g, x, "sum", "copy")
+    first = push_candidates(g.n, g.m)[0]
+    assert (pe, pn, ps) == (first[0], 512, first[2])
+
+
+def test_push_plan_cached_per_graph(ragged_graph):
+    """Concrete-graph pushes build the phase-1 bin layout once and
+    reuse it; a different (bin width, edge block) gets its own entry."""
+    g = ragged_graph
+    backend = PallasBackend(block_e=64, push_block_n=64,
+                            push_strategy="scan", autotune=False)
+    x = _payload(g, jnp.float32, None)
+    act = jnp.ones((g.n,), bool)
+    out, _ = backend.push(g, x, act, "sum", None, Cost())
+    want, _ = push_relax(g, x, act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert len(backend._plans) == 1
+    plan = next(iter(backend._plans.values()))[1]
+    backend.push(g, x, act, "sum", None, Cost())
+    assert next(iter(backend._plans.values()))[1] is plan  # cache hit
+    assert len(backend._plans) == 1
+    wide = PallasBackend(block_e=32, push_block_n=128,
+                         push_strategy="scan", autotune=False)
+    wide.push(g, x, act, "sum", None, Cost())
+    assert next(iter(wide._plans))[1:] == (128, 32)
+
+
+def test_tuner_disk_cache_round_trip(tmp_path, monkeypatch, ragged_graph):
+    """Tuned winners persist under $REPRO_CACHE_DIR and are served from
+    disk after the in-memory tier is dropped — without re-probing."""
+    import repro.kernels.tune as tune
+    g = ragged_graph
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    tune.clear_memory_cache()
+    try:
+        got = tune.tune_push(g.n, g.m, 1, jnp.float32, "sum", "copy",
+                             interpret=True)
+        assert got in push_candidates(g.n, g.m)
+        import json
+        disk = json.loads((tmp_path / "tune.json").read_text())
+        assert list(got) in [v for v in disk.values()]
+        # second process simulation: cold memory, warm disk
+        tune.clear_memory_cache()
+        monkeypatch.setattr(tune, "_escaped",
+                            lambda fn: pytest.fail("re-probed a cached "
+                                                   "configuration"))
+        assert tune.tune_push(g.n, g.m, 1, jnp.float32, "sum", "copy",
+                              interpret=True) == got
+    finally:
+        tune.clear_memory_cache()  # drop state pointing at tmp_path
+
+
+def test_pull_b1_candidates_prefer_sub_n_blocks():
+    """The kernel_pull_*_b1 regression: single-column payloads must be
+    tuned over sub-n blocks (the full-row rung loses to jnp there), so
+    the rmat-sized candidate list drops the full-row rung entirely."""
+    n = 16384  # the benchmark rmat scale
+    cands = pull_candidates(n, width=1)
+    assert cands and all(c < n for c in cands)
+    # batched payloads keep the full-row rung as an option
+    assert any(c >= n for c in pull_candidates(n, width=8))
+    # tiny graphs where no ladder rung fits still get a block
+    assert pull_candidates(64, width=1) == (64,)
 
 
 def test_backend_shorthand_is_shared_singleton(ragged_graph):
