@@ -15,6 +15,14 @@ distance-to-hardware, not just distance-to-jnp.
     PYTHONPATH=src python -m benchmarks.run --only kernels \
         --json BENCH_kernels.json
 
+``kernel_pullf_*`` rows cover the frontier-restricted pull
+(``ell_pull_frontier_pallas``) on BFS-shaped touched sets at ≤10%
+density, against both the jnp masked pull (``us_jnp``) and the
+full-scan kernel + mask (``us_full_kernel``) — the committed run must
+show the frontier kernel beating the full scan on at least one sparse
+cell, which is the wall-clock grounding for ``PallasBackend`` pricing
+restricted pulls cheaper than ``(m, n)``.
+
 ``--smoke`` shrinks to the RMAT family × sum × both directions (CI
 asserts the rows exist and validate — interpreter wall-clock is only
 meaningful relatively, and only the committed full run claims the
@@ -64,6 +72,50 @@ def _jnp_pull(g, x, combine):
 def _jnp_push(g, x, active, combine):
     from repro.core.primitives import push_relax
     return push_relax(g, x, active, combine=combine)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("combine",))
+def _jnp_pull_masked(g, x, touched, combine):
+    from repro.core.primitives import mask_untouched, pull_relax_ell
+    out = pull_relax_ell(g, x, combine=combine)[0]
+    return mask_untouched(out, touched, combine)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("combine", "rows_n", "block_r"))
+def _pallas_pullf(xp, ell_idx, ell_w, touched, combine, rows_n, block_r):
+    # compaction + frontier kernel + identity scatter under one jit —
+    # how the engine's traced pull path runs it (eager nonzero dispatch
+    # would otherwise dominate the measurement)
+    from repro.kernels.ell_pull_frontier import (ell_pull_frontier_full,
+                                                 frontier_rows)
+    rows = frontier_rows(touched, rows_n)
+    return ell_pull_frontier_full(xp, ell_idx, ell_w, rows,
+                                  combine=combine, msg="copy",
+                                  block_r=block_r)
+
+
+def _bfs_touched_sets(g, layout, max_density=0.10, max_levels=4, keep=2):
+    """BFS-shaped touched sets: each BFS level's frontier, expanded to
+    the destinations its pull step would touch (N_out of the frontier —
+    what the engine's ``touched_fn`` hands the backend). Keeps the
+    first ``keep`` levels at ≤ ``max_density`` — the sparse-frontier
+    regime where restricting the scan is supposed to pay."""
+    from repro import api
+    from repro.kernels.layout import touched_out_mask
+    dist = np.asarray(api.solve(g, "bfs", root=0).state["dist"])
+    out = []
+    for lv in range(max_levels):
+        frontier = jnp.asarray(dist == lv)
+        if not bool(frontier.any()):
+            break
+        touched = touched_out_mask(layout, frontier)
+        cnt = int(jnp.sum(touched))
+        if cnt and cnt / g.n <= max_density:
+            out.append((lv, touched, cnt))
+        if len(out) == keep:
+            break
+    return out
 
 
 def _agree(a, b) -> bool:
@@ -159,6 +211,68 @@ def run():
                 })
                 emit(f"kernel_push_{combine}_{gname}_b{batch}", us_pal,
                      json.dumps(cell))
+
+    # ---- frontier pull: touched-row gather vs full scan + mask ------
+    # kernel_pullf_* rows time the PR 8 dispatch against both honest
+    # baselines on the SAME touched set: the jnp full pull + mask
+    # (us_jnp) and the full-scan Pallas kernel + mask (us_full_kernel,
+    # the pre-frontier kernel path). us_pallas includes the frontier
+    # compaction and identity scatter, so the speedup is end to end.
+    from repro.core.primitives import mask_untouched
+    from repro.kernels.layout import build_dual_ell
+    from repro.kernels.tune import tune_pull_frontier
+
+    for gname, g in _graphs(common.SMOKE).items():
+        layout = build_dual_ell(g)
+        fronts = _bfs_touched_sets(g, layout)
+        xp_cache = {}
+        for combine in combines:
+            for batch in batches:
+                x = xp_cache.setdefault(batch, _payload(g, batch,
+                                                        jnp.float32))
+                xp = pad_values(x)
+                block_n = tune_pull(g.n, g.d_ell, batch, x.dtype,
+                                    combine, "copy")
+                for lv, touched, cnt in fronts:
+                    # same pow-of-two row-capacity bucketing as the
+                    # backend's concrete dispatch
+                    rows_n = max(8, 1 << (cnt - 1).bit_length())
+                    us_jnp = timeit(
+                        lambda: _jnp_pull_masked(g, x, touched, combine),
+                        iters=iters)
+                    full_kernel = lambda: mask_untouched(  # noqa: E731
+                        ell_spmv_pallas(xp, g.ell_idx, g.ell_w,
+                                        combine=combine, msg="copy",
+                                        block_n=block_n),
+                        touched, combine)
+                    us_full = timeit(full_kernel, iters=iters)
+                    block_r = tune_pull_frontier(
+                        g.n, g.d_ell, rows_n, batch, x.dtype, combine,
+                        "copy")
+                    pallas_f = lambda: _pallas_pullf(  # noqa: E731
+                        xp, layout.in_idx, layout.in_w, touched,
+                        combine, rows_n, block_r)
+                    us_pal = timeit(pallas_f, iters=iters)
+                    roof = kernel_roofline(
+                        "pullf", n=rows_n, d_ell=g.d_ell, batch=batch,
+                        itemsize=x.dtype.itemsize, measured_us=us_pal)
+                    cell = _cell("pullf", combine, gname, g, batch, {
+                        "block_n": int(block_r),
+                        "rows": int(rows_n),
+                        "density": round(cnt / g.n, 4),
+                        "us_jnp": round(us_jnp, 1),
+                        "us_full_kernel": round(us_full, 1),
+                        "us_pallas": round(us_pal, 1),
+                        "speedup": round(us_full / max(us_pal, 1e-9), 3),
+                        "match": _agree(
+                            _jnp_pull_masked(g, x, touched, combine),
+                            pallas_f()),
+                        "bytes_moved": roof["bytes_moved"],
+                        "flops": roof["flops"],
+                        "pct_roofline": roof["pct_roofline"],
+                    })
+                    emit(f"kernel_pullf_{combine}_{gname}_b{batch}_L{lv}",
+                         us_pal, json.dumps(cell))
 
     # ---- model-kernel sanity rows (aux_: not kernel_cell shaped) ----
     from repro.kernels import cin_layer, flash_attention

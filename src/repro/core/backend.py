@@ -156,6 +156,28 @@ class ExchangeBackend:
         """
         return counter(0), counter(0)
 
+    def predict_pull_scan(self, g: Graph, touched, values=None,
+                          combine: str = "sum",
+                          msg_fn: Optional[Callable] = None) -> tuple:
+        """Predicted ``(edges_read, vertices_written)`` of one pull step
+        of this backend, per payload column.
+
+        The engine folds the pair into ``StepStats.pull_edges`` /
+        ``pull_vertices``, so this is where a backend's *layout* enters
+        the crossover: full-scan layouts (``pull_scans_all``) report all
+        ``m`` edges regardless of the touched set, dense pulls the
+        touched in-degree sum, and the frontier-aware kernel pull its
+        restricted ``touched × d_ell`` gather. Must mirror exactly what
+        this backend's ``pull`` then charges (× width) — predictor
+        exactness is what the AutoSwitch never-worse guarantees rest on.
+        ``values``/``combine``/``msg_fn`` let kernel backends fold their
+        trace-time dispatch (kernel vs jnp fallback) into the price.
+        """
+        if touched is None or self.pull_scans_all:
+            return counter(g.m), counter(g.n)
+        return (frontier_in_edges(g, touched),
+                jnp.sum(touched.astype(counter_dtype())))
+
     @property
     def name(self) -> str:
         return type(self).__name__
@@ -251,19 +273,30 @@ _PALLAS_DTYPES = ("float32", "float64", "int32", "int64")
 class PallasBackend(EllBackend):
     """The ELL backend's semantics executed by the Pallas kernels.
 
-    ``pull`` dispatches to ``ell_spmv_pallas`` (padded-row gather +
-    combine) and ``push`` to ``coo_push_pallas`` (two-phase
-    contention-free bin reduce: a per-graph bin layout — cached here
-    alongside the tuner results for concrete graphs, gathered in-trace
-    from ``in_ptr`` under jit — feeding a grid parallel over
-    destination bins); both inherit ``pull_scans_all=True`` (the
-    rectangular gather touches every edge), so AutoSwitch prices
-    kernel pulls correctly. Block sizes and the push reduce strategy
-    come from ``kernels/tune.py`` — probed once per (graph shape,
-    payload shape, platform), cached on this instance and on disk —
-    unless pinned via ``block_n``/``block_e``/``push_block_n``/
-    ``push_strategy``. ``interpret=None`` auto-detects (compiled on
-    TPU, interpreter elsewhere).
+    ``pull`` is frontier-aware: with a touched destination set it
+    compacts the set to row ids and dispatches to
+    ``ell_pull_frontier_pallas`` (gather/reduce of *touched rows only*
+    over the dual layout's ELL-in side — ``touched × d_ell`` work),
+    falling back to the full-scan ``ell_spmv_pallas`` when the set is
+    too dense for the restriction to pay (or, in-trace, overflows the
+    static row capacity — ``pull_frontier_cap``, default
+    ``default_pull_cap``); an empty touched set returns the combine
+    identity without launching any kernel. ``push`` dispatches to
+    ``coo_push_pallas`` (two-phase contention-free bin reduce over a
+    per-graph bin layout). Both directions therefore run on their
+    native rectangular layout, held by a per-graph ``DualEllLayout``
+    (ELL-in + ELL-out) cached here alongside the bin plans — and
+    ``pull_scans_all`` is **False**: ``predict_pull_scan`` prices pull
+    steps by the restricted gather the kernel will actually do, which
+    moves AutoSwitch's predicted push/pull crossover pull-ward.
+
+    Block sizes and the push reduce strategy come from
+    ``kernels/tune.py`` — probed once per (graph shape, payload shape,
+    platform; the frontier pull additionally keys on the compacted row
+    capacity), cached on this instance and on disk — unless pinned via
+    ``block_n``/``block_e``/``push_block_n``/``push_strategy``.
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter
+    elsewhere).
 
     Cells outside the kernels' coverage — a ``msg_fn`` that is not one
     of the three wire-message shapes, a combine outside {sum, max, min},
@@ -276,18 +309,27 @@ class PallasBackend(EllBackend):
     ``stats`` counts trace-time dispatch decisions (kernel vs fallback,
     per direction) — observability for tests and benchmarks.
     """
+    # the ELL-in gather no longer scans all edges when a touched set is
+    # given: the frontier kernel restricts it, and predict_pull_scan
+    # prices the restriction
+    pull_scans_all = False
+
     interpret: Optional[bool] = None
     block_n: Optional[int] = None     # pull tile rows (None = autotune)
     block_e: Optional[int] = None     # push edge-chunk size
     push_block_n: Optional[int] = None  # push destination-bin width
     push_strategy: Optional[str] = None  # phase-2 reduce ("scan"|"mxu")
     push_bin_cap: Optional[int] = None  # traced-bin capacity override
+    pull_frontier_cap: Optional[int] = None  # traced touched-row capacity
     autotune: bool = True
     stats: dict = dataclasses.field(
         default_factory=lambda: {"kernel_pull": 0, "kernel_push": 0,
+                                 "kernel_pull_frontier": 0,
+                                 "skip_empty_pull": 0,
                                  "fallback_pull": 0, "fallback_push": 0})
     _tuned: dict = dataclasses.field(default_factory=dict, repr=False)
     _plans: dict = dataclasses.field(default_factory=dict, repr=False)
+    _layouts: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # identity eq/hash, explicitly: instances carry mutable caches and
     # distinct block/interpret configs, and the engine cache keys on the
@@ -361,6 +403,73 @@ class PallasBackend(EllBackend):
         self._plans[key] = (weakref.ref(g), plan)
         return plan
 
+    def dual_layout(self, g: Graph):
+        """Cached dual ELL-in/ELL-out layout for a concrete graph —
+        built once per graph on the host (the in side shares the
+        graph's own ELL arrays) and stored next to the bin plans, with
+        the same weakref guard against id() reuse. Traced graphs use
+        ``g.ell_idx``/``g.ell_w`` directly (the layout's in side *is*
+        those arrays)."""
+        from ..kernels.layout import build_dual_ell
+        key = ("dual", id(g))
+        hit = self._layouts.get(key)
+        if hit is not None and hit[0]() is g:
+            return hit[1]
+        layout = build_dual_ell(g)
+        self._layouts[key] = (weakref.ref(g), layout)
+        return layout
+
+    def _pull_cap(self, g: Graph) -> int:
+        if self.pull_frontier_cap is not None:
+            return self.pull_frontier_cap
+        from ..kernels.ell_pull_frontier import default_pull_cap
+        return default_pull_cap(g.n, g.m, g.d_ell)
+
+    def _pull_frontier_block(self, g: Graph, rows: int, values, combine,
+                             mode) -> int:
+        from ..kernels.tune import (pull_frontier_candidates,
+                                    tune_pull_frontier)
+        width = 1 if values.ndim == 1 else int(values.shape[-1])
+        key = ("pullf", g.n, g.d_ell, rows, width, str(values.dtype),
+               combine, mode)
+        if key not in self._tuned:
+            self._tuned[key] = (
+                tune_pull_frontier(g.n, g.d_ell, rows, width,
+                                   values.dtype, combine, mode,
+                                   self.interpret)
+                if self.autotune
+                else pull_frontier_candidates(g.n, rows)[0])
+        return self._tuned[key]
+
+    def _pull_scan_stats(self, g: Graph, touched):
+        """(edges_read, rows_written, count, fits) of a kernel pull
+        with this touched set — the single formula behind both
+        ``predict_pull_scan`` and the charge ``pull`` makes, so the
+        predictor stays exact. The restriction pays only when the
+        touched rows fit the static capacity AND their rectangular
+        gather (``count × d_ell``) undercuts the full scan's ``m`` —
+        otherwise the full-scan price (m, n) applies, which is exactly
+        the old ``pull_scans_all`` pricing (a 100%-touched frontier can
+        never be priced worse than before)."""
+        cnt = jnp.sum(touched.astype(counter_dtype()))
+        cap = self._pull_cap(g)
+        fits = (cnt > 0) & (cnt <= cap) & (cnt * g.d_ell < g.m)
+        edges = jnp.where(cnt == 0, counter(0),
+                          jnp.where(fits, cnt * g.d_ell, counter(g.m)))
+        verts = jnp.where(cnt == 0, counter(0),
+                          jnp.where(fits, cnt, counter(g.n)))
+        return edges, verts, cnt, fits
+
+    def predict_pull_scan(self, g, touched, values=None, combine="sum",
+                          msg_fn=None):
+        # a step the kernels cannot cover falls back to the full-scan
+        # jnp ELL path, so it must be priced as one
+        if (touched is None or values is None
+                or self._mode(values, combine, msg_fn) is None):
+            return counter(g.m), counter(g.n)
+        edges, verts, _, _ = self._pull_scan_stats(g, touched)
+        return edges, verts
+
     # -- ExchangeBackend ---------------------------------------------------
     def pull(self, g, values, touched, combine, msg_fn, cost):
         mode = self._mode(values, combine, msg_fn)
@@ -368,20 +477,81 @@ class PallasBackend(EllBackend):
             self.stats["fallback_pull"] += 1
             return super().pull(g, values, touched, combine, msg_fn, cost)
         from ..graphs.structure import pad_values
-        from ..kernels.ell_spmv import ell_spmv_pallas
-        self.stats["kernel_pull"] += 1
-        out = ell_spmv_pallas(
-            pad_values(values), g.ell_idx, g.ell_w, combine=combine,
-            msg=mode, block_n=self._pull_block_n(g, values, combine, mode),
-            interpret=self.interpret)
-        if touched is not None:
-            out = mask_untouched(out, touched, combine)
+        from ..kernels.ell_spmv import _out_dtype, ell_spmv_pallas
         width = 1 if values.ndim == 1 else values.shape[-1]
-        # identical charge to pull_relax_ell: the rectangular gather
-        # reads every edge, private writes per destination
-        cost = cost.charge(reads=counter(g.m) * width,
-                           writes=counter(g.n) * width)
-        return out, cost
+
+        def full_scan():
+            out = ell_spmv_pallas(
+                pad_values(values), g.ell_idx, g.ell_w, combine=combine,
+                msg=mode,
+                block_n=self._pull_block_n(g, values, combine, mode),
+                interpret=self.interpret)
+            if touched is not None:
+                out = mask_untouched(out, touched, combine)
+            return out
+
+        if touched is None:
+            # every destination is live: the rectangular full scan is
+            # the native path (identical charge to pull_relax_ell)
+            self.stats["kernel_pull"] += 1
+            return full_scan(), cost.charge(reads=counter(g.m) * width,
+                                            writes=counter(g.n) * width)
+
+        from ..kernels.ell_pull_frontier import (ell_pull_frontier_full,
+                                                 frontier_rows)
+        edges, verts, cnt, fits = self._pull_scan_stats(g, touched)
+        odt = _out_dtype(values.dtype, g.ell_w.dtype, mode, combine)
+        ident = combine_identity(combine, odt)
+
+        def identity_out():
+            return jnp.full((g.n,) + values.shape[1:], ident, odt)
+
+        def frontier(rows, in_idx, in_w, block_r):
+            return ell_pull_frontier_full(
+                pad_values(values), in_idx, in_w, rows, combine=combine,
+                msg=mode, block_r=block_r, interpret=self.interpret)
+
+        if not isinstance(touched, jax.core.Tracer) and not isinstance(
+                g.ell_idx, jax.core.Tracer):
+            # concrete call (direct use, benchmarks): dispatch eagerly.
+            # The compaction is sized to the actual touched count,
+            # rounded to a power of two so the kernel's jit cache and
+            # the tuner see a bounded family of row capacities.
+            cnt_c = int(cnt)
+            if cnt_c == 0:
+                self.stats["skip_empty_pull"] += 1
+                out = identity_out()
+            elif bool(fits):
+                self.stats["kernel_pull_frontier"] += 1
+                layout = self.dual_layout(g)
+                rows_n = max(8, 1 << (cnt_c - 1).bit_length())
+                block_r = self._pull_frontier_block(g, rows_n, values,
+                                                    combine, mode)
+                out = frontier(frontier_rows(touched, rows_n),
+                               layout.in_idx, layout.in_w, block_r)
+            else:
+                self.stats["kernel_pull"] += 1
+                out = full_scan()
+        else:
+            # in-trace (the engine jits the graph): compact under the
+            # static capacity and guard on the runtime fits bit —
+            # mirroring the push bin plan's lax.cond capacity guard.
+            # An empty touched set short-circuits to the identity
+            # without any kernel launch.
+            self.stats["kernel_pull_frontier"] += 1
+            cap = self._pull_cap(g)
+            block_r = self._pull_frontier_block(g, cap, values, combine,
+                                                mode)
+            rows = frontier_rows(touched, cap)
+            out = jax.lax.cond(
+                cnt == 0, identity_out,
+                lambda: jax.lax.cond(
+                    fits,
+                    lambda: frontier(rows, g.ell_idx, g.ell_w, block_r),
+                    full_scan))
+        # exactly what predict_pull_scan promised (× payload width)
+        return out, cost.charge(reads=edges * width,
+                                writes=verts * width)
 
     def push(self, g, values, frontier, combine, msg_fn, cost):
         mode = self._mode(values, combine, msg_fn)

@@ -161,9 +161,16 @@ class StepStats(NamedTuple):
     ``frontier_edges`` is the push work bound (Σ out-degree of the
     frontier); ``pull_edges``/``pull_vertices`` bound the pull side for
     the *program's actual* destination set under the *backend's actual*
-    layout (ELL pull scans all ``m`` edges regardless of the touched
-    set); ``unvisited_edges`` is Beamer's unexplored-edge count used by
-    ``GenericSwitch``. ``float_data`` and ``k_filter_push`` are static
+    layout — the engine fills them from ``backend.predict_pull_scan``,
+    so a full-scan layout reports all ``m`` edges while the
+    frontier-aware kernel pull reports its restricted ``touched ×
+    d_ell`` gather; ``pull_touched_edges`` is the layout-independent
+    restriction (Σ in-degree of the touched destination set, ``m`` when
+    every destination is touched) — what an ideal CSR pull would read,
+    kept alongside the layout-priced ``pull_edges`` so traces show how
+    much of the algorithmic restriction the backend's layout actually
+    captures; ``unvisited_edges`` is Beamer's unexplored-edge count
+    used by ``GenericSwitch``. ``float_data`` and ``k_filter_push`` are static
     (trace-time) facts about the step: whether push conflicts resolve as
     locks or atomics, and whether a push step pays the paper's k-filter.
 
@@ -195,6 +202,7 @@ class StepStats(NamedTuple):
     width: int = 1
     push_wire_bytes: jax.Array | int = 0
     pull_wire_bytes: jax.Array | int = 0
+    pull_touched_edges: jax.Array | int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,9 +217,12 @@ class CostPredictor:
             frontier's k incident out-edges (atomics for int payloads,
             locks for float), plus the k-filter compaction when the
             program declares one;
-      pull: width reads per in-edge of the touched destination set (all
-            m under a dense destination set or the ELL layout) plus
-            width private writes per touched destination.
+      pull: width reads per edge the backend's layout will actually
+            scan (``StepStats.pull_edges``, via
+            ``backend.predict_pull_scan`` — all m for a dense
+            destination set or a full-scan layout, the restricted
+            ``touched × d_ell`` gather for the frontier-aware kernel
+            pull) plus width private writes per written destination.
 
     Both formulas add the backend's predicted inter-device wire bytes
     (``StepStats.push_wire_bytes`` / ``pull_wire_bytes``, priced by
@@ -279,6 +290,7 @@ class StepTrace:
     pushed: jax.Array
     frontier_vertices: jax.Array
     frontier_edges: jax.Array
+    pull_touched_edges: jax.Array
     reads: jax.Array
     writes: jax.Array
     atomics: jax.Array
@@ -287,7 +299,8 @@ class StepTrace:
     @classmethod
     def empty(cls, capacity: int) -> "StepTrace":
         return cls(pushed=_B(capacity), frontier_vertices=_C(capacity),
-                   frontier_edges=_C(capacity), reads=_C(capacity),
+                   frontier_edges=_C(capacity),
+                   pull_touched_edges=_C(capacity), reads=_C(capacity),
                    writes=_C(capacity), atomics=_C(capacity),
                    locks=_C(capacity))
 
@@ -305,6 +318,8 @@ class StepTrace:
             frontier_vertices=put(self.frontier_vertices,
                                   stats.frontier_vertices),
             frontier_edges=put(self.frontier_edges, stats.frontier_edges),
+            pull_touched_edges=put(self.pull_touched_edges,
+                                   stats.pull_touched_edges),
             reads=put(self.reads, delta.reads),
             writes=put(self.writes, delta.writes),
             atomics=put(self.atomics, delta.atomics),

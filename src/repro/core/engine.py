@@ -196,11 +196,16 @@ class PushPullEngine:
                     unvisited, touched, values) -> StepStats:
         """The decision inputs for this step — §4's quantities, computed
         from degree sums only (no edge traversal)."""
-        if touched is None or self.backend.pull_scans_all:
-            pull_edges, pull_vertices = counter(g.m), counter(g.n)
-        else:
-            pull_edges = frontier_in_edges(g, touched)
-            pull_vertices = jnp.sum(touched.astype(counter_dtype()))
+        # what THIS backend's pull would actually traverse — full scan
+        # (m, n) for scan-all backends, the frontier restriction for
+        # backends that can gather only touched rows
+        pull_edges, pull_vertices = self.backend.predict_pull_scan(
+            g, touched, values=values, combine=prog.combine,
+            msg_fn=prog.msg_fn)
+        # the layout-independent Σ in-degree over touched destinations
+        # (what an ideal CSR pull would read), kept for analysis
+        pull_touched = (counter(g.m) if touched is None
+                        else frontier_in_edges(g, touched))
         float_data = bool(values is not None
                           and jnp.issubdtype(values.dtype, jnp.floating))
         # payload elements per vertex on the wire — B for batched
@@ -220,7 +225,8 @@ class PushPullEngine:
             unvisited_edges=frontier_in_edges(g, unvisited),
             step=st.step, prev_push=st.last_push,
             float_data=float_data, k_filter_push=prog.k_filter_push,
-            width=width, push_wire_bytes=push_wb, pull_wire_bytes=pull_wb)
+            width=width, push_wire_bytes=push_wb, pull_wire_bytes=pull_wb,
+            pull_touched_edges=pull_touched)
 
     # -- one phase: the classic fixed-point loop --------------------------
     def _run_phase(self, g: Graph, phase: Phase, state0, frontier0, epoch,

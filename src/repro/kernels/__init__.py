@@ -1,6 +1,8 @@
 from .ops import pull_spmv, push_combine, flash_attention, cin_layer
-from .tune import tune_pull, tune_push
+from .tune import tune_pull, tune_pull_frontier, tune_push
+from .layout import DualEllLayout, build_dual_ell, touched_out_mask
 from . import ref
 
 __all__ = ["pull_spmv", "push_combine", "flash_attention", "cin_layer",
-           "tune_pull", "tune_push", "ref"]
+           "tune_pull", "tune_pull_frontier", "tune_push",
+           "DualEllLayout", "build_dual_ell", "touched_out_mask", "ref"]

@@ -1,0 +1,184 @@
+"""Pallas TPU kernel: frontier-aware pull over the ELL in-edge layout.
+
+The paper's pull primitive is a private gather per destination — but the
+rectangular ELL kernel (``ell_spmv_pallas``) gathers *every* row, so a
+step whose program only needs a sparse touched-destination set (BFS's
+unvisited set late in the run, an incremental recompute's affected set)
+still pays the full ``n × d_ell`` scan. Grossman & Kozyrakis ("A New
+Frontier for Pull-Based Graph Processing", PAPERS.md) show that
+restricting pull to the touched frontier recovers the asymptotics that
+make direction switching worthwhile; this kernel is that restriction on
+the TPU layout:
+
+    out[rows[r]] = combine_{j < d_ell} msg(x[ell_idx[rows[r], j]],
+                                           ell_w[rows[r], j])
+
+``rows`` is the *compacted* touched-destination id list (sentinel ``n``
+in padding slots — see :func:`frontier_rows`). The grid tiles ``rows``,
+not the vertex range: each step gathers its row ids, then the ELL rows
+of those ids, then the payloads of those neighbors — three levels of
+irregular read that all stay inside the tile, while writes remain
+private per touched row (the pull property, unchanged). Work is
+``R_pad × d_ell`` instead of ``n × d_ell``: at a 10% frontier the
+kernel does a tenth of the full scan's gathers.
+
+Coverage matches ``ell_spmv_pallas`` exactly — combine ∈
+{sum, max, min}, payloads ``[n]``/``[n, B]``, float32/float64/int32/
+int64, msg ∈ {copy, mul, add} — and untouched rows come back as the
+combine identity, so the full-vector result
+(:func:`ell_pull_frontier_full`) equals
+``mask_untouched(ell_spmv_pallas(...), touched)``: bit-identical for
+the order-independent combines (min/max, integer sums); float sums
+agree to reduction-order rounding (XLA schedules the row reduce per
+tile shape, so even the full kernel differs in ULPs across block
+sizes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.primitives import combine_identity
+from .ell_spmv import _apply_msg, _out_dtype, default_interpret
+
+__all__ = ["ell_pull_frontier_pallas", "ell_pull_frontier_full",
+           "frontier_rows", "default_pull_cap"]
+
+
+def _round_up(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def default_pull_cap(n: int, m: int, d_ell: int) -> int:
+    """Static row capacity for the traced frontier-pull path.
+
+    Engines are compiled per graph *shape*, so the compacted row list
+    needs a static size; the capacity is the point where the restricted
+    gather is still guaranteed cheaper than the full scan — at most
+    half the full kernel's ``n × d_ell`` slot reads (``cap × d_ell ≤
+    m/2`` ⇒ touched sets that fit do at most half the scan's work).
+    Denser touched sets overflow the capacity and take the full-scan
+    kernel, which is exactly how they would have been priced before.
+    """
+    cap = min(n, m // (2 * max(d_ell, 1)))
+    return max(8, _round_up(cap, 8))
+
+
+def frontier_rows(touched: jax.Array, size: int) -> jax.Array:
+    """Compact a bool[n] touched mask into int32 row ids, padded with
+    the sentinel ``n`` to the static ``size``. Rows beyond ``size`` are
+    dropped — callers guard with a fits bit (count ≤ size) before
+    trusting the compaction."""
+    n = touched.shape[0]
+    rows = jnp.nonzero(touched, size=size, fill_value=n)[0]
+    return rows.astype(jnp.int32)
+
+
+def _kernel(rows_ref, x_ref, idx_ref, w_ref, out_ref, *, combine: str,
+            msg: str, n: int):
+    # rows_ref: [block_r] streamed tile of touched row ids; idx_ref /
+    # w_ref: the full [n, d_ell] ELL-in matrices resident in ANY;
+    # x_ref: the full padded payload. Three-level gather: row ids ->
+    # ELL rows -> neighbor payloads, all inside the tile.
+    rows = rows_ref[...]
+    live = rows < n
+    safe_rows = jnp.where(live, rows, 0)
+    idx = idx_ref[safe_rows]                 # [block_r, d_ell]
+    w = w_ref[safe_rows]
+    valid = live[:, None] & (idx < n)
+    safe = jnp.where(valid, idx, 0)
+    gathered = x_ref[safe]                   # [block_r, d_ell(, B)]
+    msgs = _apply_msg(gathered, w, msg)
+    ident = combine_identity(combine, msgs.dtype)
+    if msgs.ndim == 3:
+        valid = valid[..., None]
+    masked = jnp.where(valid, msgs, ident)
+    if combine == "sum":
+        out = masked.sum(axis=1)
+    elif combine == "max":
+        out = masked.max(axis=1)
+    else:
+        out = masked.min(axis=1)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("combine", "msg", "block_r",
+                                    "interpret", "num_sources"))
+def ell_pull_frontier_pallas(x_padded: jax.Array, ell_idx: jax.Array,
+                             ell_w: jax.Array, rows: jax.Array,
+                             combine: str = "sum", msg: str = "mul",
+                             block_r: int = 256,
+                             interpret: bool | None = None,
+                             num_sources: int | None = None) -> jax.Array:
+    """Frontier-restricted pull: combined messages for ``rows`` only.
+
+    x_padded: [n+1] or [n+1, B] payloads (zero row at index n);
+    ell_idx/ell_w: the [n, d_ell] ELL-in layout; rows: int32[R]
+    compacted touched row ids (sentinel ``n`` in padding slots).
+    Returns the *compacted* [R] or [R, B] combined messages, aligned
+    with ``rows``; sentinel slots hold the combine identity. Use
+    :func:`ell_pull_frontier_full` for the scattered full-vector form.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, d_ell = ell_idx.shape
+    n_src = n if num_sources is None else num_sources
+    batched = x_padded.ndim == 2
+    (r,) = rows.shape
+    r_pad = _round_up(max(r, 1), block_r)
+    rows = jnp.pad(rows, (0, r_pad - r), constant_values=n_src)
+    grid = (r_pad // block_r,)
+    out_dtype = _out_dtype(x_padded.dtype, ell_w.dtype, msg, combine)
+    if batched:
+        b = x_padded.shape[1]
+        out_spec = pl.BlockSpec((block_r, b), lambda i: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((r_pad, b), out_dtype)
+        x_spec = pl.BlockSpec(x_padded.shape, lambda i: (0, 0))
+    else:
+        out_spec = pl.BlockSpec((block_r,), lambda i: (i,))
+        out_shape = jax.ShapeDtypeStruct((r_pad,), out_dtype)
+        x_spec = pl.BlockSpec(x_padded.shape, lambda i: (0,))
+    out = pl.pallas_call(
+        functools.partial(_kernel, combine=combine, msg=msg, n=n_src),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r,), lambda i: (i,)),   # row-id tile
+            x_spec,                                     # full payload
+            pl.BlockSpec(ell_idx.shape, lambda i: (0, 0)),
+            pl.BlockSpec(ell_w.shape, lambda i: (0, 0)),
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(rows, x_padded, ell_idx, ell_w)
+    return out[:r]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("combine", "msg", "block_r",
+                                    "interpret"))
+def ell_pull_frontier_full(x_padded: jax.Array, ell_idx: jax.Array,
+                           ell_w: jax.Array, rows: jax.Array,
+                           combine: str = "sum", msg: str = "mul",
+                           block_r: int = 256,
+                           interpret: bool | None = None) -> jax.Array:
+    """Frontier pull scattered back to the full vertex range: touched
+    rows carry their combined messages, every other row the combine
+    identity — equal to ``mask_untouched(ell_spmv_pallas(...),
+    touched)`` when ``rows`` compacts ``touched`` (bit-identical for
+    order-independent combines; see the module docstring)."""
+    n = ell_idx.shape[0]
+    compact = ell_pull_frontier_pallas(
+        x_padded, ell_idx, ell_w, rows, combine=combine, msg=msg,
+        block_r=block_r, interpret=interpret)
+    out_dtype = _out_dtype(x_padded.dtype, ell_w.dtype, msg, combine)
+    shape = (n,) + compact.shape[1:]
+    base = jnp.full(shape, combine_identity(combine, out_dtype),
+                    out_dtype)
+    # sentinel slots (rows == n) fall outside [0, n) and are dropped
+    return base.at[rows].set(compact, mode="drop")

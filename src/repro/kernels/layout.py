@@ -1,0 +1,95 @@
+"""DualEllLayout — both edge directions in their native rectangular form.
+
+The paper's §7.1 point is that push and pull want *different* layouts:
+pull gathers over in-edges (CSR-shaped), push scatters over out-edges
+(CSC-shaped). The :class:`~repro.graphs.structure.Graph` container
+carries an ELL view of the in-edges only (``ell_idx``/``ell_w`` — what
+the pull kernels tile); the out-edges exist only as the flat push-major
+COO order. This module completes the pair: a ``DualEllLayout`` holds
+the graph's ELL-in matrices *plus* an ELL-out matrix packed once from
+the push-major CSR (``out_ptr``), so both directions have a rectangular
+[rows, width] view — built on the host, cached per graph on
+``PallasBackend`` exactly like PR 7's ``PushBinPlan``.
+
+What each side is for:
+
+  * **ELL-in** (``in_idx``/``in_w``) feeds the pull kernels —
+    ``ell_spmv_pallas`` full scans and ``ell_pull_frontier_pallas``
+    touched-row gathers.
+  * **ELL-out** (``out_idx``/``out_w``) answers the frontier side of
+    the same question: *which destinations can a pull step skip?* A
+    destination outside the frontier's out-neighborhood has no active
+    in-neighbor, so for frontier-driven monotone programs its combined
+    message cannot change. :func:`touched_out_mask` computes that
+    N_out(frontier) expansion as a ``|F| × d_out`` gather + scatter
+    instead of an m-edge scan — the Grossman & Kozyrakis touched-set
+    derivation that benchmark touched sets and program ``touched_fn``
+    hooks build on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.structure import Graph, _ell_from_ptr
+
+__all__ = ["DualEllLayout", "build_dual_ell", "touched_out_mask"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DualEllLayout:
+    """ELL-in + ELL-out rectangular views of one graph (a pytree).
+
+    ``in_idx``/``in_w`` are the graph's own ELL-in arrays (shared, not
+    copied — [n, d_in], sentinel ``n``); ``out_idx``/``out_w`` are the
+    padded out-neighbor matrix ([n, d_out], same sentinel/zero-pad
+    conventions) packed from the push-major CSR.
+    """
+    in_idx: jax.Array
+    in_w: jax.Array
+    out_idx: jax.Array
+    out_w: jax.Array
+    n: int = dataclasses.field(metadata=dict(static=True))
+    d_in: int = dataclasses.field(metadata=dict(static=True))
+    d_out: int = dataclasses.field(metadata=dict(static=True))
+
+
+def build_dual_ell(g: Graph, pad_rows_to: int = 8) -> DualEllLayout:
+    """Host-side builder: reuse the graph's ELL-in, pack ELL-out from
+    ``out_ptr``/``push_dst`` (max out-degree rounded up to
+    ``pad_rows_to``). Concrete graphs only — the backend builds this
+    once per graph and caches it, like the push bin plan."""
+    out_ptr = np.asarray(g.out_ptr)
+    out_deg = np.diff(out_ptr)
+    d_max = int(out_deg.max()) if g.n else 0
+    d_out = max(pad_rows_to, -(-d_max // pad_rows_to) * pad_rows_to)
+    out_idx, out_w = _ell_from_ptr(out_ptr, np.asarray(g.push_dst),
+                                   np.asarray(g.push_w), g.n, d_out)
+    return DualEllLayout(
+        in_idx=g.ell_idx, in_w=g.ell_w,
+        out_idx=jnp.asarray(out_idx), out_w=jnp.asarray(out_w),
+        n=g.n, d_in=g.d_ell, d_out=int(d_out))
+
+
+def touched_out_mask(layout: DualEllLayout, frontier: jax.Array,
+                     cap: int | None = None) -> jax.Array:
+    """bool[n] mask of N_out(frontier) — the destinations a
+    frontier-driven pull step can actually change.
+
+    Compacts the frontier to row ids, gathers their ELL-out rows, and
+    scatters a mark per destination: ``cap × d_out`` work instead of an
+    m-edge scan. ``cap`` bounds the compacted frontier (default n —
+    exact); frontier vertices beyond ``cap`` are dropped, so callers
+    restricting ``cap`` must guard on the frontier count, exactly as
+    the frontier pull kernel does."""
+    n = layout.n
+    size = n if cap is None else cap
+    rows = jnp.nonzero(frontier, size=size, fill_value=n)[0]
+    nbrs = jnp.take(layout.out_idx, rows, axis=0, mode="fill",
+                    fill_value=n)                    # [size, d_out]
+    return jnp.zeros((n,), bool).at[nbrs.ravel()].set(True, mode="drop")

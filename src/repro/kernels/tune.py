@@ -41,7 +41,8 @@ import jax.numpy as jnp
 from .coo_push import build_push_plan, coo_push_pallas
 from .ell_spmv import default_interpret, ell_spmv_pallas
 
-__all__ = ["pull_candidates", "push_candidates", "tune_pull",
+__all__ = ["pull_candidates", "pull_frontier_candidates",
+           "push_candidates", "tune_pull", "tune_pull_frontier",
            "tune_push", "cache_dir", "clear_memory_cache"]
 
 _PULL_LADDER = (128, 256, 512, 1024, 2048, 4096)
@@ -65,6 +66,19 @@ def pull_candidates(n: int, width: int | None = None) -> tuple[int, ...]:
     cands = [c for c in _PULL_LADDER if c < n_pad]
     if not (width == 1 and cands):
         cands.append(n_pad)
+    return tuple(cands)
+
+
+def pull_frontier_candidates(n: int, rows: int) -> tuple[int, ...]:
+    """``block_r`` rungs for the frontier pull kernel, keyed by frontier
+    density: the grid tiles the compacted ``rows`` touched-row list (not
+    the vertex range), so the useful rungs shrink with ``rows / n``. A
+    sparse frontier (few hundred rows) wants one or two tiles; only
+    near-full frontiers see the deep ladder. Rungs are the pull ladder
+    clipped below the padded row count, plus the whole-range rung."""
+    r_pad = _round_up(max(rows, 8), 8)
+    cands = [c for c in _PULL_LADDER if c < r_pad]
+    cands.append(r_pad)
     return tuple(cands)
 
 
@@ -121,17 +135,28 @@ def _cache_key(kernel: str, interpret: bool, shape: tuple, width: int,
             f"{jnp.dtype(dtype).name}|{combine}|{msg}")
 
 
+def _load_disk() -> dict:
+    """Load the on-disk tier, surviving anything a crashed or racing
+    writer can leave behind: a missing/unreadable file, truncated or
+    garbage JSON, or a file that parses to a non-dict value. Every
+    failure mode degrades to an empty dict — the in-memory tier keeps
+    serving, and the next ``_cache_put`` atomically rewrites a valid
+    file over the corpse."""
+    try:
+        with open(_cache_path()) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    return data if isinstance(data, dict) else {}
+
+
 def _cache_get(key: str):
     global _DISK
     with _LOCK:
         if key in _MEM_CACHE:
             return _MEM_CACHE[key]
         if _DISK is None:
-            try:
-                with open(_cache_path()) as f:
-                    _DISK = json.load(f)
-            except (OSError, ValueError):
-                _DISK = {}
+            _DISK = _load_disk()
         hit = _DISK.get(key)
         if hit is not None:
             hit = tuple(hit) if isinstance(hit, list) else hit
@@ -194,7 +219,10 @@ def tune_pull(n: int, d_ell: int, width: int, dtype, combine: str,
                      combine, msg)
     hit = _cache_get(key)
     if hit is not None:
-        return int(hit)
+        try:
+            return int(hit)
+        except (TypeError, ValueError):
+            pass   # poisoned cache entry: fall through and re-probe
 
     def probe():
         key_ = jax.random.PRNGKey(0)
@@ -209,6 +237,51 @@ def tune_pull(n: int, d_ell: int, width: int, dtype, combine: str,
                 interpret=interpret))
             if best_t is None or t < best_t:
                 best, best_t = block_n, t
+        return best
+
+    best = _escaped(probe)
+    _cache_put(key, best)
+    return best
+
+
+def tune_pull_frontier(n: int, d_ell: int, rows: int, width: int, dtype,
+                       combine: str, msg: str,
+                       interpret: bool | None = None) -> int:
+    """Best ``block_r`` for a frontier pull of this shape. Keyed by the
+    compacted row capacity (= frontier density × n) on top of the usual
+    shape key: a 64-row BFS tail and a half-full frontier over the same
+    graph want different tiles, so they tune — and cache — separately."""
+    if interpret is None:
+        interpret = default_interpret()
+    cands = pull_frontier_candidates(n, rows)
+    if len(cands) == 1:
+        return cands[0]
+    key = _cache_key("pullf", interpret, (n, d_ell, rows), width, dtype,
+                     combine, msg)
+    hit = _cache_get(key)
+    if hit is not None:
+        try:
+            return int(hit)
+        except (TypeError, ValueError):
+            pass   # poisoned cache entry: fall through and re-probe
+
+    def probe():
+        from .ell_pull_frontier import ell_pull_frontier_pallas
+        key_ = jax.random.PRNGKey(2)
+        idx = jax.random.randint(key_, (n, d_ell), 0, n + 1, jnp.int32)
+        w = jnp.ones((n, d_ell), jnp.float32)
+        shape = (n + 1,) if width == 1 else (n + 1, width)
+        x = jnp.ones(shape, dtype)
+        rids = jax.random.permutation(
+            jax.random.fold_in(key_, 1), n)[:rows].astype(jnp.int32)
+        rids = jnp.pad(rids, (0, max(0, rows - n)), constant_values=n)
+        best, best_t = None, None
+        for block_r in cands:
+            t = _time(lambda b=block_r: ell_pull_frontier_pallas(
+                x, idx, w, rids, combine=combine, msg=msg, block_r=b,
+                interpret=interpret))
+            if best_t is None or t < best_t:
+                best, best_t = block_r, t
         return best
 
     best = _escaped(probe)
@@ -231,8 +304,11 @@ def tune_push(n: int, m: int, width: int, dtype, combine: str,
                      msg)
     hit = _cache_get(key)
     if hit is not None:
-        be, bn, strat = hit
-        return int(be), int(bn), str(strat)
+        try:
+            be, bn, strat = hit
+            return int(be), int(bn), str(strat)
+        except (TypeError, ValueError):
+            pass   # poisoned cache entry: fall through and re-probe
 
     def probe():
         key_ = jax.random.PRNGKey(1)

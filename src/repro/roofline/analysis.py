@@ -97,16 +97,21 @@ def kernel_roofline(direction: str, *, n: int, d_ell: int = 0,
     the HW terms, and reports ``pct_roofline = bound_us /
     measured_us`` — the fraction of the hardware bound actually
     achieved. ``pull`` is the ELL gather (``n × d_ell`` rectangular
-    layout); ``push`` is the two-phase bin reduce (``nb × cap`` padded
-    edge bins + per-bin run pointers + ``nb × bin_n`` accumulators).
-    The ratio is clamped to the schema's 1.5 ceiling — anything past
-    ~1.0 means timing noise, not physics.
+    layout); ``pullf`` the frontier-restricted gather over ``rows``
+    compacted destinations (pass the padded row capacity as ``n`` —
+    only those ELL rows are read and written); ``push`` is the
+    two-phase bin reduce (``nb × cap`` padded edge bins + per-bin run
+    pointers + ``nb × bin_n`` accumulators). The ratio is clamped to
+    the schema's 1.5 ceiling — anything past ~1.0 means timing noise,
+    not physics.
     """
-    if direction == "pull":
+    if direction in ("pull", "pullf"):
         bytes_moved = (n * d_ell * (4 + 4)              # ELL idx + w
                        + n * d_ell * batch * itemsize   # payload gather
                        + n * batch * itemsize)          # dst writes
         flops = n * d_ell * batch
+        if direction == "pullf":
+            bytes_moved += n * 4                        # compacted row ids
     else:
         bytes_moved = (nb * cap * (4 + 4 + 4)           # src / dst / w
                        + nb * cap * batch * itemsize    # payload gather

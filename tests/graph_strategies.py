@@ -1,0 +1,82 @@
+"""Shared random-graph strategies for the differential harness.
+
+One place defines the adversarial graph families every cross-backend
+test draws from, so new backends/kernels get the same gauntlet for
+free. Strategies use only the hypothesis subset the offline stand-in in
+``conftest.py`` implements (``integers``, ``sampled_from``, ``given``),
+so the suite runs identically with or without hypothesis installed —
+with it, profiles widen the draw; without it, ``given`` walks the
+cartesian product of the fixed samples.
+
+Each case targets a known kernel edge:
+
+  * ``ragged``          — heavy-hub in-degree skew (ELL padding waste,
+                          bin-plan imbalance)
+  * ``empty_rows``      — vertices with no in-edges (sentinel-only ELL
+                          rows must yield the combine identity)
+  * ``self_loops``      — i → i edges (gather index == write index)
+  * ``duplicate_edges`` — repeated (src, dst) pairs (combine must see
+                          every copy; dedup would change ``sum``)
+  * ``edgeless``        — m == 0 (degenerate layouts, empty bin plans)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+CASES = ("ragged", "empty_rows", "self_loops", "duplicate_edges",
+         "edgeless")
+
+
+def graph_cases():
+    from hypothesis import strategies as st
+    return st.sampled_from(CASES)
+
+
+def seeds(max_seed: int = 1):
+    from hypothesis import strategies as st
+    return st.integers(0, max_seed)
+
+
+def combines():
+    from hypothesis import strategies as st
+    return st.sampled_from(["sum", "min", "max"])
+
+
+def build_case(case: str, seed: int, n: int = 24):
+    """Materialize one adversarial graph, deterministically in
+    (case, seed, n)."""
+    from repro.graphs.structure import build_graph
+    rng = np.random.RandomState(1009 * seed + 131 * CASES.index(case))
+    if case == "edgeless":
+        src = np.zeros(0, dtype=np.int64)
+        dst = np.zeros(0, dtype=np.int64)
+    elif case == "ragged":
+        # one hub receives half of all edges; the rest spread thin
+        m = 4 * n
+        src = rng.randint(0, n, size=m)
+        dst = np.where(rng.rand(m) < 0.5, 0, rng.randint(0, n, size=m))
+    elif case == "empty_rows":
+        # in-edges land only on the first quarter of the vertex range:
+        # 3/4 of the ELL rows are all-sentinel
+        m = 3 * n
+        src = rng.randint(0, n, size=m)
+        dst = rng.randint(0, max(n // 4, 1), size=m)
+    elif case == "self_loops":
+        m = 2 * n
+        src = rng.randint(0, n, size=m)
+        dst = rng.randint(0, n, size=m)
+        loops = rng.choice(n, size=n // 3, replace=False)
+        src = np.concatenate([src, loops])
+        dst = np.concatenate([dst, loops])
+    elif case == "duplicate_edges":
+        m = 2 * n
+        src = rng.randint(0, n, size=m)
+        dst = rng.randint(0, n, size=m)
+        dup = rng.choice(m, size=m // 2, replace=True)
+        src = np.concatenate([src, src[dup], src[dup]])
+        dst = np.concatenate([dst, dst[dup], dst[dup]])
+    else:  # pragma: no cover - guarded by CASES
+        raise ValueError(case)
+    w = rng.uniform(0.5, 2.0, size=src.shape[0]).astype(np.float32)
+    return build_graph(src, dst, n=n, weights=w)

@@ -1,0 +1,128 @@
+"""Cross-backend differential harness (PR 8 gate).
+
+Property-based agreement of the relax primitive and of full ``solve``
+runs across every shared-memory backend, on the adversarial graph
+families from ``graph_strategies``. The three backends implement the
+same abstract k-relaxation over different memory layouts (dense segment
+ops, jnp ELL, Pallas kernels + frontier dispatch), so any divergence is
+a bug in exactly one of them — this harness is what gates new kernels
+like ``ell_pull_frontier_pallas`` landing on the hot path.
+
+Agreement policy: integer results (BFS levels, WCC labels) must match
+bit for bit; floating-point results agree to 1e-5 (the dense segment
+reduce and the ELL row reduce sum in different orders, so bit equality
+is only guaranteed within one layout — the frontier-vs-full-scan split
+*inside* PallasBackend is covered bit-exactly in
+``test_pull_frontier.py``).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from graph_strategies import build_case, combines, graph_cases, seeds
+
+from repro import api
+from repro.core.backend import DenseBackend, EllBackend, PallasBackend
+from repro.core.cost_model import zero_cost
+
+BACKENDS = {
+    "dense": DenseBackend(),
+    "ell": EllBackend(),
+    "pallas": PallasBackend(autotune=False),
+}
+POLICIES = ("push", "pull", "auto")
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_jit_caches():
+    """This module compiles hundreds of distinct engines (graph family ×
+    backend × policy × algorithm); free the executables afterwards so
+    the process-wide compile budget doesn't starve later modules."""
+    yield
+    jax.clear_caches()
+
+
+def _assert_agree(name, ref, got, atol=1e-5):
+    ref, got = np.asarray(ref), np.asarray(got)
+    assert ref.shape == got.shape, name
+    if ref.dtype.kind in "iub":
+        assert np.array_equal(ref, got), name
+    else:
+        assert np.allclose(ref, got, rtol=1e-5, atol=atol,
+                           equal_nan=True), name
+
+
+def _vectors(g, seed):
+    rng = np.random.RandomState(7 + seed)
+    values = jnp.asarray(rng.rand(g.n).astype(np.float32) + 0.5)
+    frontier = jnp.asarray(rng.rand(g.n) < 0.4)
+    touched = jnp.asarray(rng.rand(g.n) < 0.3)
+    return values, frontier, touched
+
+
+@given(case=graph_cases(), seed=seeds(), combine=combines())
+def test_relax_agrees_across_backends(case, seed, combine):
+    """backend.push / backend.pull produce the same combined messages
+    on every backend, for every combine, on every adversarial family —
+    including a masked touched set and touched=None (all rows)."""
+    g = build_case(case, seed)
+    values, frontier, touched = _vectors(g, seed)
+    for direction in ("push", "pull"):
+        outs = {}
+        for bname, backend in BACKENDS.items():
+            if direction == "push":
+                out, _ = backend.push(g, values, frontier, combine,
+                                      None, zero_cost())
+            else:
+                out, _ = backend.pull(g, values, touched, combine,
+                                      None, zero_cost())
+            outs[bname] = out
+        for bname in ("ell", "pallas"):
+            _assert_agree(f"{case}/{direction}/{combine}/{bname}",
+                          outs["dense"], outs[bname])
+    # pull over the full destination set (touched=None)
+    full = {b: k.pull(g, values, None, combine, None, zero_cost())[0]
+            for b, k in BACKENDS.items()}
+    for bname in ("ell", "pallas"):
+        _assert_agree(f"{case}/pull-all/{combine}/{bname}",
+                      full["dense"], full[bname])
+
+
+@given(case=graph_cases(), seed=seeds(),
+       algorithm=st.sampled_from(["bfs", "wcc", "pagerank"]))
+def test_solve_agrees_across_backends(case, seed, algorithm):
+    """Full solve runs agree across {dense, ell, pallas} × {push, pull,
+    auto} on the adversarial families — the end-to-end differential:
+    program logic + direction policy + backend dispatch."""
+    g = build_case(case, seed)
+    kw = {"root": seed % g.n} if algorithm == "bfs" else (
+        {"iters": 5} if algorithm == "pagerank" else {})
+    for policy in POLICIES:
+        states = {}
+        for bname, backend in BACKENDS.items():
+            r = api.solve(g, algorithm, policy=policy, backend=backend,
+                          **kw)
+            states[bname] = jax.tree_util.tree_leaves(r.state)
+        for bname in ("ell", "pallas"):
+            assert len(states[bname]) == len(states["dense"])
+            for ref, got in zip(states["dense"], states[bname]):
+                _assert_agree(f"{case}/{algorithm}/{policy}/{bname}",
+                              ref, got)
+
+
+def test_solve_policies_agree_within_backend():
+    """Directions are interchangeable implementations: push, pull and
+    auto must reach identical fixed points on the same backend."""
+    g = build_case("ragged", 0)
+    for bname, backend in BACKENDS.items():
+        ref = None
+        for policy in POLICIES:
+            r = api.solve(g, "bfs", root=0, policy=policy,
+                          backend=backend)
+            dist = np.asarray(r.state["dist"])
+            if ref is None:
+                ref = dist
+            assert np.array_equal(ref, dist), (bname, policy)

@@ -36,10 +36,19 @@ def test_kernels_page_covers_dispatch_surface():
     for needle in ("ell_spmv_pallas", "coo_push_pallas", "PallasBackend",
                    "build_push_plan", "bin_plan_traced",
                    "pa_regroup_by_dst", "classify_msg_fn", "tune.py",
-                   "fallback", "pct_roofline"):
+                   "fallback", "pct_roofline",
+                   # PR 8: the frontier-aware pull surface
+                   "ell_pull_frontier_pallas", "DualEllLayout",
+                   "touched_out_mask", "default_pull_cap",
+                   "predict_pull_scan", "frontier_rows"):
         assert needle in page, f"docs/kernels.md does not mention {needle}"
-    # the architecture backend table links here
-    assert "kernels.md" in (DOCS / "architecture.md").read_text()
+    # the architecture backend table links here, and the cost-model
+    # section documents the PR 8 StepStats/pricing additions
+    arch = (DOCS / "architecture.md").read_text()
+    assert "kernels.md" in arch
+    for needle in ("pull_touched_edges", "predict_pull_scan"):
+        assert needle in arch, (
+            f"docs/architecture.md does not mention {needle}")
 
 
 def test_distributed_page_covers_shard_surface():
@@ -201,10 +210,18 @@ def test_bench_kernels_json_covers_kernel_cells():
     cells = [r["derived"] for r in report["rows"]
              if r["name"].startswith("kernel_")]
     assert cells, "BENCH_kernels.json has no kernel_* rows"
-    assert {c["direction"] for c in cells} == {"push", "pull"}
+    assert {c["direction"] for c in cells} == {"push", "pull", "pullf"}
     assert "rmat" in {c["graph"] for c in cells}
     assert any(c["batch"] > 1 for c in cells)
     assert all(c["match"] for c in cells)
+    # the PR 8 wall-clock claim: on at least one sparse BFS-shaped
+    # touched set (≤10% density) the frontier kernel beats the
+    # full-scan kernel it replaced
+    pullf = [c for c in cells if c["direction"] == "pullf"]
+    assert pullf, "no kernel_pullf_* rows"
+    assert all(c["density"] <= 0.10 for c in pullf)
+    assert any(c["us_pallas"] < c["us_full_kernel"] for c in pullf), (
+        "frontier pull never beats the full-scan kernel")
 
 
 def test_bench_scaling_json_covers_shard_cells():
