@@ -106,8 +106,29 @@ def run():
                         "counters": r.cost.as_dict(),
                         "weighted_total": float(r.cost.weighted_total()),
                     }
+                    mis = _mispredict_pct(g, alg, pname, backend)
+                    if mis is not None:
+                        payload["mispredict_pct"] = mis
                     emit(f"pushpull_{alg}_{gname}_{pname}_{bname}", us,
                          json.dumps(payload))
+
+
+def _mispredict_pct(g, alg, pname, backend):
+    """One extra *observed* solve for auto-policy cells when the runner
+    is collecting a trace (``--trace-out``): the cell's decision audit
+    lands in the shared telemetry handle, and its misprediction rate
+    comes back as the row's ``mispredict_pct``. Timed runs above stay
+    telemetry-free, so this never perturbs the wall numbers."""
+    tel = common.TELEMETRY
+    if tel is None or pname != "auto":
+        return None
+    from repro import api
+    api.solve(g, alg, policy=pname, backend=backend,
+              telemetry=tel, **KWARGS[alg])
+    audits = tel.events_for(tel.last_run, "audit")
+    if not audits:
+        return None
+    return round(100.0 * audits[-1]["mispredict_rate"], 1)
 
 
 if __name__ == "__main__":

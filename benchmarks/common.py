@@ -21,6 +21,12 @@ SCALE = 1.0 / 256    # stand-in scale vs paper sizes (CPU container)
 # graphs to CI-sized instances (seconds, not minutes, per suite)
 SMOKE = False
 
+# set by `benchmarks.run --trace-out PATH`: a repro.obs.Telemetry handle
+# suites emit into (auto-policy cells run one extra observed solve so
+# the trace carries their decision audit; timed runs stay
+# telemetry-free so the numbers are untouched)
+TELEMETRY = None
+
 ROWS: list[str] = []
 # structured mirror of ROWS, consumed by `benchmarks.run --json PATH`
 RESULTS: list[dict] = []

@@ -1,0 +1,137 @@
+"""Diff two BENCH_*.json reports — the regression gate for the BENCH
+trajectory.
+
+    PYTHONPATH=src python -m benchmarks.compare OLD.json NEW.json \
+        [--fail-below 0.8] [--metric us_per_call]
+
+Rows are matched by ``name`` (the stable per-cell id every suite
+emits). For each shared row the tool prints ``speedup = old/new`` on
+the chosen metric (>1 = NEW is faster/cheaper), plus rows only one
+report has. ``--fail-below RATIO`` exits 1 when any shared cell's
+speedup drops under RATIO — e.g. ``--fail-below 0.8`` tolerates a 20%
+per-cell regression before failing the build.
+
+``--metric`` picks what to compare: ``us_per_call`` (default, wall
+clock) or any numeric key of the row's derived payload, dotted for
+nesting (``weighted_total``, ``counters.reads``). Cells missing the
+metric are listed and skipped, never silently dropped.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+__all__ = ["compare_reports", "main"]
+
+
+def _metric_value(row: dict, metric: str):
+    """The metric for one report row: ``us_per_call`` from the row
+    itself, anything else resolved (dotted) inside ``derived``."""
+    if metric == "us_per_call":
+        v = row.get("us_per_call")
+        return v if isinstance(v, (int, float)) else None
+    node = row.get("derived")
+    for part in metric.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node if isinstance(node, (int, float)) else None
+
+
+def compare_reports(old: dict, new: dict,
+                    metric: str = "us_per_call") -> dict:
+    """Structured diff of two reports: per-cell speedups (old/new) on
+    ``metric``, plus the rows only one side has or that lack the
+    metric."""
+    old_rows = {r["name"]: r for r in old.get("rows", [])}
+    new_rows = {r["name"]: r for r in new.get("rows", [])}
+    cells, skipped = [], []
+    for name in sorted(old_rows.keys() & new_rows.keys()):
+        ov = _metric_value(old_rows[name], metric)
+        nv = _metric_value(new_rows[name], metric)
+        if ov is None or nv is None:
+            skipped.append(name)
+            continue
+        # both zero = unchanged; a zero denominator otherwise means the
+        # new side became free — treat as a large win, never a crash
+        speedup = 1.0 if ov == nv else (ov / nv if nv else float("inf"))
+        cells.append({"name": name, "old": ov, "new": nv,
+                      "speedup": speedup})
+    return {"metric": metric, "cells": cells, "skipped": skipped,
+            "only_old": sorted(old_rows.keys() - new_rows.keys()),
+            "only_new": sorted(new_rows.keys() - old_rows.keys())}
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.4g}"
+
+
+def render_diff(diff: dict, threshold: float | None = None) -> str:
+    lines = [f"# BENCH diff · metric `{diff['metric']}` "
+             f"(speedup = old/new, >1 means NEW wins)", ""]
+    cells = sorted(diff["cells"], key=lambda c: c["speedup"])
+    if cells:
+        lines += ["| cell | old | new | speedup | |", "|---|--:|--:|--:|---|"]
+        for c in cells:
+            flag = ""
+            if threshold is not None and c["speedup"] < threshold:
+                flag = f"REGRESSION < {threshold}"
+            lines.append(f"| {c['name']} | {_fmt(c['old'])} "
+                         f"| {_fmt(c['new'])} | {c['speedup']:.2f} "
+                         f"| {flag} |")
+        lines.append("")
+        worst = cells[0]
+        best = cells[-1]
+        lines.append(f"{len(cells)} shared cells · worst "
+                     f"{worst['speedup']:.2f} ({worst['name']}) · best "
+                     f"{best['speedup']:.2f} ({best['name']}).")
+        lines.append("")
+    for key, label in (("skipped", "missing the metric"),
+                       ("only_old", "only in OLD"),
+                       ("only_new", "only in NEW")):
+        if diff[key]:
+            lines.append(f"- {len(diff[key])} cell(s) {label}: "
+                         + ", ".join(f"`{n}`" for n in diff[key][:8])
+                         + ("…" if len(diff[key]) > 8 else ""))
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.compare",
+        description="Diff two BENCH_*.json reports cell by cell.")
+    ap.add_argument("old", help="baseline report (e.g. the committed "
+                                "BENCH_pushpull.json)")
+    ap.add_argument("new", help="candidate report to judge")
+    ap.add_argument("--metric", default="us_per_call",
+                    help="us_per_call (default) or a dotted derived key "
+                         "(weighted_total, counters.reads, ...)")
+    ap.add_argument("--fail-below", type=float, default=None,
+                    metavar="RATIO",
+                    help="exit 1 if any shared cell's speedup (old/new) "
+                         "is below RATIO")
+    args = ap.parse_args(argv)
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    diff = compare_reports(old, new, metric=args.metric)
+    print(render_diff(diff, threshold=args.fail_below))
+    if not diff["cells"]:
+        print("no comparable cells — nothing to gate on",
+              file=sys.stderr)
+        return 1
+    if args.fail_below is not None:
+        bad = [c for c in diff["cells"]
+               if c["speedup"] < args.fail_below]
+        if bad:
+            print(f"FAIL: {len(bad)} cell(s) regressed below "
+                  f"{args.fail_below}", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised by subprocess
+    sys.exit(main())

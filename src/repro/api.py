@@ -316,7 +316,7 @@ def solve(g: Graph, algorithm: str, *,
           policy: Optional[DirectionPolicy | str] = None,
           backend: Optional[ExchangeBackend | str] = None,
           max_steps: Optional[int] = None,
-          trace: int | bool = 0, **kw) -> RunResult:
+          trace: int | bool = 0, telemetry=None, **kw) -> RunResult:
     """Run ``algorithm`` on ``g`` under a direction policy and an
     exchange backend.
 
@@ -337,6 +337,15 @@ def solve(g: Graph, algorithm: str, *,
         trace: record a per-step
             :class:`~repro.core.cost_model.StepTrace` on the result —
             an int capacity, or True for a default of 256 slots.
+        telemetry: a :class:`repro.obs.Telemetry` handle, or None
+            (default). With a handle, the run emits structured events
+            into it — per-step counter/prediction rows, a run summary,
+            and a direction-decision audit — and single-phase solves
+            route through the engine's host-driven stepwise loop so
+            each step also carries measured wall time (set
+            ``telemetry.step_timing = False`` to keep single-dispatch
+            execution). ``None`` is the untouched fast path:
+            bit-identical results, zero events, no obs import.
         **kw: algorithm-specific kwargs (``root``, ``source``, ``iters``,
             ``damp``, ``tol``, ...).
 
@@ -361,6 +370,9 @@ def solve(g: Graph, algorithm: str, *,
     backend = _resolve_backend(backend, g)
     trace_capacity = (_DEFAULT_TRACE_CAPACITY if trace is True
                       else int(trace))
+    if telemetry is not None and trace_capacity == 0:
+        # telemetry needs the in-loop StepTrace rows to audit against
+        trace_capacity = _DEFAULT_TRACE_CAPACITY
     static_kw = {k: v for k, v in kw.items() if k not in spec.runtime_keys}
 
     def build_engine() -> PushPullEngine:
@@ -384,17 +396,63 @@ def solve(g: Graph, algorithm: str, *,
          tuple(sorted(static_kw.items())),
          g.n, g.m, g.d_ell, max_steps, trace_capacity), build_engine)
     init_state, init_frontier = spec.init(g, **kw)
-    res = engine.run(g, init_state, init_frontier)
+    if telemetry is None:
+        res = engine.run(g, init_state, init_frontier)
+    else:
+        res = _solve_observed(telemetry, engine, g, init_state,
+                              init_frontier, algorithm=algorithm,
+                              policy=policy, backend=backend)
     return RunResult(state=spec.finalize(g, res.state), cost=res.cost,
                      steps=res.steps, push_steps=res.push_steps,
                      converged=res.converged, epochs=res.epochs,
                      trace=res.trace)
 
 
+def _solve_observed(tel, engine: PushPullEngine, g: Graph, init_state,
+                    init_frontier, *, algorithm: str,
+                    policy: DirectionPolicy, backend: ExchangeBackend):
+    """The telemetry glue behind ``solve(..., telemetry=...)``.
+
+    Runs the engine (stepwise + per-step host timing when the handle
+    asks for it and the program is single-phase), then folds the result
+    into the handle: step/run events via
+    :func:`repro.obs.metrics.record_solve`, the tuner's probe counters,
+    and a direction-decision ``audit`` event whenever the run produced
+    auditable step rows.
+    """
+    from .obs.metrics import collect_tuner, record_solve
+    from .obs.report import decision_audit
+
+    run = tel.new_run()
+    step_times: dict[int, float] = {}
+    t0 = tel.now_us()
+    with tel.span(f"solve:{algorithm}", run=run, algorithm=algorithm,
+                  policy=policy.name, backend=backend.name) as sp:
+        if tel.step_timing and engine.supports_stepwise:
+            res = engine.run_stepwise(
+                g, init_state, init_frontier,
+                on_step=lambda i, us: step_times.__setitem__(i, us))
+        else:
+            res = engine.run(g, init_state, init_frontier)
+            jax.block_until_ready(res.state)  # span times execution
+        sp["steps"] = int(res.steps)
+    record_solve(tel, algorithm=algorithm, policy=policy,
+                 backend=backend, result=res, run=run,
+                 step_times=step_times or None, t0_us=t0)
+    collect_tuner(tel)
+    audit = decision_audit(tel.events_for(run, "step"), run=run)
+    if audit is not None:
+        tel.emit("audit", run=run, basis=audit["basis"],
+                 audited_steps=audit["audited_steps"],
+                 flagged=audit["flagged"],
+                 mispredict_rate=audit["mispredict_rate"])
+    return res
+
+
 def solve_batch(g: Graph, algorithm: str, *, sources,
                 policy: Optional[DirectionPolicy | str] = None,
                 backend: Optional[ExchangeBackend | str] = None,
-                max_steps: Optional[int] = None, **kw):
+                max_steps: Optional[int] = None, telemetry=None, **kw):
     """Run one *batched* multi-query solve: B queries of ``algorithm``
     (one per entry of ``sources``) over one shared graph and backend.
 
@@ -423,7 +481,8 @@ def solve_batch(g: Graph, algorithm: str, *, sources,
     """
     from .service.batch import solve_batch as _solve_batch
     return _solve_batch(g, algorithm, sources=sources, policy=policy,
-                        backend=backend, max_steps=max_steps, **kw)
+                        backend=backend, max_steps=max_steps,
+                        telemetry=telemetry, **kw)
 
 
 # ---------------------------------------------------------------------

@@ -182,6 +182,14 @@ class ExchangeBackend:
     def name(self) -> str:
         return type(self).__name__
 
+    def telemetry_counters(self) -> dict:
+        """Backend-specific counters for :mod:`repro.obs` — dispatch
+        tallies, layout geometry, anything the backend accumulates that
+        a trace should surface under ``backend.<name>.*``. Values must
+        already be totals (the obs registry ``put``s, never re-adds).
+        Stateless backends report nothing."""
+        return {}
+
 
 @dataclasses.dataclass(frozen=True)
 class DenseBackend(ExchangeBackend):
@@ -469,6 +477,9 @@ class PallasBackend(EllBackend):
             return counter(g.m), counter(g.n)
         edges, verts, _, _ = self._pull_scan_stats(g, touched)
         return edges, verts
+
+    def telemetry_counters(self) -> dict:
+        return dict(self.stats)
 
     # -- ExchangeBackend ---------------------------------------------------
     def pull(self, g, values, touched, combine, msg_fn, cost):

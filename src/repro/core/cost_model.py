@@ -272,20 +272,34 @@ _B = lambda c: jnp.zeros((c,), bool)              # noqa: E731
 _C = lambda c: jnp.zeros((c,), counter_dtype())   # noqa: E731
 
 
+def _pred_dtype():
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
+_F = lambda c: jnp.zeros((c,), _pred_dtype())     # noqa: E731
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class StepTrace:
     """Fixed-capacity per-step record of what the engine actually did.
 
     One slot per executed step (across all phases and epochs, in order):
-    the chosen direction, the frontier statistics the decision saw, and
-    the step's *delta* of the four §4 memory counters. Rides through
+    the chosen direction, the frontier statistics the decision saw, the
+    cost model's *predicted* push/pull prices for the step (the two
+    numbers AutoSwitch compared — the decision-audit raw material), the
+    per-direction wire bytes the backend predicted, and the step's
+    *delta* of the four §4 memory counters. Rides through
     ``lax.while_loop`` carries, so capacity is static; steps beyond
-    capacity are dropped (``RunResult.steps`` still counts them).
+    capacity are dropped from the per-step columns but *counted* in the
+    ``overflow`` scalar, so a truncated trace is detectable
+    (``RunResult.steps`` still counts them too).
 
         >>> r = api.solve(g, "bfs", root=0, policy="auto", trace=64)
         >>> r.trace.as_dict(int(r.steps))["pushed"]   # doctest: +SKIP
         [True, True, False, False, True]
+        >>> int(r.trace.overflow)                     # doctest: +SKIP
+        0
     """
     pushed: jax.Array
     frontier_vertices: jax.Array
@@ -295,6 +309,12 @@ class StepTrace:
     writes: jax.Array
     atomics: jax.Array
     locks: jax.Array
+    predicted_push: jax.Array
+    predicted_pull: jax.Array
+    push_wire_bytes: jax.Array
+    pull_wire_bytes: jax.Array
+    # scalar: how many record() calls fell past capacity (dropped steps)
+    overflow: jax.Array
 
     @classmethod
     def empty(cls, capacity: int) -> "StepTrace":
@@ -302,15 +322,19 @@ class StepTrace:
                    frontier_edges=_C(capacity),
                    pull_touched_edges=_C(capacity), reads=_C(capacity),
                    writes=_C(capacity), atomics=_C(capacity),
-                   locks=_C(capacity))
+                   locks=_C(capacity), predicted_push=_F(capacity),
+                   predicted_pull=_F(capacity),
+                   push_wire_bytes=_C(capacity),
+                   pull_wire_bytes=_C(capacity), overflow=_I())
 
     @property
     def capacity(self) -> int:
         return self.pushed.shape[0]
 
-    def record(self, idx, pushed, stats: StepStats,
-               delta: Cost) -> "StepTrace":
-        """Write one step's record at ``idx`` (out-of-range drops)."""
+    def record(self, idx, pushed, stats: StepStats, delta: Cost,
+               predicted_push=0.0, predicted_pull=0.0) -> "StepTrace":
+        """Write one step's record at ``idx`` (out-of-range increments
+        ``overflow`` instead of writing)."""
         put = lambda arr, v: arr.at[idx].set(  # noqa: E731
             jnp.asarray(v, arr.dtype), mode="drop")
         return StepTrace(
@@ -323,14 +347,32 @@ class StepTrace:
             reads=put(self.reads, delta.reads),
             writes=put(self.writes, delta.writes),
             atomics=put(self.atomics, delta.atomics),
-            locks=put(self.locks, delta.locks))
+            locks=put(self.locks, delta.locks),
+            predicted_push=put(self.predicted_push, predicted_push),
+            predicted_pull=put(self.predicted_pull, predicted_pull),
+            push_wire_bytes=put(self.push_wire_bytes,
+                                stats.push_wire_bytes),
+            pull_wire_bytes=put(self.pull_wire_bytes,
+                                stats.pull_wire_bytes),
+            overflow=self.overflow + counter(idx >= self.capacity))
 
     def as_dict(self, steps: int = None) -> dict:
-        """Python-native view, trimmed to the first ``steps`` slots."""
+        """Python-native view, trimmed to the first ``steps`` slots.
+
+        Per-step columns become lists; the ``overflow`` scalar comes
+        through as a plain int (dropped-step count)."""
         k = self.capacity if steps is None else min(steps, self.capacity)
         out = {}
         for f in dataclasses.fields(self):
-            col = jax.device_get(getattr(self, f.name)[:k])
-            out[f.name] = [bool(x) if f.name == "pushed" else int(x)
-                           for x in col]
+            val = getattr(self, f.name)
+            if val.ndim == 0:                      # scalars: overflow
+                out[f.name] = int(val)
+                continue
+            col = jax.device_get(val[:k])
+            if f.name == "pushed":
+                out[f.name] = [bool(x) for x in col]
+            elif jnp.issubdtype(val.dtype, jnp.floating):
+                out[f.name] = [float(x) for x in col]
+            else:
+                out[f.name] = [int(x) for x in col]
         return out

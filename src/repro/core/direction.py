@@ -80,6 +80,18 @@ class DirectionPolicy:
         """
         return self.decide_push(g, frontier, stats.unvisited_edges)
 
+    def trace_predictor(self) -> CostPredictor:
+        """The cost model whose push/pull prices land in
+        :class:`~repro.core.cost_model.StepTrace` slots when tracing.
+
+        Policies that *are* predictor-driven (``AutoSwitch``) return
+        their own predictor, so traces audit the exact numbers the
+        decision compared; everything else gets a default-weight
+        :class:`CostPredictor`, so even Fixed/GS traces carry the
+        counterfactual prices the obs decision audit reports against.
+        """
+        return CostPredictor()
+
     @property
     def name(self) -> str:
         return type(self).__name__
@@ -190,6 +202,9 @@ class AutoSwitch(DirectionPolicy):
         """(predicted push cost, predicted pull cost) for this step."""
         return (self.predictor.predict_push(stats),
                 self.predictor.predict_pull(stats))
+
+    def trace_predictor(self) -> CostPredictor:
+        return self.predictor
 
     def decide(self, g, frontier, stats: StepStats):
         pp, pl = self.predict(stats)

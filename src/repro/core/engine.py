@@ -163,6 +163,10 @@ class EngineResult(NamedTuple):
     converged: jax.Array = jnp.bool_(True)
     epochs: jax.Array = jnp.int32(1)
     trace: Any = None            # StepTrace when trace_capacity > 0
+    # final backend exchange-carried state (e.g. the compression
+    # error-feedback accumulator); () for stateless backends — surfaced
+    # so telemetry can report compression residuals post-run
+    xstate: Any = ()
 
 
 class _Loop(NamedTuple):
@@ -229,9 +233,16 @@ class PushPullEngine:
             pull_touched_edges=pull_touched)
 
     # -- one phase: the classic fixed-point loop --------------------------
-    def _run_phase(self, g: Graph, phase: Phase, state0, frontier0, epoch,
-                   cost0: Cost, steps0, pushes0, trace0: StepTrace,
-                   xstate0=()):
+    def _phase_loop(self, g: Graph, phase: Phase, state0, frontier0,
+                    epoch, cost0: Cost, steps0, pushes0,
+                    trace0: StepTrace, xstate0=()):
+        """Build one phase's ``(cond, body, init)`` loop pieces.
+
+        ``_run_phase`` feeds them to ``lax.while_loop``;
+        :meth:`run_stepwise` instead jits ``body`` once and drives it
+        from the host, blocking between steps so telemetry can stamp
+        per-step wall times — same closures, same arithmetic, same
+        result."""
         prog = phase.program
         values_fn = prog.values_fn or (lambda g_, s, f: s)
         greedy = (isinstance(self.policy, GreedySwitch)
@@ -241,6 +252,7 @@ class PushPullEngine:
         fixed_dir = (self.policy.direction
                      if isinstance(self.policy, Fixed) else None)
         tracing = self.trace_capacity > 0
+        predictor = self.policy.trace_predictor() if tracing else None
 
         if phase.enter_fn is not None:
             state0, frontier0 = phase.enter_fn(g, state0, frontier0, epoch)
@@ -306,8 +318,10 @@ class PushPullEngine:
             trace = st.trace
             if tracing:
                 delta = jax.tree.map(lambda a, b: a - b, cost, st.cost)
-                trace = st.trace.record(steps0 + st.step, do_push, stats,
-                                        delta)
+                trace = st.trace.record(
+                    steps0 + st.step, do_push, stats, delta,
+                    predicted_push=predictor.predict_push(stats),
+                    predicted_pull=predictor.predict_pull(stats))
             return _Loop(state=state, frontier=frontier,
                          visited=st.visited | frontier, converged=conv,
                          handoff=handoff, step=st.step + 1, cost=cost,
@@ -322,8 +336,14 @@ class PushPullEngine:
                      cost=cost0, pushes=jnp.int32(0),
                      last_push=jnp.bool_(False), trace=trace0,
                      xstate=xstate0)
-        fin = jax.lax.while_loop(cond, body, init)
+        return cond, body, init
 
+    def _finish_phase(self, g: Graph, phase: Phase, fin: _Loop, steps0,
+                      pushes0):
+        """Post-loop phase epilogue: greedy tail hand-off and exit_fn."""
+        prog = phase.program
+        greedy = (isinstance(self.policy, GreedySwitch)
+                  and prog.tail_fn is not None)
         state, frontier, cost = fin.state, fin.frontier, fin.cost
         converged = fin.converged
         if greedy:
@@ -337,6 +357,15 @@ class PushPullEngine:
             state, frontier, cost = phase.exit_fn(g, state, frontier, cost)
         return (state, frontier, cost, steps0 + fin.step,
                 pushes0 + fin.pushes, converged, fin.trace, fin.xstate)
+
+    def _run_phase(self, g: Graph, phase: Phase, state0, frontier0, epoch,
+                   cost0: Cost, steps0, pushes0, trace0: StepTrace,
+                   xstate0=()):
+        cond, body, init = self._phase_loop(
+            g, phase, state0, frontier0, epoch, cost0, steps0, pushes0,
+            trace0, xstate0)
+        fin = jax.lax.while_loop(cond, body, init)
+        return self._finish_phase(g, phase, fin, steps0, pushes0)
 
     # -- the full program: phases under an epoch loop ---------------------
     @partial(jax.jit, static_argnames=("self",))
@@ -369,20 +398,22 @@ class PushPullEngine:
             return state, frontier, cost, steps, pushes, conv, trace, \
                 xstate
 
-        def result(state, cost, steps, pushes, converged, epochs, trace):
+        def result(state, cost, steps, pushes, converged, epochs, trace,
+                   xstate=()):
             return EngineResult(
                 state=state, cost=cost, steps=steps, push_steps=pushes,
                 converged=converged, epochs=epochs,
-                trace=trace if self.trace_capacity > 0 else None)
+                trace=trace if self.trace_capacity > 0 else None,
+                xstate=xstate)
 
         if max_epochs == 1 and epoch_cond is None:
             # single-epoch programs (the PR-1 algorithms) skip the outer
             # loop entirely — same trace as the old flat engine
-            state, frontier, cost, steps, pushes, conv, trace, _ = \
+            state, frontier, cost, steps, pushes, conv, trace, xs = \
                 run_epoch(init_state, init_frontier, jnp.int32(0), Cost(),
                           jnp.int32(0), jnp.int32(0), trace0, xstate0)
             return result(state, cost, steps, pushes, conv, jnp.int32(1),
-                          trace)
+                          trace, xs)
 
         def cond(carry):
             (state, frontier, epoch, cost, steps, pushes, conv,
@@ -404,7 +435,7 @@ class PushPullEngine:
         init = (init_state, init_frontier, jnp.int32(0), Cost(),
                 jnp.int32(0), jnp.int32(0), jnp.bool_(True), trace0,
                 xstate0)
-        state, frontier, epochs, cost, steps, pushes, conv, trace, _ = \
+        state, frontier, epochs, cost, steps, pushes, conv, trace, xs = \
             jax.lax.while_loop(cond, body, init)
         if epoch_cond is not None:
             # converged iff the work test (not the epoch bound) ended it
@@ -412,4 +443,67 @@ class PushPullEngine:
         else:
             converged = conv
         return result(state, cost, steps, pushes, converged, epochs,
-                      trace)
+                      trace, xs)
+
+    # -- host-driven stepwise execution (telemetry timing path) -----------
+    @property
+    def supports_stepwise(self) -> bool:
+        """True when :meth:`run_stepwise` can execute this program —
+        flat (single-phase, single-epoch) programs only."""
+        return not isinstance(self.program, PhaseProgram)
+
+    def run_stepwise(self, g: Graph, init_state: Any,
+                     init_frontier: jax.Array,
+                     on_step: Optional[Callable] = None) -> EngineResult:
+        """Run a flat program one step at a time from the host.
+
+        Semantically identical to :meth:`run` — the loop body is the
+        same closure ``_phase_loop`` hands to ``lax.while_loop``, jitted
+        once and called repeatedly — but the host blocks on every step
+        (``jax.block_until_ready``), so ``on_step(step_index,
+        wall_us)`` observes a real per-step wall time. This is the
+        telemetry timing path: the jitted-loop path cannot see host
+        timestamps at step boundaries from inside ``lax.while_loop``.
+
+        The same ops run in the same order, so results are bit-identical
+        to :meth:`run` (deterministic backends). Each call re-traces the
+        step body (one compile per call); use :meth:`run` when timing is
+        not needed.
+
+        Raises:
+            ValueError: for :class:`PhaseProgram` programs — their
+                epoch/phase structure runs under :meth:`run`.
+        """
+        if not self.supports_stepwise:
+            raise ValueError(
+                "run_stepwise executes flat (single-VertexProgram) "
+                "programs only; phase-structured programs run under "
+                "run() — check supports_stepwise before dispatching")
+        import time
+        phase = Phase(program=self.program, max_steps=self.max_steps)
+        trace0 = StepTrace.empty(self.trace_capacity)
+        xstate0 = self.backend.init_exchange_state(g)
+        cond, body, init = self._phase_loop(
+            g, phase, init_state, init_frontier, jnp.int32(0), Cost(),
+            jnp.int32(0), jnp.int32(0), trace0, xstate0)
+        body_j = jax.jit(body)
+        if on_step is not None and bool(cond(init)):
+            # pay tracing/compilation outside the timed loop (the body is
+            # pure, so a discarded warmup execution is free of effects) —
+            # otherwise step 0's wall time is dominated by the compile
+            # and the decision audit flags it spuriously
+            jax.block_until_ready(body_j(init))
+        st, i = init, 0
+        while bool(cond(st)):
+            t0 = time.perf_counter()
+            st = body_j(st)
+            jax.block_until_ready(st)
+            if on_step is not None:
+                on_step(i, (time.perf_counter() - t0) * 1e6)
+            i += 1
+        state, frontier, cost, steps, pushes, conv, trace, xs = \
+            self._finish_phase(g, phase, st, jnp.int32(0), jnp.int32(0))
+        return EngineResult(
+            state=state, cost=cost, steps=steps, push_steps=pushes,
+            converged=conv, epochs=jnp.int32(1),
+            trace=trace if self.trace_capacity > 0 else None, xstate=xs)

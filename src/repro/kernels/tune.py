@@ -105,6 +105,24 @@ _MEM_CACHE: dict[str, tuple] = {}
 _DISK: dict | None = None
 _LOCK = threading.Lock()
 
+# probe/cache outcome counters, exported to repro.obs as `tuner.*` —
+# the cheap answer to "did this run pay autotuning, or ride the cache?"
+_STATS = {"mem_hits": 0, "disk_hits": 0, "misses": 0, "probes": 0,
+          "writes": 0}
+
+
+def tune_stats() -> dict[str, int]:
+    """Snapshot of the process-wide tuner counters (copies, safe to
+    mutate)."""
+    with _LOCK:
+        return dict(_STATS)
+
+
+def clear_stats() -> None:
+    with _LOCK:
+        for k in _STATS:
+            _STATS[k] = 0
+
 
 def cache_dir() -> str:
     return os.environ.get(
@@ -154,19 +172,24 @@ def _cache_get(key: str):
     global _DISK
     with _LOCK:
         if key in _MEM_CACHE:
+            _STATS["mem_hits"] += 1
             return _MEM_CACHE[key]
         if _DISK is None:
             _DISK = _load_disk()
         hit = _DISK.get(key)
         if hit is not None:
+            _STATS["disk_hits"] += 1
             hit = tuple(hit) if isinstance(hit, list) else hit
             _MEM_CACHE[key] = hit
+        else:
+            _STATS["misses"] += 1
         return hit
 
 
 def _cache_put(key: str, value) -> None:
     global _DISK
     with _LOCK:
+        _STATS["writes"] += 1
         _MEM_CACHE[key] = value
         if _DISK is None:
             _DISK = {}
@@ -239,6 +262,8 @@ def tune_pull(n: int, d_ell: int, width: int, dtype, combine: str,
                 best, best_t = block_n, t
         return best
 
+    with _LOCK:
+        _STATS["probes"] += 1
     best = _escaped(probe)
     _cache_put(key, best)
     return best
@@ -284,6 +309,8 @@ def tune_pull_frontier(n: int, d_ell: int, rows: int, width: int, dtype,
                 best, best_t = block_r, t
         return best
 
+    with _LOCK:
+        _STATS["probes"] += 1
     best = _escaped(probe)
     _cache_put(key, best)
     return best
@@ -345,6 +372,8 @@ def tune_push(n: int, m: int, width: int, dtype, combine: str,
                 continue             # block_e; it won't close a 2x gap
         return best
 
+    with _LOCK:
+        _STATS["probes"] += 1
     best = _escaped(probe)
     _cache_put(key, best)
     return best

@@ -1,0 +1,44 @@
+"""repro.obs — unified telemetry: spans, counters, traces, reports.
+
+The observability layer every other subsystem emits into (the paper's
+method *is* measurement — §5/§6 argue push vs pull from hardware
+counters, and this package is where those counters become visible):
+
+  * :mod:`~repro.obs.trace`   — the :class:`Telemetry` handle: a
+    jit-aware span/timer API plus a bounded event ring. Zero-cost when
+    absent: ``api.solve(..., telemetry=None)`` takes the untouched
+    fast path.
+  * :mod:`~repro.obs.metrics` — the namespaced counter registry and the
+    collectors that unify engine ``StepTrace``/``Cost`` totals, backend
+    dispatch/fallback stats, sharded wire bytes and compression
+    residuals, autotuner probe outcomes, and ``QueryService`` stats.
+  * :mod:`~repro.obs.export`  — JSONL and Chrome-trace-event
+    (Perfetto-loadable) exporters, with the committed
+    ``benchmarks/obs_schema.json`` contract and a validator.
+  * :mod:`~repro.obs.report`  — ``python -m repro.obs.report`` renders
+    a markdown run report: the paper-style counter table and the
+    AutoSwitch decision audit (predicted push vs pull vs chosen vs
+    measured, mispredicted steps flagged).
+
+Typical use::
+
+    from repro.obs import Telemetry
+    tel = Telemetry()
+    r = api.solve(g, "bfs", root=0, policy="auto", telemetry=tel)
+    from repro.obs.export import write_jsonl, write_chrome_trace
+    write_jsonl(tel, "trace.jsonl")          # one event per line
+    write_chrome_trace(tel, "trace.json")    # open in ui.perfetto.dev
+"""
+
+from .export import (load_jsonl, validate_events, validate_trace_file,
+                     write_chrome_trace, write_jsonl)
+from .metrics import (MetricRegistry, collect_backend, collect_service,
+                      collect_tuner, record_solve)
+from .report import decision_audit, render_report
+from .trace import Telemetry
+
+__all__ = ["Telemetry", "MetricRegistry", "record_solve",
+           "collect_backend", "collect_service", "collect_tuner",
+           "write_jsonl", "write_chrome_trace", "load_jsonl",
+           "validate_events", "validate_trace_file", "decision_audit",
+           "render_report"]

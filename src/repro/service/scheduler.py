@@ -110,15 +110,23 @@ class QueryService:
             grow without bound. Evicted rids can no longer be polled.
         cache: a :class:`ResultCache`, or None for a fresh 256-entry
             one.
+        telemetry: a :class:`repro.obs.Telemetry` handle, or None. With
+            a handle the scheduler emits ``service.*`` events (submit
+            outcomes, batch starts, chunk spans, force-retires), serves
+            unbatchable queries with the same handle (so they carry
+            run/step events), and folds its :meth:`stats` into the
+            handle's counters every time a batch drains.
     """
 
     def __init__(self, g: Graph, *, slots: int = 8,
                  chunk_steps: int = 32,
                  max_chunks_per_query: int = 256,
                  max_records: int = 4096,
-                 cache: Optional[ResultCache] = None):
+                 cache: Optional[ResultCache] = None,
+                 telemetry=None):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
+        self.telemetry = telemetry
         self.g = g
         self.slots = slots
         self.chunk_steps = chunk_steps
@@ -139,6 +147,10 @@ class QueryService:
         self.batches_started = 0
         self.chunks_run = 0
         self.force_retired = 0
+
+    def _emit(self, name: str, **fields) -> None:
+        if self.telemetry is not None:
+            self.telemetry.emit("event", name, **fields)
 
     # -- submission ------------------------------------------------------
     def submit(self, algorithm: str, source: Optional[int] = None, *,
@@ -171,11 +183,13 @@ class QueryService:
         if hit is not None:
             rec.state, rec.converged = hit
             rec.cached = True
+            self._emit("service.cache_hit", rid=rid, algorithm=algorithm)
             return rid
         if ckey in self._inflight:                   # coalesce duplicates
             self._inflight[ckey].append(rid)
             self.coalesced += 1
             self._pending += 1
+            self._emit("service.coalesce", rid=rid, algorithm=algorithm)
             return rid
         self._inflight[ckey] = [rid]
         self._pending += 1
@@ -296,7 +310,8 @@ class QueryService:
                 params[_source_kwarg(algorithm)] = source
             try:
                 r = api.solve(self.g, algorithm, policy=policy,
-                              backend=backend, **params)
+                              backend=backend,
+                              telemetry=self.telemetry, **params)
             except Exception as e:            # bad cell / bad kwargs
                 self._fail(ckey, e)
                 return True
@@ -330,6 +345,8 @@ class QueryService:
             slot_chunks=[0] * width, step_bound=step_bound,
             slot_steps0=[0] * width)
         self.batches_started += 1
+        self._emit("service.batch_start", algorithm=algorithm,
+                   width=width)
         return True
 
     def _run_chunk(self) -> int:
@@ -339,6 +356,8 @@ class QueryService:
         # small bound (e.g. ppr iters=5) is enforced exactly; larger
         # bounds are enforced at chunk granularity (a query may run up
         # to chunk_steps-1 steps past its budget before retiring)
+        t0 = (self.telemetry.now_us() if self.telemetry is not None
+              else 0.0)
         try:
             res, done = run_chunk(
                 self.g, act.algorithm, act.width, state=act.state,
@@ -360,6 +379,14 @@ class QueryService:
         act.total_steps += int(res.epochs
                                if bspec.bound_unit == "epochs"
                                else res.steps)
+        if self.telemetry is not None:
+            # the int() above synced the chunk, so the span covers
+            # execution, not just dispatch
+            self.telemetry.emit(
+                "span", "service.chunk", ts_us=t0,
+                dur_us=round(self.telemetry.now_us() - t0, 3),
+                algorithm=act.algorithm, width=act.width,
+                steps=int(res.steps))
         done = np.asarray(done) | bool(res.converged)
         finished = 0
         queue = self._queues.get(act.group, deque())
@@ -383,6 +410,9 @@ class QueryService:
                              or consumed >= act.step_bound)
                 if exhausted and not done[i]:
                     self.force_retired += 1
+                    self._emit("service.force_retire",
+                               rid=act.slot_rids[i][0],
+                               algorithm=act.algorithm)
                 if done[i] or exhausted:
                     rid, ckey = act.slot_rids[i]
                     self._finish(ckey, act.algorithm,
@@ -402,4 +432,7 @@ class QueryService:
             self._queues.pop(act.group, None)
         if all(s is None for s in act.slot_rids):
             self._active = None
+            if self.telemetry is not None:
+                from ..obs.metrics import collect_service
+                collect_service(self.telemetry, self)
         return finished

@@ -106,6 +106,15 @@ class ShardedBackend(ExchangeBackend):
     def cut_edges(self) -> int:
         return self.topo.cut_edges
 
+    def telemetry_counters(self) -> dict:
+        """Shard geometry for obs traces: the facts the §6 wire-byte
+        charges are priced from (device count, the PA cut, padded row
+        count), plus whether compression is on."""
+        return {"num_shards": self.part.num_parts,
+                "cut_edges": self.cut_edges,
+                "n_padded": self.part.n_padded,
+                "compression": int(self.compression is not None)}
+
     def _pad(self, values: jax.Array, fill) -> jax.Array:
         extra = max(0, self.part.n_padded - values.shape[0])
         widths = ((0, extra),) + ((0, 0),) * (values.ndim - 1)

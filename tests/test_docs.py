@@ -17,7 +17,8 @@ DOCS = ROOT / "docs"
 
 def test_docs_tree_exists():
     for page in ("architecture.md", "push-pull.md", "algorithms.md",
-                 "kernels.md", "distributed.md", "results.md"):
+                 "kernels.md", "distributed.md", "observability.md",
+                 "results.md"):
         assert (DOCS / page).is_file(), f"missing docs/{page}"
 
 
@@ -25,7 +26,8 @@ def test_readme_links_docs():
     readme = (ROOT / "README.md").read_text()
     for page in ("docs/architecture.md", "docs/push-pull.md",
                  "docs/algorithms.md", "docs/kernels.md",
-                 "docs/distributed.md", "docs/results.md"):
+                 "docs/distributed.md", "docs/observability.md",
+                 "docs/results.md"):
         assert page in readme, f"README does not link {page}"
 
 
@@ -65,6 +67,24 @@ def test_distributed_page_covers_shard_surface():
             f"docs/distributed.md does not mention {needle}")
     # the architecture backend table links here
     assert "distributed.md" in (DOCS / "architecture.md").read_text()
+
+
+def test_observability_page_covers_obs_surface():
+    """docs/observability.md stays honest: the telemetry handle, the
+    collectors, the exporters, the audit, the bench wiring, and the
+    compare gate are all named."""
+    page = (DOCS / "observability.md").read_text()
+    for needle in ("Telemetry", "record_solve", "decision_audit",
+                   "obs_schema.json", "write_chrome_trace", "Perfetto",
+                   "--trace-out", "mispredict", "telemetry_counters",
+                   "StepTrace", "overflow", "compare.py", "--fail-below",
+                   "repro.obs.report", "MetricRegistry"):
+        assert needle in page, (
+            f"docs/observability.md does not mention {needle}")
+    # the architecture page names the telemetry layer and links here
+    arch = (DOCS / "architecture.md").read_text()
+    assert "observability.md" in arch
+    assert "repro.obs" in arch
 
 
 def test_every_registered_algorithm_documented():

@@ -1,0 +1,451 @@
+"""repro.obs — unified telemetry.
+
+Covers the tentpole surfaces: the Telemetry handle (span timing, event
+ring bounds), record_solve's counter fidelity (obs totals exactly equal
+the engine's §4 Cost charges — the no-double-count property test),
+wire-byte agreement with ``ShardedBackend.predict_comm_bytes`` (in
+process at P=1, in a fresh 4-device interpreter), the exporters
+(JSONL + schema validation + the committed ``benchmarks/obs_schema.json``
+contract, Chrome trace loadability), the decision-audit report, the
+``telemetry=None`` fast path (bit-identical results, zero events), the
+``StepTrace.record`` overflow counter, and the ``benchmarks/compare.py``
+regression gate.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from graph_strategies import build_case, graph_cases, seeds
+from repro import api
+from repro.core.engine import PushPullEngine
+from repro.graphs.generators import erdos_renyi, kronecker
+from repro.obs import Telemetry
+from repro.obs.export import (OBS_EVENT_SCHEMA, _final_events, load_jsonl,
+                              validate_events, validate_trace_file,
+                              write_chrome_trace, write_jsonl)
+from repro.obs.report import decision_audit, render_report
+from repro.shard import ShardedBackend
+
+
+def _graph():
+    return kronecker(8, edge_factor=8, seed=3)
+
+
+def _tree_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        bool(jnp.array_equal(x, y, equal_nan=True))
+        for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------
+# the disabled path: telemetry=None is the untouched solve
+
+def test_telemetry_none_bit_identical_and_zero_events():
+    g = _graph()
+    tel = Telemetry()
+    plain = api.solve(g, "bfs", root=0, policy="auto")
+    assert tel.events == [] and len(tel.counters) == 0
+    observed = api.solve(g, "bfs", root=0, policy="auto", telemetry=tel)
+    assert _tree_equal(plain.state, observed.state)
+    assert int(plain.cost.reads) == int(observed.cost.reads)
+    assert int(plain.cost.writes) == int(observed.cost.writes)
+    assert int(plain.steps) == int(observed.steps)
+    assert int(plain.push_steps) == int(observed.push_steps)
+    # and the handle now carries the run's events; a further plain
+    # solve adds none
+    n_events = len(tel.events)
+    assert n_events > 0
+    api.solve(g, "bfs", root=0, policy="auto")
+    assert len(tel.events) == n_events
+
+
+def test_stepwise_loop_matches_single_dispatch():
+    g = _graph()
+    spec = api.get_spec("bfs")
+    policy = api._resolve_policy("auto")
+    backend = api._resolve_backend(None, g)
+    program, default_steps = spec.build(g, policy=policy, backend=backend)
+    eng = PushPullEngine(program=program, policy=policy,
+                         max_steps=default_steps, backend=backend,
+                         trace_capacity=64)
+    state0, frontier0 = spec.init(g, root=0)
+    whole = eng.run(g, state0, frontier0)
+    times: dict[int, float] = {}
+    stepped = eng.run_stepwise(g, state0, frontier0,
+                               on_step=lambda i, us: times.__setitem__(i, us))
+    assert _tree_equal(whole.state, stepped.state)
+    assert int(whole.steps) == int(stepped.steps) == len(times)
+    assert int(whole.cost.reads) == int(stepped.cost.reads)
+    assert all(us > 0 for us in times.values())
+
+
+def test_stepwise_rejects_phase_programs():
+    g = _graph()
+    spec = api.get_spec("sssp_delta")
+    policy = api._resolve_policy("auto")
+    backend = api._resolve_backend(None, g)
+    program, default_steps = spec.build(g, policy=policy, backend=backend)
+    eng = PushPullEngine(program=program, policy=policy,
+                         max_steps=default_steps, backend=backend)
+    assert not eng.supports_stepwise
+    state0, frontier0 = spec.init(g, source=0)
+    with pytest.raises(ValueError, match="phase"):
+        eng.run_stepwise(g, state0, frontier0)
+
+
+def test_phase_program_solve_with_telemetry_still_audits():
+    # multi-phase programs can't run stepwise; the observed path falls
+    # back to single dispatch but still records step rows (no wall us)
+    g = _graph()
+    tel = Telemetry()
+    plain = api.solve(g, "sssp_delta", source=0, policy="auto")
+    observed = api.solve(g, "sssp_delta", source=0, policy="auto",
+                         telemetry=tel)
+    assert _tree_equal(plain.state, observed.state)
+    steps = [e for e in tel.events if e["kind"] == "step"]
+    assert steps and all("us" not in e for e in steps)
+    audits = [e for e in tel.events if e["kind"] == "audit"]
+    assert audits and audits[0]["basis"] == "predicted"
+
+
+# ---------------------------------------------------------------------
+# counter fidelity: obs totals == the engine's Cost charges, exactly
+
+@given(case=graph_cases(), seed=seeds())
+def test_step_counter_totals_match_cost(case, seed):
+    g = build_case(case, seed)
+    tel = Telemetry()
+    r = api.solve(g, "bfs", root=0, policy="auto", telemetry=tel)
+    run_ev = [e for e in tel.events if e["kind"] == "run"][-1]
+    steps = [e for e in tel.events if e["kind"] == "step"
+             and e["run"] == run_ev["run"]]
+    assert len(steps) == int(r.steps)
+    for key in ("reads", "writes", "atomics", "locks"):
+        assert sum(e[key] for e in steps) == int(getattr(r.cost, key)) \
+            == run_ev["counters"][key], key
+    assert tel.counters.get("engine.cost.reads") == int(r.cost.reads)
+    assert tel.counters.get("engine.steps") == int(r.steps)
+
+
+def test_counters_accumulate_without_double_count():
+    g = _graph()
+    tel = Telemetry()
+    r1 = api.solve(g, "bfs", root=0, telemetry=tel)
+    r2 = api.solve(g, "bfs", root=1, telemetry=tel)
+    assert tel.counters.get("engine.runs") == 2
+    assert tel.counters.get("engine.cost.reads") == \
+        int(r1.cost.reads) + int(r2.cost.reads)
+
+
+# ---------------------------------------------------------------------
+# wire bytes: trace columns == predict_comm_bytes == collective_bytes
+
+def _assert_wire_bytes_consistent(tel, cost_bytes: int):
+    steps = [e for e in tel.events if e["kind"] == "step"]
+    assert steps
+    charged = sum(e["push_wire_bytes"] if e["pushed"]
+                  else e["pull_wire_bytes"] for e in steps)
+    assert charged == cost_bytes
+
+
+def test_shard_wire_bytes_match_trace_single_device():
+    g = erdos_renyi(96, 6.0, seed=2)
+    backend = ShardedBackend.prepare(g, num_shards=1)
+    tel = Telemetry()
+    r = api.solve(g, "bfs", root=0, policy="auto", backend=backend,
+                  telemetry=tel)
+    # a single shard has no cut and gathers nothing: both directions
+    # price zero wire bytes, and the charge agrees exactly
+    pb, lb = backend.predict_comm_bytes(
+        g, jnp.zeros((g.n,), jnp.float32),
+        jnp.zeros((g.n,), bool).at[0].set(True))
+    assert int(pb) == 0 and int(lb) == 0
+    assert int(r.cost.collective_bytes) == 0
+    _assert_wire_bytes_consistent(tel, 0)
+    counters = backend.telemetry_counters()
+    assert counters["num_shards"] == 1 and counters["cut_edges"] == 0
+
+
+WIRE_P4 = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax.numpy as jnp
+from repro import api
+from repro.graphs.generators import erdos_renyi
+from repro.obs import Telemetry
+from repro.shard import ShardedBackend
+
+g = erdos_renyi(96, 6.0, seed=2)
+backend = ShardedBackend.prepare(g, num_shards=4)
+tel = Telemetry()
+r = api.solve(g, "bfs", root=0, policy="auto", backend=backend,
+              telemetry=tel)
+steps = [e for e in tel.events if e["kind"] == "step"]
+assert steps, "no step events"
+charged = sum(e["push_wire_bytes"] if e["pushed"]
+              else e["pull_wire_bytes"] for e in steps)
+assert charged == int(r.cost.collective_bytes), (
+    charged, int(r.cost.collective_bytes))
+assert charged > 0
+counters = backend.telemetry_counters()
+assert counters["num_shards"] == 4 and counters["cut_edges"] > 0
+print("WIRE-P4-OK")
+"""
+
+
+@pytest.mark.dist
+@pytest.mark.subprocess
+def test_shard_wire_bytes_match_trace_multi_device():
+    from pathlib import Path
+    import os
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", WIRE_P4],
+                          capture_output=True, text=True, timeout=900,
+                          env=env, cwd=str(root))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "WIRE-P4-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------
+# StepTrace overflow (satellite: record() used to drop silently)
+
+def test_trace_overflow_surfaced():
+    g = _graph()
+    tel = Telemetry()
+    r = api.solve(g, "bfs", root=0, policy="auto", trace=2,
+                  telemetry=tel)
+    assert int(r.steps) > 2
+    dropped = int(r.steps) - 2
+    assert int(r.trace.overflow) == dropped
+    assert r.trace.as_dict(int(r.steps))["overflow"] == dropped
+    run_ev = [e for e in tel.events if e["kind"] == "run"][-1]
+    assert run_ev["trace_overflow"] == dropped
+    report = render_report(_final_events(tel))
+    assert "Trace overflow" in report
+
+
+def test_trace_no_overflow_when_capacity_suffices():
+    g = _graph()
+    r = api.solve(g, "bfs", root=0, policy="auto", trace=64)
+    assert int(r.trace.overflow) == 0
+
+
+# ---------------------------------------------------------------------
+# the Telemetry handle itself
+
+def test_event_ring_bounded_and_counts_drops():
+    tel = Telemetry(capacity=4)
+    for _ in range(10):
+        tel.emit("event", "x")
+    assert len(tel.events) == 4 and tel.dropped == 6
+
+
+def test_span_records_duration_and_fields():
+    tel = Telemetry()
+    with tel.span("work", phase="test") as sp:
+        sp["extra"] = 1
+    (ev,) = tel.events
+    assert ev["kind"] == "span" and ev["name"] == "work"
+    assert ev["dur_us"] >= 0 and ev["phase"] == "test" and ev["extra"] == 1
+
+
+# ---------------------------------------------------------------------
+# exporters + schema
+
+def test_jsonl_round_trip_validates(tmp_path):
+    g = _graph()
+    tel = Telemetry()
+    api.solve(g, "bfs", root=0, policy="auto", telemetry=tel)
+    path = tmp_path / "trace.jsonl"
+    n = write_jsonl(tel, path)
+    assert validate_trace_file(path) == n
+    events = load_jsonl(path)
+    assert events[0]["kind"] == "meta"
+    kinds = {e["kind"] for e in events}
+    assert {"run", "step", "audit", "span", "counter"} <= kinds
+
+
+def test_chrome_trace_loads(tmp_path):
+    g = _graph()
+    tel = Telemetry()
+    api.solve(g, "bfs", root=0, policy="auto", telemetry=tel)
+    path = tmp_path / "trace.json"
+    write_chrome_trace(tel, path)
+    with open(path) as fh:
+        obj = json.load(fh)
+    evs = obj["traceEvents"]
+    assert evs and all("ph" in e and "pid" in e for e in evs)
+    # the timed steps are complete events Perfetto can lay out
+    xs = [e for e in evs if e["ph"] == "X" and e.get("cat") == "step"]
+    assert xs and all(e["dur"] > 0 and e["ts"] >= 0 for e in xs)
+
+
+def test_validate_events_rejects_bad_events():
+    ok = [{"ts_us": 0.0, "kind": "counter", "name": "x", "value": 1}]
+    assert validate_events(ok) == []
+    assert validate_events([{"ts_us": -1.0, "kind": "counter",
+                             "name": "x", "value": 1}])
+    assert validate_events([{"ts_us": 0.0, "kind": "nonsense"}])
+    assert validate_events([{"ts_us": 0.0, "kind": "run"}])  # missing keys
+    assert validate_events([{"kind": "counter", "name": "x", "value": 1}])
+
+
+def test_committed_obs_schema_in_sync():
+    from pathlib import Path
+    path = Path(__file__).resolve().parents[1] / "benchmarks" \
+        / "obs_schema.json"
+    with open(path) as fh:
+        committed = json.load(fh)
+    assert committed == OBS_EVENT_SCHEMA, (
+        "benchmarks/obs_schema.json drifted from "
+        "repro.obs.export.OBS_EVENT_SCHEMA — regenerate it with "
+        "json.dump(OBS_EVENT_SCHEMA, fh, indent=2)")
+
+
+# ---------------------------------------------------------------------
+# decision audit + report
+
+def test_decision_audit_wall_basis_flags_mispredictions():
+    steps = [
+        {"kind": "step", "run": 0, "step": 0, "pushed": True,
+         "predicted_push": 10.0, "predicted_pull": 100.0, "us": 50.0},
+        {"kind": "step", "run": 0, "step": 1, "pushed": False,
+         "predicted_push": 100.0, "predicted_pull": 10.0, "us": 50.0},
+        # chose push at 400us; pull predicted 10 -> ~50us at the pull
+        # rate: mispredicted
+        {"kind": "step", "run": 0, "step": 2, "pushed": True,
+         "predicted_push": 11.0, "predicted_pull": 10.0, "us": 400.0},
+    ]
+    audit = decision_audit(steps)
+    assert audit["basis"] == "wall"
+    assert audit["audited_steps"] == 3
+    assert [r["mispredict"] for r in audit["steps"]] == \
+        [False, False, True]
+    assert audit["flagged"] == 1
+    assert audit["mispredict_rate"] == pytest.approx(1 / 3)
+
+
+def test_decision_audit_predicted_basis_without_timings():
+    steps = [
+        {"kind": "step", "run": 0, "step": 0, "pushed": True,
+         "predicted_push": 5.0, "predicted_pull": 50.0},
+        {"kind": "step", "run": 0, "step": 1, "pushed": True,
+         "predicted_push": 50.0, "predicted_pull": 5.0},
+    ]
+    audit = decision_audit(steps)
+    assert audit["basis"] == "predicted"
+    assert audit["flagged"] == 1
+    assert decision_audit([]) is None
+
+
+def test_report_renders_audit_and_counter_table(tmp_path):
+    g = _graph()
+    tel = Telemetry()
+    api.solve(g, "bfs", root=0, policy="auto", telemetry=tel)
+    report = render_report(_final_events(tel))
+    assert "Counter totals" in report
+    assert "| reads | writes | atomics | locks |" in report
+    assert "Decision audit" in report
+    assert "steps\nmispredicted" in report.replace("\n", " ") \
+        or "mispredicted" in report
+    assert "wall basis" in report or "predicted basis" in report
+    # and the CLI module renders the same thing from a trace file
+    trace = tmp_path / "t.jsonl"
+    out = tmp_path / "report.md"
+    write_jsonl(tel, trace)
+    from repro.obs.report import main
+    assert main([str(trace), "--out", str(out)]) == 0
+    assert "Decision audit" in out.read_text()
+
+
+# ---------------------------------------------------------------------
+# batch + service + tuner wiring
+
+def test_solve_batch_telemetry_matches_plain():
+    g = _graph()
+    tel = Telemetry()
+    plain = api.solve_batch(g, "bfs", sources=[0, 5])
+    observed = api.solve_batch(g, "bfs", sources=[0, 5], telemetry=tel)
+    assert _tree_equal(plain.state, observed.state)
+    assert [e["kind"] for e in tel.events].count("run") == 1
+    assert any(e["kind"] == "step" for e in tel.events)
+
+
+def test_query_service_emits_events_and_counters():
+    from repro.service import QueryService
+    g = _graph()
+    tel = Telemetry()
+    svc = QueryService(g, slots=2, telemetry=tel)
+    rids = [svc.submit("bfs", source=s) for s in (0, 1, 0)]
+    svc.run_until_complete()
+    assert all(svc.poll(r) is not None for r in rids)
+    names = {e.get("name") for e in tel.events}
+    assert "service.coalesce" in names
+    assert "service.batch_start" in names
+    assert "service.chunk" in names
+    assert tel.counters.get("service.batches_started") >= 1
+    assert tel.counters.get("service.cache.misses") >= 1
+    assert validate_events(_final_events(tel)) == []
+
+
+def test_tuner_counters_collected():
+    from repro.kernels import tune
+    from repro.obs.metrics import collect_tuner
+    tel = Telemetry()
+    stats = collect_tuner(tel)
+    assert set(stats) == {"mem_hits", "disk_hits", "misses", "probes",
+                          "writes"}
+    assert tel.counters.get("tuner.probes") == stats["probes"]
+
+
+def test_backend_telemetry_counters_surface():
+    from repro.core.backend import DenseBackend, PallasBackend
+    assert DenseBackend().telemetry_counters() == {}
+    pb = PallasBackend()
+    assert set(pb.telemetry_counters()) == set(pb.stats)
+
+
+# ---------------------------------------------------------------------
+# benchmarks/compare.py (satellite: the BENCH regression gate)
+
+def _report(cells: dict) -> dict:
+    return {"rows": [{"name": k, "us_per_call": v,
+                      "derived": {"weighted_total": v * 2}}
+                     for k, v in cells.items()],
+            "failures": []}
+
+
+def test_compare_reports_speedups_and_gate(tmp_path):
+    from benchmarks.compare import compare_reports, main
+    old = _report({"a": 100.0, "b": 100.0, "only_old": 1.0})
+    new = _report({"a": 50.0, "b": 200.0, "only_new": 1.0})
+    diff = compare_reports(old, new)
+    by_name = {c["name"]: c for c in diff["cells"]}
+    assert by_name["a"]["speedup"] == pytest.approx(2.0)
+    assert by_name["b"]["speedup"] == pytest.approx(0.5)
+    assert diff["only_old"] == ["only_old"]
+    assert diff["only_new"] == ["only_new"]
+    # derived metrics resolve dotted
+    d2 = compare_reports(old, new, metric="weighted_total")
+    assert {c["name"] for c in d2["cells"]} == {"a", "b"}
+
+    po, pn = tmp_path / "old.json", tmp_path / "new.json"
+    po.write_text(json.dumps(old))
+    pn.write_text(json.dumps(new))
+    assert main([str(po), str(pn)]) == 0
+    assert main([str(po), str(pn), "--fail-below", "0.8"]) == 1
+    assert main([str(po), str(pn), "--fail-below", "0.4"]) == 0
