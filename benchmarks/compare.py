@@ -15,6 +15,14 @@ per-cell regression before failing the build.
 clock) or any numeric key of the row's derived payload, dotted for
 nesting (``weighted_total``, ``counters.reads``). Cells missing the
 metric are listed and skipped, never silently dropped.
+
+Metrics where *larger is better* (a kernel row's ``speedup`` over the
+jnp baseline, a throughput) need the ratio flipped: pass
+``--higher-is-better`` and the per-cell ratio becomes ``new/old``
+(still >1 = NEW wins), so ``--fail-below`` keeps its meaning — e.g.
+``--metric speedup --higher-is-better --fail-below 0.25`` fails when
+any cell's kernel speedup collapses to under a quarter of the
+committed trajectory's.
 """
 
 from __future__ import annotations
@@ -41,10 +49,12 @@ def _metric_value(row: dict, metric: str):
 
 
 def compare_reports(old: dict, new: dict,
-                    metric: str = "us_per_call") -> dict:
-    """Structured diff of two reports: per-cell speedups (old/new) on
-    ``metric``, plus the rows only one side has or that lack the
-    metric."""
+                    metric: str = "us_per_call",
+                    higher_is_better: bool = False) -> dict:
+    """Structured diff of two reports: per-cell speedups on ``metric``
+    (``old/new`` for cost-like metrics, ``new/old`` when
+    ``higher_is_better`` — either way >1 means NEW wins), plus the rows
+    only one side has or that lack the metric."""
     old_rows = {r["name"]: r for r in old.get("rows", [])}
     new_rows = {r["name"]: r for r in new.get("rows", [])}
     cells, skipped = [], []
@@ -54,12 +64,14 @@ def compare_reports(old: dict, new: dict,
         if ov is None or nv is None:
             skipped.append(name)
             continue
+        num, den = (nv, ov) if higher_is_better else (ov, nv)
         # both zero = unchanged; a zero denominator otherwise means the
-        # new side became free — treat as a large win, never a crash
-        speedup = 1.0 if ov == nv else (ov / nv if nv else float("inf"))
+        # winning side became free — treat as a large win, never a crash
+        speedup = 1.0 if ov == nv else (num / den if den else float("inf"))
         cells.append({"name": name, "old": ov, "new": nv,
                       "speedup": speedup})
     return {"metric": metric, "cells": cells, "skipped": skipped,
+            "higher_is_better": higher_is_better,
             "only_old": sorted(old_rows.keys() - new_rows.keys()),
             "only_new": sorted(new_rows.keys() - old_rows.keys())}
 
@@ -69,8 +81,9 @@ def _fmt(v: float) -> str:
 
 
 def render_diff(diff: dict, threshold: float | None = None) -> str:
+    ratio = "new/old" if diff.get("higher_is_better") else "old/new"
     lines = [f"# BENCH diff · metric `{diff['metric']}` "
-             f"(speedup = old/new, >1 means NEW wins)", ""]
+             f"(speedup = {ratio}, >1 means NEW wins)", ""]
     cells = sorted(diff["cells"], key=lambda c: c["speedup"])
     if cells:
         lines += ["| cell | old | new | speedup | |", "|---|--:|--:|--:|---|"]
@@ -110,14 +123,19 @@ def main(argv: list[str] | None = None) -> int:
                          "(weighted_total, counters.reads, ...)")
     ap.add_argument("--fail-below", type=float, default=None,
                     metavar="RATIO",
-                    help="exit 1 if any shared cell's speedup (old/new) "
+                    help="exit 1 if any shared cell's speedup "
                          "is below RATIO")
+    ap.add_argument("--higher-is-better", action="store_true",
+                    help="the metric is a win, not a cost: compare "
+                         "new/old instead of old/new so --fail-below "
+                         "still gates regressions")
     args = ap.parse_args(argv)
     with open(args.old) as f:
         old = json.load(f)
     with open(args.new) as f:
         new = json.load(f)
-    diff = compare_reports(old, new, metric=args.metric)
+    diff = compare_reports(old, new, metric=args.metric,
+                           higher_is_better=args.higher_is_better)
     print(render_diff(diff, threshold=args.fail_below))
     if not diff["cells"]:
         print("no comparable cells — nothing to gate on",

@@ -316,7 +316,9 @@ def solve(g: Graph, algorithm: str, *,
           policy: Optional[DirectionPolicy | str] = None,
           backend: Optional[ExchangeBackend | str] = None,
           max_steps: Optional[int] = None,
-          trace: int | bool = 0, telemetry=None, **kw) -> RunResult:
+          trace: int | bool = 0, telemetry=None,
+          check_finite=None, checkpoint_every: int = 0,
+          **kw) -> RunResult:
     """Run ``algorithm`` on ``g`` under a direction policy and an
     exchange backend.
 
@@ -346,6 +348,19 @@ def solve(g: Graph, algorithm: str, *,
             ``telemetry.step_timing = False`` to keep single-dispatch
             execution). ``None`` is the untouched fast path:
             bit-identical results, zero events, no obs import.
+        check_finite: enable the divergence guard — ``"nan"``/True
+            trips on NaN state, ``"all"`` additionally on ±Inf
+            (BFS/SSSP carry legitimate Inf sentinels, so ``"all"`` is
+            only for algorithms with finite state). Flat programs check
+            after every step (via the stepwise loop) and raise a
+            structured :class:`repro.resilience.DivergenceError` naming
+            the step; phase programs check the final state.
+        checkpoint_every: snapshot the loop carry every N steps (flat
+            programs only); an interrupted or faulted solve resumes
+            from the last checkpoint automatically — bounded resume
+            budget, bit-identical result — instead of restarting from
+            scratch. 0 (default) disables; the engine's fully-jitted
+            ``run`` path is used and nothing changes.
         **kw: algorithm-specific kwargs (``root``, ``source``, ``iters``,
             ``damp``, ``tol``, ...).
 
@@ -396,50 +411,117 @@ def solve(g: Graph, algorithm: str, *,
          tuple(sorted(static_kw.items())),
          g.n, g.m, g.d_ell, max_steps, trace_capacity), build_engine)
     init_state, init_frontier = spec.init(g, **kw)
+    if checkpoint_every and not engine.supports_stepwise:
+        raise ValueError(
+            f"checkpoint_every is supported for flat programs only; "
+            f"{algorithm!r} is phase-structured (its epoch/phase loop "
+            "runs fully jitted)")
+    guards = bool(check_finite) or checkpoint_every > 0
     if telemetry is None:
-        res = engine.run(g, init_state, init_frontier)
+        if guards and engine.supports_stepwise:
+            res = _run_stepwise_resilient(
+                engine, g, init_state, init_frontier,
+                check_finite=check_finite,
+                checkpoint_every=checkpoint_every)
+        else:
+            res = engine.run(g, init_state, init_frontier)
+            if check_finite:
+                # phase programs run fully jitted: the guard still
+                # refuses to hand back poisoned state, at run end
+                PushPullEngine._check_finite(res.state, check_finite,
+                                             int(res.steps))
     else:
         res = _solve_observed(telemetry, engine, g, init_state,
                               init_frontier, algorithm=algorithm,
-                              policy=policy, backend=backend)
+                              policy=policy, backend=backend,
+                              check_finite=check_finite,
+                              checkpoint_every=checkpoint_every)
     return RunResult(state=spec.finalize(g, res.state), cost=res.cost,
                      steps=res.steps, push_steps=res.push_steps,
                      converged=res.converged, epochs=res.epochs,
                      trace=res.trace)
 
 
+def _run_stepwise_resilient(engine: PushPullEngine, g: Graph,
+                            init_state, init_frontier, *, on_step=None,
+                            check_finite=None, checkpoint_every: int = 0,
+                            max_resumes: int = 4):
+    """Stepwise execution with checkpoint-resume: a transient failure
+    mid-loop (an injected ``engine.step`` fault, a flaky device) resumes
+    from the last snapshot — or restarts, when the failure predates the
+    first one; the replayed steps run the identical jitted body, so the
+    result is bit-identical to an uninterrupted run. ``max_resumes``
+    bounds *consecutive resumes without checkpoint progress*: a
+    recoverable fault pattern can interrupt a long solve arbitrarily
+    often as long as each resume advances the checkpoint, while a
+    permanent failure (no progress between interrupts) re-raises the
+    structured :class:`~repro.resilience.SolveInterrupted` after
+    ``max_resumes`` stalled attempts (``__cause__`` carries the
+    original error)."""
+    from .resilience import SolveInterrupted, note
+    ckpt = None
+    stalled = 0
+    while True:
+        try:
+            return engine.run_stepwise(
+                g, init_state, init_frontier, on_step=on_step,
+                check_finite=check_finite,
+                checkpoint_every=checkpoint_every, resume_from=ckpt)
+        except SolveInterrupted as e:
+            progressed = e.checkpoint is not None and (
+                ckpt is None or e.checkpoint.step > ckpt.step)
+            stalled = 0 if progressed else stalled + 1
+            if stalled > max_resumes:
+                raise
+            if e.checkpoint is not None:
+                ckpt = e.checkpoint
+            note("resume.engine.step", failed_step=e.step,
+                 resume_from=(ckpt.step if ckpt is not None else 0),
+                 stalled=stalled)
+
+
 def _solve_observed(tel, engine: PushPullEngine, g: Graph, init_state,
                     init_frontier, *, algorithm: str,
-                    policy: DirectionPolicy, backend: ExchangeBackend):
+                    policy: DirectionPolicy, backend: ExchangeBackend,
+                    check_finite=None, checkpoint_every: int = 0):
     """The telemetry glue behind ``solve(..., telemetry=...)``.
 
     Runs the engine (stepwise + per-step host timing when the handle
     asks for it and the program is single-phase), then folds the result
     into the handle: step/run events via
     :func:`repro.obs.metrics.record_solve`, the tuner's probe counters,
-    and a direction-decision ``audit`` event whenever the run produced
+    the resilience layer's fault/recovery counters and events, and a
+    direction-decision ``audit`` event whenever the run produced
     auditable step rows.
     """
-    from .obs.metrics import collect_tuner, record_solve
+    from .obs.metrics import collect_resilience, collect_tuner, record_solve
     from .obs.report import decision_audit
 
     run = tel.new_run()
     step_times: dict[int, float] = {}
     t0 = tel.now_us()
+    guards = bool(check_finite) or checkpoint_every > 0
     with tel.span(f"solve:{algorithm}", run=run, algorithm=algorithm,
                   policy=policy.name, backend=backend.name) as sp:
-        if tel.step_timing and engine.supports_stepwise:
-            res = engine.run_stepwise(
-                g, init_state, init_frontier,
-                on_step=lambda i, us: step_times.__setitem__(i, us))
+        if ((tel.step_timing or guards) and engine.supports_stepwise):
+            res = _run_stepwise_resilient(
+                engine, g, init_state, init_frontier,
+                on_step=(lambda i, us: step_times.__setitem__(i, us))
+                if tel.step_timing else None,
+                check_finite=check_finite,
+                checkpoint_every=checkpoint_every)
         else:
             res = engine.run(g, init_state, init_frontier)
             jax.block_until_ready(res.state)  # span times execution
+            if check_finite:
+                PushPullEngine._check_finite(res.state, check_finite,
+                                             int(res.steps))
         sp["steps"] = int(res.steps)
     record_solve(tel, algorithm=algorithm, policy=policy,
                  backend=backend, result=res, run=run,
                  step_times=step_times or None, t0_us=t0)
     collect_tuner(tel)
+    collect_resilience(tel)
     audit = decision_audit(tel.events_for(run, "step"), run=run)
     if audit is not None:
         tel.emit("audit", run=run, basis=audit["basis"],

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from ..graphs.structure import Graph
+from ..resilience import CircuitBreaker, fault_point, note
 from .cost_model import Cost, counter, counter_dtype
 from .direction import Direction
 from .primitives import (COMBINE_FNS, combine_identity, frontier_in_edges,
@@ -334,7 +335,18 @@ class PallasBackend(EllBackend):
         default_factory=lambda: {"kernel_pull": 0, "kernel_push": 0,
                                  "kernel_pull_frontier": 0,
                                  "skip_empty_pull": 0,
-                                 "fallback_pull": 0, "fallback_push": 0})
+                                 "fallback_pull": 0, "fallback_push": 0,
+                                 "fault_fallback_pull": 0,
+                                 "fault_fallback_push": 0,
+                                 "breaker_skip_pull": 0,
+                                 "breaker_skip_push": 0,
+                                 "breaker_open": 0})
+    # the degradation ladder's middle rung: a (kernel, shape) cell that
+    # keeps *failing* at dispatch (not merely unsupported) opens here
+    # and skips straight to the jnp fallback for a call-counted
+    # cooldown — see repro.resilience.breaker
+    breaker: CircuitBreaker = dataclasses.field(
+        default_factory=CircuitBreaker, repr=False)
     _tuned: dict = dataclasses.field(default_factory=dict, repr=False)
     _plans: dict = dataclasses.field(default_factory=dict, repr=False)
     _layouts: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -479,7 +491,23 @@ class PallasBackend(EllBackend):
         return edges, verts
 
     def telemetry_counters(self) -> dict:
-        return dict(self.stats)
+        out = dict(self.stats)
+        out.update({f"breaker_{k}": v
+                    for k, v in self.breaker.stats().items()})
+        return out
+
+    def _kernel_failed(self, cell, direction: str, exc) -> None:
+        """One rung down the ladder: count the failure, inform the
+        breaker, surface a resilience event. The caller then serves
+        this call from the jnp fallback."""
+        self.stats[f"fault_fallback_{direction}"] += 1
+        opened = self.breaker.record_failure(cell)
+        note(f"fallback.pallas.{direction}",
+             error=type(exc).__name__, cell=str(cell))
+        if opened:
+            self.stats["breaker_open"] += 1
+            note("breaker.open", cell=str(cell),
+                 cooldown=self.breaker.cooldown)
 
     # -- ExchangeBackend ---------------------------------------------------
     def pull(self, g, values, touched, combine, msg_fn, cost):
@@ -487,6 +515,25 @@ class PallasBackend(EllBackend):
         if mode is None:
             self.stats["fallback_pull"] += 1
             return super().pull(g, values, touched, combine, msg_fn, cost)
+        width = 1 if values.ndim == 1 else int(values.shape[-1])
+        cell = ("pull", g.n, g.d_ell, width, str(values.dtype), combine,
+                mode)
+        if not self.breaker.allow(cell):
+            self.stats["breaker_skip_pull"] += 1
+            return super().pull(g, values, touched, combine, msg_fn, cost)
+        try:
+            fault_point("pallas.pull")
+            out = self._pull_kernel(g, values, touched, combine, mode,
+                                    cost)
+        except Exception as exc:   # noqa: BLE001 — the ladder catches
+            # dispatch/trace-time kernel failure: degrade to the jnp
+            # path (identical semantics, full-scan pricing)
+            self._kernel_failed(cell, "pull", exc)
+            return super().pull(g, values, touched, combine, msg_fn, cost)
+        self.breaker.record_success(cell)
+        return out
+
+    def _pull_kernel(self, g, values, touched, combine, mode, cost):
         from ..graphs.structure import pad_values
         from ..kernels.ell_spmv import _out_dtype, ell_spmv_pallas
         width = 1 if values.ndim == 1 else values.shape[-1]
@@ -570,6 +617,25 @@ class PallasBackend(EllBackend):
             self.stats["fallback_push"] += 1
             return super().push(g, values, frontier, combine, msg_fn,
                                 cost)
+        width = 1 if values.ndim == 1 else int(values.shape[-1])
+        cell = ("push", g.n, g.m, width, str(values.dtype), combine,
+                mode)
+        if not self.breaker.allow(cell):
+            self.stats["breaker_skip_push"] += 1
+            return super().push(g, values, frontier, combine, msg_fn,
+                                cost)
+        try:
+            fault_point("pallas.push")
+            out = self._push_kernel(g, values, frontier, combine, mode,
+                                    cost)
+        except Exception as exc:   # noqa: BLE001 — the ladder catches
+            self._kernel_failed(cell, "push", exc)
+            return super().push(g, values, frontier, combine, msg_fn,
+                                cost)
+        self.breaker.record_success(cell)
+        return out
+
+    def _push_kernel(self, g, values, frontier, combine, mode, cost):
         from ..kernels.coo_push import (bin_plan_traced, coo_push_pallas,
                                         default_bin_cap)
         self.stats["kernel_push"] += 1

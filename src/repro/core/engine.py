@@ -74,7 +74,17 @@ from .direction import Direction, DirectionPolicy, Fixed, GreedySwitch
 from .primitives import frontier_in_edges, frontier_out_edges, k_filter
 
 __all__ = ["VertexProgram", "Phase", "PhaseProgram", "PushPullEngine",
-           "EngineResult"]
+           "EngineResult", "Checkpoint"]
+
+
+class Checkpoint(NamedTuple):
+    """A stepwise solve's resumable snapshot: the full loop carry after
+    ``step`` completed steps. The carry is a device pytree — holding it
+    is a reference, not a copy — and resuming re-enters the identical
+    jitted body, so a resumed run is bit-identical to an uninterrupted
+    one."""
+    step: int
+    carry: Any
 
 
 @dataclasses.dataclass(frozen=True)
@@ -452,9 +462,33 @@ class PushPullEngine:
         flat (single-phase, single-epoch) programs only."""
         return not isinstance(self.program, PhaseProgram)
 
+    @staticmethod
+    def _check_finite(state: Any, mode, step: int) -> None:
+        """Abort on non-finite float state: ``mode`` ``"nan"`` trips on
+        NaN only (the default — BFS/SSSP legitimately carry ±Inf
+        sentinels), ``"all"``/True on NaN or ±Inf. Raises the
+        structured :class:`repro.resilience.DivergenceError` naming the
+        step, instead of burning the remaining ``max_steps`` budget on
+        poisoned values."""
+        from ..resilience import DivergenceError
+        strict = mode in ("all", True)
+        for leaf in jax.tree_util.tree_leaves(state):
+            if not (hasattr(leaf, "dtype")
+                    and jnp.issubdtype(leaf.dtype, jnp.floating)):
+                continue
+            bad = (not bool(jnp.isfinite(leaf).all()) if strict
+                   else bool(jnp.isnan(leaf).any()))
+            if bad:
+                raise DivergenceError(
+                    step=step, mode="all" if strict else "nan")
+
     def run_stepwise(self, g: Graph, init_state: Any,
                      init_frontier: jax.Array,
-                     on_step: Optional[Callable] = None) -> EngineResult:
+                     on_step: Optional[Callable] = None,
+                     check_finite=None,
+                     checkpoint_every: int = 0,
+                     resume_from: Optional[Checkpoint] = None
+                     ) -> EngineResult:
         """Run a flat program one step at a time from the host.
 
         Semantically identical to :meth:`run` — the loop body is the
@@ -465,6 +499,19 @@ class PushPullEngine:
         telemetry timing path: the jitted-loop path cannot see host
         timestamps at step boundaries from inside ``lax.while_loop``.
 
+        The host loop is also where the resilience guards live:
+
+        * ``check_finite``: ``"nan"``/True/``"all"`` enables the
+          divergence detector (:meth:`_check_finite`) after every step.
+        * ``checkpoint_every=N``: snapshot the loop carry every N
+          completed steps. A failure mid-loop (an injected
+          ``engine.step`` fault, a poisoned device buffer) then raises
+          :class:`~repro.resilience.SolveInterrupted` carrying the last
+          :class:`Checkpoint` instead of losing the run.
+        * ``resume_from``: re-enter the loop from a checkpoint; the
+          remaining steps replay the identical jitted body, so the
+          final result is bit-identical to an uninterrupted run.
+
         The same ops run in the same order, so results are bit-identical
         to :meth:`run` (deterministic backends). Each call re-traces the
         step body (one compile per call); use :meth:`run` when timing is
@@ -473,6 +520,9 @@ class PushPullEngine:
         Raises:
             ValueError: for :class:`PhaseProgram` programs — their
                 epoch/phase structure runs under :meth:`run`.
+            DivergenceError: ``check_finite`` tripped.
+            SolveInterrupted: the loop died with ``checkpoint_every``
+                set (or on an injected ``engine.step`` fault).
         """
         if not self.supports_stepwise:
             raise ValueError(
@@ -480,6 +530,9 @@ class PushPullEngine:
                 "programs only; phase-structured programs run under "
                 "run() — check supports_stepwise before dispatching")
         import time
+
+        from ..resilience import (DivergenceError, SolveInterrupted,
+                                  fault_point)
         phase = Phase(program=self.program, max_steps=self.max_steps)
         trace0 = StepTrace.empty(self.trace_capacity)
         xstate0 = self.backend.init_exchange_state(g)
@@ -487,20 +540,38 @@ class PushPullEngine:
             g, phase, init_state, init_frontier, jnp.int32(0), Cost(),
             jnp.int32(0), jnp.int32(0), trace0, xstate0)
         body_j = jax.jit(body)
-        if on_step is not None and bool(cond(init)):
+        st, i = init, 0
+        last_ckpt = resume_from
+        if resume_from is not None:
+            st, i = resume_from.carry, resume_from.step
+        if on_step is not None and bool(cond(st)):
             # pay tracing/compilation outside the timed loop (the body is
             # pure, so a discarded warmup execution is free of effects) —
             # otherwise step 0's wall time is dominated by the compile
             # and the decision audit flags it spuriously
-            jax.block_until_ready(body_j(init))
-        st, i = init, 0
-        while bool(cond(st)):
-            t0 = time.perf_counter()
-            st = body_j(st)
-            jax.block_until_ready(st)
-            if on_step is not None:
-                on_step(i, (time.perf_counter() - t0) * 1e6)
+            jax.block_until_ready(body_j(st))
+        while True:
+            try:
+                fault_point("engine.step")
+                if not bool(cond(st)):
+                    break
+                t0 = time.perf_counter()
+                nxt = body_j(st)
+                jax.block_until_ready(nxt)
+                dt_us = (time.perf_counter() - t0) * 1e6
+            except (DivergenceError, SolveInterrupted):
+                raise
+            except Exception as exc:  # noqa: BLE001 — resumable seam
+                raise SolveInterrupted(step=i,
+                                       checkpoint=last_ckpt) from exc
+            st = nxt
             i += 1
+            if check_finite:
+                self._check_finite(st.state, check_finite, i - 1)
+            if checkpoint_every and i % checkpoint_every == 0:
+                last_ckpt = Checkpoint(step=i, carry=st)
+            if on_step is not None:
+                on_step(i - 1, dt_us)
         state, frontier, cost, steps, pushes, conv, trace, xs = \
             self._finish_phase(g, phase, st, jnp.int32(0), jnp.int32(0))
         return EngineResult(

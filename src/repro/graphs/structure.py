@@ -124,13 +124,38 @@ def build_graph(src, dst, n: int, weights=None, d_ell: Optional[int] = None,
 
     ``d_ell`` may be given to force a specific (e.g. tile-aligned) padded
     width; otherwise max in-degree rounded up to ``pad_rows_to``.
+
+    Edge endpoints must lie in ``[0, n)`` and weights must be finite;
+    violations raise ``ValueError`` naming the first offending edge.
+    (An out-of-range endpoint would otherwise corrupt the CSR pointer
+    build silently; a NaN/Inf weight poisons every distance it touches.)
     """
     src = _to_i32(src)
     dst = _to_i32(dst)
     m = int(src.shape[0])
+    if dst.shape != src.shape:
+        raise ValueError(
+            f"build_graph: src has {m} edges but dst has "
+            f"{int(dst.shape[0])} — the COO views must be aligned")
+    for name, arr in (("src", src), ("dst", dst)):
+        if m and (arr.min() < 0 or arr.max() >= n):
+            bad = int(np.flatnonzero((arr < 0) | (arr >= n))[0])
+            raise ValueError(
+                f"build_graph: {name}[{bad}] = {int(arr[bad])} is "
+                f"outside the vertex range [0, {n}) — every edge "
+                f"endpoint must name an existing vertex")
     if weights is None:
         weights = np.ones(m, dtype=np.float32)
     w = np.asarray(weights, dtype=np.float32)
+    if w.shape != (m,):
+        raise ValueError(
+            f"build_graph: weights shape {w.shape} does not match the "
+            f"{m} edges")
+    if m and not np.isfinite(w).all():
+        bad = int(np.flatnonzero(~np.isfinite(w))[0])
+        raise ValueError(
+            f"build_graph: weights[{bad}] = {w[bad]} is not finite — "
+            f"NaN/Inf edge weights are rejected at construction")
 
     # pull-major: sort by dst (stable keeps generator order within a row)
     order = np.argsort(dst, kind="stable")

@@ -38,6 +38,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from ..resilience import FaultInjected, ProbeTimeout, fault_point, note
 from .coo_push import build_push_plan, coo_push_pallas
 from .ell_spmv import default_interpret, ell_spmv_pallas
 
@@ -107,8 +108,11 @@ _LOCK = threading.Lock()
 
 # probe/cache outcome counters, exported to repro.obs as `tuner.*` —
 # the cheap answer to "did this run pay autotuning, or ride the cache?"
+# plus the resilience tail: probe retries/timeouts/failures and how
+# often the tuner degraded to the default candidate
 _STATS = {"mem_hits": 0, "disk_hits": 0, "misses": 0, "probes": 0,
-          "writes": 0}
+          "writes": 0, "write_errors": 0, "probe_retries": 0,
+          "probe_timeouts": 0, "probe_failures": 0, "probe_degraded": 0}
 
 
 def tune_stats() -> dict[str, int]:
@@ -161,9 +165,10 @@ def _load_disk() -> dict:
     serving, and the next ``_cache_put`` atomically rewrites a valid
     file over the corpse."""
     try:
+        fault_point("tune.cache.load")
         with open(_cache_path()) as f:
             data = json.load(f)
-    except (OSError, ValueError):
+    except (OSError, ValueError, FaultInjected):
         return {}
     return data if isinstance(data, dict) else {}
 
@@ -196,13 +201,16 @@ def _cache_put(key: str, value) -> None:
         _DISK[key] = list(value) if isinstance(value, tuple) else value
         path = _cache_path()
         try:
+            fault_point("tune.cache.write")
             os.makedirs(os.path.dirname(path), exist_ok=True)
             tmp = f"{path}.{os.getpid()}.tmp"
             with open(tmp, "w") as f:
                 json.dump(_DISK, f, indent=0, sort_keys=True)
             os.replace(tmp, path)
-        except OSError:
-            pass  # unwritable home: the in-memory tier still serves
+        except (OSError, FaultInjected):
+            # unwritable home (or an injected disk fault): the
+            # in-memory tier still serves
+            _STATS["write_errors"] += 1
 
 
 def _time(fn, *args) -> float:
@@ -215,18 +223,70 @@ def _time(fn, *args) -> float:
 # Probes run while the backend is being traced into an engine loop, and
 # JAX's trace context is ambient (thread-local): any op issued here —
 # even on concrete arrays — would be spliced into the engine's jaxpr
-# instead of executing. A single worker thread has no ambient trace, so
-# candidates execute (and are timed) for real.
-_EXECUTOR = None
+# instead of executing. A fresh thread has no ambient trace, so
+# candidates execute (and are timed) for real. One daemon thread per
+# probe (probes are once-per-shape rare) so a *hung* probe can be
+# abandoned at the deadline without wedging later probes or process
+# exit — a shared worker would stay stuck behind the corpse.
 
 
-def _escaped(fn):
-    global _EXECUTOR
-    if _EXECUTOR is None:
-        from concurrent.futures import ThreadPoolExecutor
-        _EXECUTOR = ThreadPoolExecutor(max_workers=1,
-                                       thread_name_prefix="kernel-tune")
-    return _EXECUTOR.submit(fn).result()
+def _escaped(fn, deadline=None, kernel: str = "?"):
+    box: dict = {}
+
+    def run():
+        try:
+            box["value"] = fn()
+        except BaseException as e:  # noqa: BLE001 — re-raised below
+            box["error"] = e
+
+    t = threading.Thread(target=run, name="kernel-tune", daemon=True)
+    t.start()
+    t.join(deadline)
+    if t.is_alive():
+        raise ProbeTimeout(kernel, deadline)
+    if "error" in box:
+        raise box["error"]
+    return box["value"]
+
+
+def _probe_deadline_s() -> float:
+    return float(os.environ.get("REPRO_TUNE_DEADLINE_S", "120"))
+
+
+def _probe_retries() -> int:
+    return int(os.environ.get("REPRO_TUNE_RETRIES", "2"))
+
+
+def _probe_guarded(kernel: str, probe, default):
+    """Run ``probe`` off-thread under the wall deadline with bounded
+    retry-with-backoff; returns ``(winner, probed)``. Exhausted
+    attempts degrade to ``default`` (``probed=False`` — the caller must
+    NOT persist it, so a healthy later run re-probes)."""
+    deadline, retries = _probe_deadline_s(), _probe_retries()
+
+    def attempt_fn():
+        fault_point("tune.probe")
+        return probe()
+
+    for attempt in range(retries + 1):
+        try:
+            return _escaped(attempt_fn, deadline=deadline,
+                            kernel=kernel), True
+        except Exception as e:   # noqa: BLE001 — chaos/flake seam
+            timed_out = isinstance(e, ProbeTimeout)
+            with _LOCK:
+                _STATS["probe_timeouts" if timed_out
+                       else "probe_failures"] += 1
+            if attempt < retries:
+                with _LOCK:
+                    _STATS["probe_retries"] += 1
+                note("retry.tune.probe", kernel=kernel,
+                     attempt=attempt + 1, error=type(e).__name__)
+                time.sleep(min(0.02 * (2 ** attempt), 0.5))
+    with _LOCK:
+        _STATS["probe_degraded"] += 1
+    note("degraded.tune.probe", kernel=kernel, default=str(default))
+    return default, False
 
 
 def tune_pull(n: int, d_ell: int, width: int, dtype, combine: str,
@@ -264,8 +324,9 @@ def tune_pull(n: int, d_ell: int, width: int, dtype, combine: str,
 
     with _LOCK:
         _STATS["probes"] += 1
-    best = _escaped(probe)
-    _cache_put(key, best)
+    best, probed = _probe_guarded("pull", probe, cands[0])
+    if probed:
+        _cache_put(key, best)
     return best
 
 
@@ -311,8 +372,9 @@ def tune_pull_frontier(n: int, d_ell: int, rows: int, width: int, dtype,
 
     with _LOCK:
         _STATS["probes"] += 1
-    best = _escaped(probe)
-    _cache_put(key, best)
+    best, probed = _probe_guarded("pullf", probe, cands[0])
+    if probed:
+        _cache_put(key, best)
     return best
 
 
@@ -374,6 +436,7 @@ def tune_push(n: int, m: int, width: int, dtype, combine: str,
 
     with _LOCK:
         _STATS["probes"] += 1
-    best = _escaped(probe)
-    _cache_put(key, best)
+    best, probed = _probe_guarded("push", probe, cands[0])
+    if probed:
+        _cache_put(key, best)
     return best

@@ -32,13 +32,14 @@ Typical use::
 
 from .export import (load_jsonl, validate_events, validate_trace_file,
                      write_chrome_trace, write_jsonl)
-from .metrics import (MetricRegistry, collect_backend, collect_service,
+from .metrics import (MetricRegistry, collect_backend,
+                      collect_resilience, collect_service,
                       collect_tuner, record_solve)
 from .report import decision_audit, render_report
 from .trace import Telemetry
 
 __all__ = ["Telemetry", "MetricRegistry", "record_solve",
            "collect_backend", "collect_service", "collect_tuner",
-           "write_jsonl", "write_chrome_trace", "load_jsonl",
-           "validate_events", "validate_trace_file", "decision_audit",
-           "render_report"]
+           "collect_resilience", "write_jsonl", "write_chrome_trace",
+           "load_jsonl", "validate_events", "validate_trace_file",
+           "decision_audit", "render_report"]

@@ -9,9 +9,14 @@ One schema for every number the repo already computes but scatters:
         skip_empty_pull / fallback_pull / fallback_push
     backend.shard.push_wire_bytes / pull_wire_bytes /
         compression_residual_l1
-    tuner.mem_hits / disk_hits / misses / probes / writes
-    service.coalesced / batches_started / chunks_run / force_retired
+    tuner.mem_hits / disk_hits / misses / probes / writes /
+        probe_retries / probe_timeouts / probe_degraded
+    service.coalesced / batches_started / chunks_run / force_retired /
+        chunk_retries / deadline_expired / admission_rejected
     service.cache.hits / misses / puts / evictions
+    resilience.injected.<site> / fallback.* / retry.* / timeout.* /
+        degraded.* / breaker.* / resume.*   — fault-injection outcomes
+        and what each recovery seam did about them
 
 Counters are **monotone totals across a Telemetry handle's lifetime**;
 per-run values live in the ``run``/``step`` events the same collectors
@@ -31,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["MetricRegistry", "record_solve", "collect_backend",
-           "collect_tuner", "collect_service"]
+           "collect_tuner", "collect_service", "collect_resilience"]
 
 
 class MetricRegistry:
@@ -168,6 +173,28 @@ def collect_tuner(tel) -> dict[str, int]:
     stats = tune.tune_stats()
     for k, v in stats.items():
         tel.counters.put(f"tuner.{k}", float(v))
+    return stats
+
+
+def collect_resilience(tel) -> dict[str, float]:
+    """Fold the resilience layer into ``tel``: the process-wide
+    fault/recovery counters become ``resilience.*`` gauges, and every
+    queued fault/fallback/retry/timeout event drains into the handle's
+    event ring (kind ``event``, names like ``resilience.fault``,
+    ``resilience.fallback.pallas.pull``)."""
+    from ..resilience import drain_events, resilience_stats
+    stats = resilience_stats()
+    for k, v in stats.items():
+        tel.counters.put(f"resilience.{k}", float(v))
+    for ev in drain_events():
+        fields = dict(ev)
+        name = fields.pop("name", "resilience.event")
+        # "kind"/"name" are the event envelope's own keys — rename any
+        # payload field that would collide with emit()'s signature
+        for reserved in ("kind", "ts_us"):
+            if reserved in fields:
+                fields[f"f_{reserved}"] = fields.pop(reserved)
+        tel.emit("event", name, **fields)
     return stats
 
 

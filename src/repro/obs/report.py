@@ -202,6 +202,29 @@ def render_report(events: Iterable[dict[str, Any]],
             out.append("")
             out += _audit_table(a) + [""]
 
+    res_counters = [e for e in events if e.get("kind") == "counter"
+                    and str(e.get("name", "")).startswith("resilience.")]
+    res_events = [e for e in events if e.get("kind") == "event"
+                  and str(e.get("name", "")).startswith("resilience.")]
+    if res_counters or res_events:
+        out += ["## Resilience", ""]
+        if res_counters:
+            out += ["Fault-injection and recovery totals "
+                    "(`resilience.*` namespace).", "",
+                    "| counter | value |", "|---|---|"]
+            for e in res_counters:
+                out.append(f"| `{e.get('name', '?')}` | "
+                           f"{e.get('value', 0):g} |")
+            out.append("")
+        if res_events:
+            out += ["| event | details |", "|---|---|"]
+            for e in res_events:
+                detail = ", ".join(
+                    f"{k}={v}" for k, v in sorted(e.items())
+                    if k not in ("kind", "name", "ts_us", "pid", "tid"))
+                out.append(f"| `{e.get('name', '?')}` | {detail} |")
+            out.append("")
+
     counters = [e for e in events if e.get("kind") == "counter"]
     if counters:
         out += ["## Session counters", "", "| counter | value |",

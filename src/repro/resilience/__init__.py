@@ -1,0 +1,33 @@
+"""repro.resilience — deterministic fault injection + recovery ladders.
+
+Three pieces (see ``docs/resilience.md``):
+
+  * :mod:`~repro.resilience.faults` — the seeded
+    :class:`FaultPlan`/:class:`FaultInjector` and the
+    :func:`fault_point` seam wired into kernels, tuner, shards,
+    serving, caches, and the stepwise engine loop; plus the
+    ``resilience.*`` counter/event bookkeeping ``repro.obs`` drains.
+  * :mod:`~repro.resilience.breaker` — the per-(kernel, shape)
+    :class:`CircuitBreaker` behind the Pallas degradation ladder.
+  * :mod:`~repro.resilience.errors` — structured failure types
+    (:class:`DivergenceError`, :class:`DeadlineExceeded`,
+    :class:`AdmissionError`, :class:`SolveInterrupted`, ...).
+"""
+
+from .breaker import CircuitBreaker
+from .errors import (AdmissionError, DeadlineExceeded, DivergenceError,
+                     FaultInjected, ProbeTimeout, SolveInterrupted)
+from .faults import (SITES, FaultInjector, FaultPlan, FaultSpec,
+                     active_plan, clear_resilience_stats, deactivate,
+                     drain_events, fault_point, inject, install,
+                     named_plans, note, record_event, resilience_stats,
+                     resilient_call)
+
+__all__ = [
+    "SITES", "FaultSpec", "FaultPlan", "FaultInjector", "fault_point",
+    "install", "deactivate", "active_plan", "inject", "named_plans",
+    "resilient_call", "note", "record_event", "resilience_stats",
+    "drain_events", "clear_resilience_stats", "CircuitBreaker",
+    "FaultInjected", "DivergenceError", "ProbeTimeout",
+    "DeadlineExceeded", "AdmissionError", "SolveInterrupted",
+]

@@ -1,0 +1,98 @@
+"""Per-cell circuit breaker for the Pallas degradation ladder.
+
+The backend's unsupported-cell fallback handles cells the kernels never
+cover; the breaker handles cells that *should* work but keep failing at
+dispatch (a flaky platform, an injected permanent fault). After
+``failure_threshold`` consecutive failures on one (kernel, shape) cell
+the breaker opens: the next ``cooldown`` calls for that cell skip the
+kernel entirely (straight to the jnp fallback — no exception churn),
+then one half-open probe retries the kernel. Probe success closes the
+cell; another failure re-opens it for a fresh cooldown.
+
+Cooldown is counted in *calls*, not seconds, so chaos runs are exactly
+reproducible: the Nth call to a cell behaves the same on every machine
+and every rerun.
+"""
+
+from __future__ import annotations
+
+import threading
+
+__all__ = ["CircuitBreaker"]
+
+_CLOSED, _OPEN, _HALF_OPEN = "closed", "open", "half-open"
+
+
+class CircuitBreaker:
+    """Keyed consecutive-failure breaker with call-counted cooldown."""
+
+    def __init__(self, failure_threshold: int = 3, cooldown: int = 8):
+        if failure_threshold < 1 or cooldown < 1:
+            raise ValueError("failure_threshold and cooldown must be >= 1")
+        self.failure_threshold = failure_threshold
+        self.cooldown = cooldown
+        # cell -> [state, consecutive_failures, cooldown_remaining]
+        self._cells: dict = {}
+        self._lock = threading.Lock()
+        self.opened = 0          # total open transitions (monotone)
+
+    def allow(self, cell) -> bool:
+        """May this call try the protected path? Open cells burn one
+        cooldown tick per refusal; the tick that exhausts the cooldown
+        flips the cell half-open and lets one probe through."""
+        with self._lock:
+            st = self._cells.get(cell)
+            if st is None or st[0] == _CLOSED:
+                return True
+            if st[0] == _HALF_OPEN:
+                return True
+            st[2] -= 1
+            if st[2] <= 0:
+                st[0] = _HALF_OPEN
+                return True
+            return False
+
+    def record_success(self, cell) -> None:
+        with self._lock:
+            self._cells.pop(cell, None)
+
+    def record_failure(self, cell) -> bool:
+        """Count one failure; returns True when this failure opened
+        (or re-opened) the cell."""
+        with self._lock:
+            st = self._cells.setdefault(cell, [_CLOSED, 0, 0])
+            if st[0] == _HALF_OPEN:          # failed probe: re-open
+                st[0] = _OPEN
+                st[2] = self.cooldown
+                self.opened += 1
+                return True
+            st[1] += 1
+            if st[1] >= self.failure_threshold:
+                st[0] = _OPEN
+                st[1] = 0
+                st[2] = self.cooldown
+                self.opened += 1
+                return True
+            return False
+
+    def state(self, cell) -> str:
+        with self._lock:
+            st = self._cells.get(cell)
+            return st[0] if st is not None else _CLOSED
+
+    def open_cells(self) -> list:
+        with self._lock:
+            return [c for c, st in self._cells.items() if st[0] != _CLOSED]
+
+    def stats(self) -> dict:
+        with self._lock:
+            open_now = sum(1 for st in self._cells.values()
+                           if st[0] == _OPEN)
+            half = sum(1 for st in self._cells.values()
+                       if st[0] == _HALF_OPEN)
+        return {"opened_total": self.opened, "open_now": open_now,
+                "half_open_now": half}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._cells.clear()

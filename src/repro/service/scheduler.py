@@ -31,6 +31,7 @@ the same way.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Optional
 
@@ -38,6 +39,8 @@ import numpy as np
 
 from .. import api
 from ..graphs.structure import Graph
+from ..resilience import (AdmissionError, DeadlineExceeded, FaultInjected,
+                          fault_point, note)
 from .batch import default_step_bound, run_chunk
 from .cache import ResultCache, graph_fingerprint
 from .programs import get_batch_spec, batchable
@@ -63,6 +66,8 @@ class QueryRecord:
     cached: bool = False       # served straight from the result cache
     converged: bool = True     # False when force-retired (best effort)
     error: Optional[Exception] = None   # the failure, if serving failed
+    deadline_ms: Optional[float] = None  # wall budget from submit time
+    submitted_at: float = 0.0  # clock() at submit (deadline anchor)
 
     @property
     def done(self) -> bool:
@@ -110,12 +115,26 @@ class QueryService:
             grow without bound. Evicted rids can no longer be polled.
         cache: a :class:`ResultCache`, or None for a fresh 256-entry
             one.
+        max_queue: bound on total *queued* (not yet slotted) requests;
+            a ``submit`` that would push past it raises
+            :class:`~repro.resilience.AdmissionError` without consuming
+            a request id. Cache hits and coalesced duplicates are
+            always admitted (they add no engine work). None (default)
+            means unbounded.
+        max_chunk_retries: transient-failure retries per chunk (and per
+            unbatchable solve). The retry wraps the
+            ``service.chunk`` fault site, so an injected transient
+            fault is recovered in place; deterministic errors (bad
+            cell, bad kwargs) are never retried.
+        clock: monotonic-seconds callable for deadline accounting —
+            injectable so tests drive expiry without sleeping.
         telemetry: a :class:`repro.obs.Telemetry` handle, or None. With
             a handle the scheduler emits ``service.*`` events (submit
             outcomes, batch starts, chunk spans, force-retires), serves
             unbatchable queries with the same handle (so they carry
-            run/step events), and folds its :meth:`stats` into the
-            handle's counters every time a batch drains.
+            run/step events), and folds its :meth:`stats` plus the
+            process-wide ``resilience.*`` counters into the handle's
+            counters every time a batch drains.
     """
 
     def __init__(self, g: Graph, *, slots: int = 8,
@@ -123,16 +142,24 @@ class QueryService:
                  max_chunks_per_query: int = 256,
                  max_records: int = 4096,
                  cache: Optional[ResultCache] = None,
+                 max_queue: Optional[int] = None,
+                 max_chunk_retries: int = 2,
+                 clock=time.monotonic,
                  telemetry=None):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.telemetry = telemetry
         self.g = g
         self.slots = slots
         self.chunk_steps = chunk_steps
         self.max_chunks_per_query = max_chunks_per_query
         self.max_records = max_records
+        self.max_queue = max_queue
+        self.max_chunk_retries = max_chunk_retries
         self.cache = cache if cache is not None else ResultCache()
+        self._clock = clock
         self._fp = graph_fingerprint(g)
         self._next_rid = 0
         self._records: dict[int, QueryRecord] = {}
@@ -147,6 +174,11 @@ class QueryService:
         self.batches_started = 0
         self.chunks_run = 0
         self.force_retired = 0
+        self.chunk_retries = 0
+        self.deadline_expired = 0
+        self.admission_rejected = 0
+        self.cache_errors = 0
+        self._failures: deque = deque(maxlen=64)
 
     def _emit(self, name: str, **fields) -> None:
         if self.telemetry is not None:
@@ -154,13 +186,21 @@ class QueryService:
 
     # -- submission ------------------------------------------------------
     def submit(self, algorithm: str, source: Optional[int] = None, *,
-               policy=None, backend=None, **params) -> int:
+               policy=None, backend=None,
+               deadline_ms: Optional[float] = None, **params) -> int:
         """Enqueue one query; returns a request id for :meth:`poll`.
 
         ``source`` is the query vertex for source-parameterized
         algorithms (mapped to ``root`` for BFS); global algorithms
-        (wcc, pagerank, ...) take ``source=None``. Extra ``params`` are
-        the algorithm's kwargs (``delta``, ``damp``, ``iters``, ...).
+        (wcc, pagerank, ...) take ``source=None``. ``deadline_ms``
+        bounds the query's wall time from submission: a query still
+        queued (or mid-batch) past its deadline is failed with
+        :class:`~repro.resilience.DeadlineExceeded` instead of served
+        stale. Extra ``params`` are the algorithm's kwargs (``delta``,
+        ``damp``, ``iters``, ...).
+
+        Raises :class:`~repro.resilience.AdmissionError` (consuming no
+        request id) when ``max_queue`` is set and the backlog is full.
         """
         api.get_spec(algorithm)                      # KeyError if unknown
         if isinstance(policy, str):
@@ -172,20 +212,34 @@ class QueryService:
             raise ValueError(
                 f"{algorithm!r} is source-parameterized: submit() "
                 f"requires a source vertex (0..{self.g.n - 1})")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0, got {deadline_ms}")
+        pkey = tuple(sorted(params.items()))
+        ckey = self._cache_key(algorithm, source, pkey, policy, backend)
+        hit = self._cache_lookup(ckey)
+        coalesce = hit is None and ckey in self._inflight
+        if hit is None and not coalesce and self.max_queue is not None:
+            queued = sum(len(q) for q in self._queues.values())
+            if queued >= self.max_queue:
+                self.admission_rejected += 1
+                note("admission.service.reject", queued=queued,
+                     algorithm=algorithm)
+                self._emit("service.admission_reject",
+                           algorithm=algorithm, queued=queued)
+                raise AdmissionError(queued, self.max_queue)
         rid = self._next_rid
         self._next_rid += 1
         rec = QueryRecord(rid=rid, algorithm=algorithm, source=source,
-                          params=tuple(sorted(params.items())))
+                          params=pkey, deadline_ms=deadline_ms,
+                          submitted_at=self._clock())
         self._records[rid] = rec
-        ckey = self._cache_key(algorithm, source, rec.params, policy,
-                               backend)
-        hit = self.cache.get(ckey)
         if hit is not None:
             rec.state, rec.converged = hit
             rec.cached = True
             self._emit("service.cache_hit", rid=rid, algorithm=algorithm)
             return rid
-        if ckey in self._inflight:                   # coalesce duplicates
+        if coalesce:                                 # coalesce duplicates
             self._inflight[ckey].append(rid)
             self.coalesced += 1
             self._pending += 1
@@ -211,6 +265,24 @@ class QueryService:
                 f"query {rid} ({rec.algorithm!r}) failed: "
                 f"{rec.error}") from rec.error
         return rec.state if rec.state is not None else None
+
+    def status(self, rid: int) -> dict:
+        """Non-raising view of one query: always returns a dict, even
+        for unknown/evicted rids and failed queries (where :meth:`poll`
+        raises) — the surface a serving dashboard polls."""
+        rec = self._records.get(rid)
+        if rec is None:
+            return {"rid": rid, "status": "unknown"}
+        if rec.error is not None:
+            return {"rid": rid, "status": "failed",
+                    "algorithm": rec.algorithm,
+                    "error": f"{type(rec.error).__name__}: {rec.error}"}
+        if rec.state is not None:
+            return {"rid": rid, "status": "done",
+                    "algorithm": rec.algorithm, "cached": rec.cached,
+                    "converged": rec.converged}
+        return {"rid": rid, "status": "pending",
+                "algorithm": rec.algorithm}
 
     def record(self, rid: int) -> QueryRecord:
         return self._records[rid]
@@ -247,6 +319,11 @@ class QueryService:
                 "batches_started": self.batches_started,
                 "chunks_run": self.chunks_run,
                 "force_retired": self.force_retired,
+                "chunk_retries": self.chunk_retries,
+                "deadline_expired": self.deadline_expired,
+                "admission_rejected": self.admission_rejected,
+                "cache_errors": self.cache_errors,
+                "failures": list(self._failures),
                 "cache": self.cache.stats()}
 
     # -- internals -------------------------------------------------------
@@ -254,6 +331,81 @@ class QueryService:
         # policy shorthands/instances and backends are hashable (frozen
         # dataclasses; DistributedBackend hashes by identity)
         return (self._fp, algorithm, source, params, policy, backend)
+
+    def _cache_lookup(self, ckey):
+        """Guarded ResultCache lookup: a failing cache (injected or
+        real) degrades to a miss — the query is recomputed, never
+        dropped."""
+        try:
+            fault_point("service.cache.get")
+            return self.cache.get(ckey)
+        except (OSError, FaultInjected) as e:
+            self.cache_errors += 1
+            note("fallback.service.cache.get", error=type(e).__name__)
+            return None
+
+    def _cache_store(self, ckey, value):
+        """Guarded ResultCache store: a failing put loses the cache
+        entry (a later identical submit recomputes), not the result."""
+        try:
+            fault_point("service.cache.put")
+            self.cache.put(ckey, value)
+        except (OSError, FaultInjected) as e:
+            self.cache_errors += 1
+            note("fallback.service.cache.put", error=type(e).__name__)
+
+    def _chunk_call(self, fn):
+        """``service.chunk`` fault site + ``fn()`` with bounded retries
+        of *transient* failures (injected faults, I/O, timeouts).
+        Deterministic errors — bad cell, bad kwargs — raise through on
+        the first attempt; retrying them would just re-trace."""
+        last = None
+        for attempt in range(self.max_chunk_retries + 1):
+            try:
+                fault_point("service.chunk")
+                return fn()
+            except (FaultInjected, OSError, TimeoutError,
+                    ConnectionError) as e:
+                last = e
+                if attempt >= self.max_chunk_retries:
+                    raise
+                self.chunk_retries += 1
+                note("retry.service.chunk", attempt=attempt + 1,
+                     error=type(e).__name__)
+        raise last  # pragma: no cover — unreachable
+
+    def _waited_ms(self, rec) -> Optional[float]:
+        """Elapsed ms since submit iff the record's deadline passed."""
+        if rec.deadline_ms is None:
+            return None
+        waited = (self._clock() - rec.submitted_at) * 1e3
+        return waited if waited > rec.deadline_ms else None
+
+    def _reap_expired(self, ckey, where: str) -> bool:
+        """Fail every deadline-expired rid waiting on ``ckey``; True if
+        any live requester remains (the work is still wanted)."""
+        rids = self._inflight.get(ckey)
+        if not rids:
+            return False
+        alive = []
+        for rid in rids:
+            rec = self._records[rid]
+            waited = self._waited_ms(rec)
+            if waited is None:
+                alive.append(rid)
+                continue
+            self.deadline_expired += 1
+            rec.error = DeadlineExceeded(rid, rec.deadline_ms, waited,
+                                         where)
+            self._pending -= 1
+            note("deadline.service", rid=rid, where=where)
+            self._emit("service.deadline", rid=rid, where=where,
+                       algorithm=rec.algorithm)
+        if alive:
+            self._inflight[ckey] = alive
+            return True
+        del self._inflight[ckey]
+        return False
 
     def _finish(self, ckey, algorithm, state, converged=True,
                 cacheable=None):
@@ -263,7 +415,7 @@ class QueryService:
         if cacheable is None:
             cacheable = converged
         if cacheable:
-            self.cache.put(ckey, (state, converged))
+            self._cache_store(ckey, (state, converged))
         first = True
         for rid in self._inflight.pop(ckey, ()):
             rec = self._records[rid]
@@ -275,13 +427,20 @@ class QueryService:
             self._pending -= 1
         self._evict_records()
 
-    def _fail(self, ckey, exc: Exception):
+    def _fail(self, ckey, exc: Exception, *, slot=None, chunk=None):
         """Serving these queries failed: record the error (poll raises
-        it) and release their pending/in-flight bookkeeping so one bad
-        request can never wedge the loop."""
+        it, :meth:`status` reports it), note where it died (batch slot
+        and chunk index, surfaced via ``stats()["failures"]``), and
+        release the pending/in-flight bookkeeping so one bad request
+        can never wedge the loop."""
         for rid in self._inflight.pop(ckey, ()):
-            self._records[rid].error = exc
+            rec = self._records[rid]
+            rec.error = exc
             self._pending -= 1
+            self._failures.append(
+                {"rid": rid, "algorithm": rec.algorithm,
+                 "error": type(exc).__name__, "slot": slot,
+                 "chunk": chunk})
 
     def _evict_records(self):
         if len(self._records) <= self.max_records:
@@ -306,12 +465,16 @@ class QueryService:
             rid, ckey, source, params = queue.popleft()
             if not queue:
                 del self._queues[gkey]
+            if not self._reap_expired(ckey, "queued"):
+                return True      # every requester timed out while queued
             if source is not None:
                 params[_source_kwarg(algorithm)] = source
             try:
-                r = api.solve(self.g, algorithm, policy=policy,
-                              backend=backend,
-                              telemetry=self.telemetry, **params)
+                r = self._chunk_call(
+                    lambda: api.solve(self.g, algorithm, policy=policy,
+                                      backend=backend,
+                                      telemetry=self.telemetry,
+                                      **params))
             except Exception as e:            # bad cell / bad kwargs
                 self._fail(ckey, e)
                 return True
@@ -327,6 +490,10 @@ class QueryService:
         taken = [queue.popleft() for _ in range(width)]
         if not queue:
             del self._queues[gkey]
+        taken = [t for t in taken if self._reap_expired(t[1], "queued")]
+        if not taken:
+            return True          # the whole head timed out while queued
+        width = len(taken)
         params = dict(taken[0][3])
         try:
             state, frontier = bspec.init(
@@ -335,8 +502,8 @@ class QueryService:
                 self.g, algorithm, width, policy=policy,
                 backend=backend, **params)
         except Exception as e:   # unsupported cell, bad kwargs, ...
-            for t in taken:
-                self._fail(t[1], e)
+            for j, t in enumerate(taken):
+                self._fail(t[1], e, slot=j)
             return True
         self._active = _Active(
             group=gkey, algorithm=algorithm, policy=policy,
@@ -359,16 +526,18 @@ class QueryService:
         t0 = (self.telemetry.now_us() if self.telemetry is not None
               else 0.0)
         try:
-            res, done = run_chunk(
-                self.g, act.algorithm, act.width, state=act.state,
-                frontier=act.frontier, policy=act.policy,
-                backend=act.backend,
-                max_steps=min(self.chunk_steps, act.step_bound),
-                **act.params)
+            res, done = self._chunk_call(
+                lambda: run_chunk(
+                    self.g, act.algorithm, act.width, state=act.state,
+                    frontier=act.frontier, policy=act.policy,
+                    backend=act.backend,
+                    max_steps=min(self.chunk_steps, act.step_bound),
+                    **act.params))
         except Exception as e:
-            for slot in act.slot_rids:
+            for i, slot in enumerate(act.slot_rids):
                 if slot is not None:
-                    self._fail(slot[1], e)
+                    self._fail(slot[1], e, slot=i,
+                               chunk=act.slot_chunks[i])
             self._active = None
             return 0
         self.chunks_run += 1
@@ -399,6 +568,14 @@ class QueryService:
                              if k != act.group and q)
         can_refill = act.width >= self.slots and not others_waiting
         for i in range(act.width):
+            if act.slot_rids[i] is not None:
+                # mid-batch deadline check: expired requesters are
+                # failed; a slot nobody wants anymore is abandoned
+                # (its column keeps stepping but the result is dropped)
+                if not self._reap_expired(act.slot_rids[i][1],
+                                          "running"):
+                    act.slot_rids[i] = None
+                    finished += 1
             if act.slot_rids[i] is not None:
                 act.slot_chunks[i] += 1
                 # budget exhausted -> best-effort retire, marked
@@ -433,6 +610,8 @@ class QueryService:
         if all(s is None for s in act.slot_rids):
             self._active = None
             if self.telemetry is not None:
-                from ..obs.metrics import collect_service
+                from ..obs.metrics import (collect_resilience,
+                                           collect_service)
                 collect_service(self.telemetry, self)
+                collect_resilience(self.telemetry)
         return finished

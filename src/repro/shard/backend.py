@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from ..core.backend import ExchangeBackend
 from ..core.cost_model import Cost, counter, counter_dtype
+from ..resilience import resilient_call
 from ..core.direction import Direction
 from ..core.primitives import (combine_identity, frontier_out_edges,
                                mask_untouched)
@@ -172,11 +173,15 @@ class ShardedBackend(ExchangeBackend):
         vpad = self._pad(values, 0)
         fpad = self._pad(frontier, False)
         compressing = err is not None and self._compresses(values, combine)
-        out, new_err = sharded_push(
-            self.mesh, self.topo, vpad, fpad, combine=combine,
-            msg_fn=msg_fn, axis=self.axis,
-            cfg=self.compression if compressing else None,
-            err=err if compressing else None)
+        # the collective build is pure trace-time work, so a transient
+        # failure (injected or a flaky mesh) is safely retried in place
+        out, new_err = resilient_call(
+            "shard.exchange.push",
+            lambda: sharded_push(
+                self.mesh, self.topo, vpad, fpad, combine=combine,
+                msg_fn=msg_fn, axis=self.axis,
+                cfg=self.compression if compressing else None,
+                err=err if compressing else None))
         width = 1 if values.ndim == 1 else values.shape[-1]
         k = frontier_out_edges(g, frontier) * width
         kc = jnp.minimum(k, counter(self.cut_edges) * width)
@@ -200,10 +205,12 @@ class ShardedBackend(ExchangeBackend):
     def pull(self, g, values, touched, combine, msg_fn, cost):
         ident = combine_identity(combine, values.dtype)
         vpad = self._pad(values, ident)
-        out = sharded_pull(
-            self.mesh, self.topo, vpad, combine=combine, msg_fn=msg_fn,
-            axis=self.axis, inner=self.inner, n=g.n,
-            interpret=self.interpret)[:g.n]
+        out = resilient_call(
+            "shard.exchange.pull",
+            lambda: sharded_pull(
+                self.mesh, self.topo, vpad, combine=combine,
+                msg_fn=msg_fn, axis=self.axis, inner=self.inner, n=g.n,
+                interpret=self.interpret))[:g.n]
         if touched is not None:
             out = mask_untouched(out, touched, combine)
         width = 1 if values.ndim == 1 else values.shape[-1]

@@ -18,7 +18,7 @@ DOCS = ROOT / "docs"
 def test_docs_tree_exists():
     for page in ("architecture.md", "push-pull.md", "algorithms.md",
                  "kernels.md", "distributed.md", "observability.md",
-                 "results.md"):
+                 "resilience.md", "results.md"):
         assert (DOCS / page).is_file(), f"missing docs/{page}"
 
 
@@ -27,7 +27,7 @@ def test_readme_links_docs():
     for page in ("docs/architecture.md", "docs/push-pull.md",
                  "docs/algorithms.md", "docs/kernels.md",
                  "docs/distributed.md", "docs/observability.md",
-                 "docs/results.md"):
+                 "docs/resilience.md", "docs/results.md"):
         assert page in readme, f"README does not link {page}"
 
 
@@ -85,6 +85,31 @@ def test_observability_page_covers_obs_surface():
     arch = (DOCS / "architecture.md").read_text()
     assert "observability.md" in arch
     assert "repro.obs" in arch
+
+
+def test_resilience_page_covers_fault_surface():
+    """docs/resilience.md stays honest: every fault site, the plan
+    machinery, each recovery seam, the serving surfaces, and the CI
+    chaos job are all named."""
+    from repro.resilience import SITES
+    page = (DOCS / "resilience.md").read_text()
+    for site in SITES:
+        assert f"`{site}`" in page, (
+            f"docs/resilience.md does not document fault site {site}")
+    for needle in ("FaultPlan", "FaultSpec", "REPRO_FAULT_PLAN",
+                   "ci-default", "kernels-down", "CircuitBreaker",
+                   "deadline_ms", "max_queue", "AdmissionError",
+                   "DeadlineExceeded", "checkpoint_every",
+                   "SolveInterrupted", "check_finite", "DivergenceError",
+                   "ProbeTimeout", "REPRO_TUNE_DEADLINE_S",
+                   "collect_resilience", "resilience.fault",
+                   "chaos-smoke", "bit-identical"):
+        assert needle in page, (
+            f"docs/resilience.md does not mention {needle}")
+    # the architecture page names the layer and links here
+    arch = (DOCS / "architecture.md").read_text()
+    assert "resilience.md" in arch
+    assert "repro.resilience" in arch
 
 
 def test_every_registered_algorithm_documented():

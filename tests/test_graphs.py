@@ -28,6 +28,36 @@ def test_build_graph_layout_consistency(small_graph):
     assert np.all(np.diff(np.asarray(g.out_ptr)) == np.asarray(g.out_deg))
 
 
+def test_build_graph_rejects_out_of_range_endpoints():
+    with pytest.raises(ValueError, match=r"dst\[1\] = 3 is outside"):
+        build_graph(np.array([0, 1]), np.array([1, 3]), 3)
+    with pytest.raises(ValueError, match=r"src\[0\] = -1"):
+        build_graph(np.array([-1]), np.array([0]), 2)
+    with pytest.raises(ValueError, match="must be aligned"):
+        build_graph(np.array([0, 1]), np.array([1]), 2)
+
+
+def test_build_graph_rejects_nonfinite_weights():
+    src, dst = np.array([0, 1]), np.array([1, 0])
+    with pytest.raises(ValueError, match=r"weights\[1\].*not finite"):
+        build_graph(src, dst, 2, weights=np.array([1.0, np.nan]))
+    with pytest.raises(ValueError, match="not finite"):
+        build_graph(src, dst, 2, weights=np.array([np.inf, 1.0]))
+    with pytest.raises(ValueError, match="does not match"):
+        build_graph(src, dst, 2, weights=np.array([1.0]))
+
+
+def test_build_graph_boundary_vertex_still_accepted():
+    # an edge into the last vertex (id n-1) sits exactly on the valid
+    # boundary — the range check must not off-by-one it away
+    g = build_graph(np.array([0, 4]), np.array([4, 0]), 5,
+                    weights=np.array([2.0, 2.0]))
+    assert g.n == 5 and g.m == 2
+    assert int(np.asarray(g.in_deg)[4]) == 1
+    # empty graphs skip the scan entirely
+    assert build_graph(np.array([]), np.array([]), 3).m == 0
+
+
 def test_ell_covers_all_in_edges(small_graph):
     g = small_graph
     idx = np.asarray(g.ell_idx)

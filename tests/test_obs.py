@@ -408,7 +408,9 @@ def test_tuner_counters_collected():
     tel = Telemetry()
     stats = collect_tuner(tel)
     assert set(stats) == {"mem_hits", "disk_hits", "misses", "probes",
-                          "writes"}
+                          "writes", "probe_retries", "probe_timeouts",
+                          "probe_failures", "probe_degraded",
+                          "write_errors"}
     assert tel.counters.get("tuner.probes") == stats["probes"]
 
 
@@ -416,7 +418,10 @@ def test_backend_telemetry_counters_surface():
     from repro.core.backend import DenseBackend, PallasBackend
     assert DenseBackend().telemetry_counters() == {}
     pb = PallasBackend()
-    assert set(pb.telemetry_counters()) == set(pb.stats)
+    # dispatch/fallback tallies plus the circuit breaker's gauges
+    assert set(pb.telemetry_counters()) == set(pb.stats) | {
+        "breaker_opened_total", "breaker_open_now",
+        "breaker_half_open_now"}
 
 
 # ---------------------------------------------------------------------
@@ -449,3 +454,25 @@ def test_compare_reports_speedups_and_gate(tmp_path):
     assert main([str(po), str(pn)]) == 0
     assert main([str(po), str(pn), "--fail-below", "0.8"]) == 1
     assert main([str(po), str(pn), "--fail-below", "0.4"]) == 0
+
+
+def test_compare_higher_is_better_flips_the_ratio(tmp_path):
+    """For win-metrics (a kernel row's jnp speedup) the gate must fire
+    when NEW gets *smaller* — the ratio flips to new/old."""
+    from benchmarks.compare import compare_reports, main
+    old = _report({"a": 100.0, "b": 100.0})   # metric value = us
+    new = _report({"a": 50.0, "b": 200.0})
+    d = compare_reports(old, new, higher_is_better=True)
+    by_name = {c["name"]: c for c in d["cells"]}
+    assert by_name["a"]["speedup"] == pytest.approx(0.5)   # a shrank
+    assert by_name["b"]["speedup"] == pytest.approx(2.0)   # b grew
+
+    po, pn = tmp_path / "old.json", tmp_path / "new.json"
+    po.write_text(json.dumps(old))
+    pn.write_text(json.dumps(new))
+    # cost polarity passes at 0.4; win polarity catches cell a halving
+    assert main([str(po), str(pn), "--fail-below", "0.4"]) == 0
+    assert main([str(po), str(pn), "--higher-is-better",
+                 "--fail-below", "0.6"]) == 1
+    assert main([str(po), str(pn), "--higher-is-better",
+                 "--fail-below", "0.4"]) == 0

@@ -1,0 +1,706 @@
+"""Chaos tests for repro.resilience (PR 10).
+
+The invariant under test, at every wired seam: a *transient* injected
+fault is recovered (retry / fallback / resume) and the result is
+identical to the fault-free run (bit-identical for integer states,
+1e-5 for float); a *permanent* fault yields either a correct degraded
+result (the jnp fallback carries the solve) or a structured error —
+never a hang, never silent corruption.
+"""
+
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro import api
+from repro import resilience
+from repro.core.backend import DenseBackend, PallasBackend
+from repro.core.engine import Checkpoint, PushPullEngine
+from repro.graphs import erdos_renyi
+from repro.graphs.structure import build_graph
+from repro.resilience import (AdmissionError, CircuitBreaker,
+                              DeadlineExceeded, DivergenceError,
+                              FaultInjected, FaultPlan, FaultSpec,
+                              ProbeTimeout, SolveInterrupted,
+                              clear_resilience_stats, drain_events,
+                              fault_point, inject, named_plans,
+                              resilience_stats, resilient_call)
+from repro.service.scheduler import QueryService
+
+
+@pytest.fixture(autouse=True)
+def _clean_resilience():
+    """Every test starts and ends with no active plan and fresh
+    process-wide counters — chaos state must not leak across tests."""
+    resilience.deactivate()
+    clear_resilience_stats()
+    yield
+    resilience.deactivate()
+    clear_resilience_stats()
+
+
+def _plan(*specs, name="test", seed=0):
+    return FaultPlan(name=name, seed=seed, specs=tuple(specs))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultSpec / FaultInjector units
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_unknown_site_kind_error():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec(site="nonsense.site")
+    with pytest.raises(ValueError, match="transient"):
+        FaultSpec(site="pallas.pull", kind="flaky")
+    with pytest.raises(ValueError, match="unknown error class"):
+        FaultSpec(site="pallas.pull", error="SegFault")
+    with pytest.raises(ValueError, match=">= 1"):
+        FaultSpec(site="pallas.pull", every=0)
+
+
+def test_plan_rejects_duplicate_sites_and_round_trips_json():
+    with pytest.raises(ValueError, match="duplicate"):
+        _plan(FaultSpec(site="pallas.pull"), FaultSpec(site="pallas.pull"))
+    plan = named_plans()["ci-default"]
+    again = FaultPlan.from_json(plan.to_json())
+    assert again == plan
+    assert json.loads(plan.to_json())["name"] == "ci-default"
+
+
+def test_injector_schedule_is_deterministic_and_transient_recovers():
+    plan = _plan(FaultSpec(site="pallas.pull", kind="transient",
+                           every=3, start=1))
+
+    def pattern():
+        fired = []
+        with inject(plan):
+            for _ in range(9):
+                try:
+                    fault_point("pallas.pull")
+                    fired.append(False)
+                except FaultInjected:
+                    fired.append(True)
+        return fired
+
+    first = pattern()
+    # hits 1, 4, 7 fault; the hit after each scheduled fault is clean,
+    # so a single retry always recovers
+    assert first == [True, False, False] * 3
+    assert pattern() == first            # same plan -> same schedule
+
+
+def test_rate_schedule_is_seeded_and_reproducible():
+    plan = _plan(FaultSpec(site="service.chunk", rate=0.5), seed=42)
+
+    def pattern():
+        out = []
+        with inject(plan):
+            for _ in range(40):
+                try:
+                    fault_point("service.chunk")
+                    out.append(0)
+                except FaultInjected:
+                    out.append(1)
+        return out
+
+    p = pattern()
+    assert p == pattern()
+    assert 0 < sum(p) < 40               # scattered, not all-or-nothing
+
+
+def test_fault_point_rejects_unknown_site_only_when_active():
+    fault_point("engine.step")           # no plan: pure no-op
+    with inject(_plan(FaultSpec(site="engine.step"))):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            fault_point("not.a.site")
+
+
+def test_inject_restores_previous_injector():
+    outer = _plan(FaultSpec(site="tune.probe", kind="permanent"))
+    inner = _plan(FaultSpec(site="engine.step", kind="permanent"))
+    with inject(outer):
+        with inject(inner):
+            assert resilience.active_plan() is inner
+        assert resilience.active_plan() is outer
+    assert resilience.active_plan() is None
+
+
+def test_resilient_call_retries_transient_and_exhausts_permanent():
+    calls = []
+    with inject(_plan(FaultSpec(site="shard.exchange.push",
+                                kind="transient", every=99, start=1))):
+        out = resilient_call("shard.exchange.push",
+                             lambda: calls.append(1) or "ok")
+    assert out == "ok" and len(calls) == 1
+    assert resilience_stats()["retry.shard.exchange.push"] == 1
+    with inject(_plan(FaultSpec(site="shard.exchange.push",
+                                kind="permanent"))):
+        with pytest.raises(FaultInjected):
+            resilient_call("shard.exchange.push", lambda: "never",
+                           retries=2)
+
+
+def test_env_plan_selection(monkeypatch):
+    from repro.resilience import faults
+    monkeypatch.setenv("REPRO_FAULT_PLAN", "ci-default")
+    faults._install_from_env()
+    assert resilience.active_plan().name == "ci-default"
+    resilience.deactivate()
+    monkeypatch.setenv("REPRO_FAULT_PLAN", "no-such-plan")
+    with pytest.raises(ValueError, match="REPRO_FAULT_PLAN"):
+        faults._install_from_env()
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_cools_and_half_open_probes():
+    br = CircuitBreaker(failure_threshold=2, cooldown=3)
+    cell = ("pull", 8)
+    assert br.allow(cell)
+    assert not br.record_failure(cell)
+    assert br.record_failure(cell)       # second failure opens
+    assert br.state(cell) == "open"
+    assert not br.allow(cell)            # cooldown burns one tick/call
+    assert not br.allow(cell)
+    assert br.allow(cell)                # exhausting tick -> half-open probe
+    assert br.state(cell) == "half-open"
+    br.record_success(cell)
+    assert br.state(cell) == "closed"
+    assert br.stats()["opened_total"] == 1
+
+
+def test_breaker_reopens_on_failed_probe():
+    br = CircuitBreaker(failure_threshold=1, cooldown=2)
+    cell = "c"
+    assert br.record_failure(cell)
+    assert not br.allow(cell)            # burns the first cooldown tick
+    assert br.allow(cell)                # half-open probe
+    assert br.record_failure(cell)       # probe failed -> re-open
+    assert br.state(cell) == "open"
+    assert br.stats()["opened_total"] == 2
+    assert cell in br.open_cells()
+
+
+def test_breaker_success_resets_consecutive_failures():
+    br = CircuitBreaker(failure_threshold=3, cooldown=2)
+    for _ in range(5):                   # never 3 consecutive
+        br.record_failure("x")
+        br.record_failure("x")
+        br.record_success("x")
+    assert br.state("x") == "closed"
+    assert br.stats()["opened_total"] == 0
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch degradation ladder
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chaos_graph():
+    return erdos_renyi(80, 4.0, seed=3, weighted=True)
+
+
+def test_kernels_down_degrades_to_jnp_and_matches(chaos_graph):
+    ref = np.asarray(api.solve(chaos_graph, "bfs", root=0,
+                               backend=DenseBackend()).state["dist"])
+    with inject(named_plans()["kernels-down"]):
+        be = PallasBackend()
+        r = api.solve(chaos_graph, "bfs", root=0, backend=be)
+    assert (np.asarray(r.state["dist"]) == ref).all()
+    assert be.stats["fault_fallback_pull"] >= 1
+    assert be.stats["fault_fallback_push"] >= 1
+    stats = resilience_stats()
+    assert stats["fallback.pallas.pull"] >= 1
+    assert stats["fallback.pallas.push"] >= 1
+
+
+def test_repeated_kernel_failures_open_the_breaker(chaos_graph):
+    g = chaos_graph
+    be = PallasBackend(breaker=CircuitBreaker(failure_threshold=2,
+                                              cooldown=4))
+    values = jnp.full((g.n,), jnp.inf).at[0].set(0.0)
+    touched = jnp.ones((g.n,), bool)
+    from repro.core.cost_model import Cost
+    with inject(_plan(FaultSpec(site="pallas.pull", kind="permanent"))):
+        for _ in range(5):
+            out, _ = be.pull(g, values, touched, "min", None, Cost())
+    # 2 failures open the cell; later calls skip the kernel entirely
+    assert be.stats["fault_fallback_pull"] == 2
+    assert be.stats["breaker_skip_pull"] == 3
+    assert be.stats["breaker_open"] == 1
+    assert be.telemetry_counters()["breaker_opened_total"] == 1
+    # degraded answers still correct: one min-plus relaxation from
+    # vertex 0 must reach its out-neighbors
+    ref, _ = DenseBackend().pull(g, values, touched, "min", None, Cost())
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+def test_transient_kernel_fault_recovers_next_dispatch(chaos_graph):
+    g = chaos_graph
+    be = PallasBackend()
+    values = jnp.ones((g.n,), jnp.float32)
+    from repro.core.cost_model import Cost
+    with inject(_plan(FaultSpec(site="pallas.pull", kind="transient",
+                                every=99, start=1))):
+        a, _ = be.pull(g, values, None, "sum", None, Cost())   # faults
+        b, _ = be.pull(g, values, None, "sum", None, Cost())   # clean
+    assert be.stats["fault_fallback_pull"] == 1
+    assert be.stats["kernel_pull"] >= 1
+    assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# tuner: retry, degrade, deadline
+# ---------------------------------------------------------------------------
+
+def _fresh_tuner(monkeypatch, tmp_path):
+    from repro.kernels import tune
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    tune.clear_memory_cache()
+    tune.clear_stats()
+    return tune
+
+
+def test_tuner_transient_probe_fault_retries(monkeypatch, tmp_path):
+    tune = _fresh_tuner(monkeypatch, tmp_path)
+    with inject(_plan(FaultSpec(site="tune.probe", kind="transient",
+                                every=99, start=1))):
+        best = tune.tune_pull(400, 8, 1, jnp.float32, "sum", "copy",
+                              interpret=True)
+    assert best in tune.pull_candidates(400, 1)
+    s = tune.tune_stats()
+    assert s["probe_retries"] >= 1 and s["probe_failures"] >= 1
+    assert s["probe_degraded"] == 0
+    assert s["writes"] == 1              # recovered winner is persisted
+
+
+def test_tuner_permanent_probe_fault_degrades_unpersisted(monkeypatch,
+                                                          tmp_path):
+    tune = _fresh_tuner(monkeypatch, tmp_path)
+    monkeypatch.setenv("REPRO_TUNE_RETRIES", "1")
+    with inject(_plan(FaultSpec(site="tune.probe", kind="permanent"))):
+        best = tune.tune_pull(400, 8, 1, jnp.float32, "sum", "copy",
+                              interpret=True)
+    cands = tune.pull_candidates(400, 1)
+    assert best == cands[0]              # the default candidate
+    s = tune.tune_stats()
+    assert s["probe_degraded"] == 1
+    assert s["writes"] == 0              # NOT persisted: healthy runs
+    assert not (tmp_path / "tune.json").exists()  # will re-probe
+    assert resilience_stats()["degraded.tune.probe"] == 1
+
+
+def test_probe_deadline_abandons_hung_probe(monkeypatch):
+    from repro.kernels import tune
+    monkeypatch.setenv("REPRO_TUNE_DEADLINE_S", "0.05")
+    monkeypatch.setenv("REPRO_TUNE_RETRIES", "0")
+    tune.clear_stats()
+    t0 = time.perf_counter()
+    winner, probed = tune._probe_guarded(
+        "pull", lambda: time.sleep(5) or 1, default=128)
+    assert time.perf_counter() - t0 < 2.0     # did not wait 5s
+    assert (winner, probed) == (128, False)
+    assert tune.tune_stats()["probe_timeouts"] == 1
+
+
+def test_escaped_raises_probe_timeout():
+    from repro.kernels.tune import _escaped
+    with pytest.raises(ProbeTimeout, match="deadline"):
+        _escaped(lambda: time.sleep(5), deadline=0.05, kernel="push")
+    assert _escaped(lambda: 7, deadline=1.0) == 7
+
+
+def test_tuner_disk_faults_degrade_to_memory_tier(monkeypatch, tmp_path):
+    tune = _fresh_tuner(monkeypatch, tmp_path)
+    plan = _plan(FaultSpec(site="tune.cache.load", kind="permanent",
+                           error="OSError"),
+                 FaultSpec(site="tune.cache.write", kind="permanent",
+                           error="OSError"))
+    with inject(plan):
+        best = tune.tune_pull(400, 8, 1, jnp.float32, "sum", "copy",
+                              interpret=True)
+        # memory tier still serves the winner
+        again = tune.tune_pull(400, 8, 1, jnp.float32, "sum", "copy",
+                               interpret=True)
+    assert best == again
+    s = tune.tune_stats()
+    assert s["write_errors"] >= 1 and s["mem_hits"] >= 1
+    assert not (tmp_path / "tune.json").exists()
+
+
+# ---------------------------------------------------------------------------
+# sharded exchange
+# ---------------------------------------------------------------------------
+
+def test_shard_exchange_transient_faults_recover(chaos_graph):
+    from repro.shard import ShardedBackend
+    ref = np.asarray(api.solve(chaos_graph, "bfs", root=0,
+                               backend=DenseBackend()).state["dist"])
+    plan = _plan(FaultSpec(site="shard.exchange.push", kind="transient",
+                           every=3, start=1),
+                 FaultSpec(site="shard.exchange.pull", kind="transient",
+                           every=3, start=1))
+    with inject(plan) as inj:
+        sb = ShardedBackend.prepare(chaos_graph, num_shards=1)
+        r = api.solve(chaos_graph, "bfs", root=0, backend=sb)
+    assert (np.asarray(r.state["dist"]) == ref).all()
+    injected = inj.stats()["injected"]
+    assert sum(injected.values()) >= 1
+    retries = [k for k in resilience_stats() if k.startswith("retry.shard")]
+    assert retries
+
+
+# ---------------------------------------------------------------------------
+# engine guards: check_finite, checkpoint/resume
+# ---------------------------------------------------------------------------
+
+def test_check_finite_modes():
+    nan_state = {"x": jnp.array([1.0, jnp.nan])}
+    inf_state = {"d": jnp.array([0.0, jnp.inf]), "i": jnp.array([1, 2])}
+    with pytest.raises(DivergenceError, match="step 3"):
+        PushPullEngine._check_finite(nan_state, "nan", 3)
+    PushPullEngine._check_finite(inf_state, "nan", 0)  # Inf sentinel ok
+    with pytest.raises(DivergenceError):
+        PushPullEngine._check_finite(inf_state, "all", 0)
+    PushPullEngine._check_finite({"i": jnp.array([1, 2])}, True, 0)
+
+
+def test_solve_auto_resumes_transient_step_faults(chaos_graph):
+    ref = np.asarray(api.solve(chaos_graph, "bfs", root=1).state["dist"])
+    # every=4 leaves 3 clean hits between faults, so each resume makes
+    # real progress and the 5-step BFS finishes inside max_resumes=4
+    plan = _plan(FaultSpec(site="engine.step", kind="transient",
+                           every=4, start=2))
+    with inject(plan) as inj:
+        r = api.solve(chaos_graph, "bfs", root=1, checkpoint_every=1)
+    assert (np.asarray(r.state["dist"]) == ref).all()
+    assert inj.stats()["injected"]["engine.step"] >= 1
+    assert resilience_stats()["resume.engine.step"] >= 1
+
+
+def test_solve_permanent_step_fault_raises_structured(chaos_graph):
+    plan = _plan(FaultSpec(site="engine.step", kind="permanent",
+                           start=3))
+    with inject(plan):
+        with pytest.raises(SolveInterrupted) as ei:
+            api.solve(chaos_graph, "bfs", root=0, checkpoint_every=1)
+    # exhausted the resume budget: structured, cause-chained, no hang
+    assert isinstance(ei.value.__cause__, FaultInjected)
+    assert isinstance(ei.value.checkpoint, Checkpoint)
+    assert ei.value.checkpoint.step >= 1
+
+
+def test_manual_checkpoint_resume_is_bit_identical(chaos_graph):
+    spec = api.get_spec("bfs")
+    policy = api._resolve_policy("auto")
+    backend = api._resolve_backend(None, chaos_graph)
+    program, default_steps = spec.build(chaos_graph, policy=policy,
+                                        backend=backend)
+    eng = PushPullEngine(program=program, policy=policy,
+                         max_steps=default_steps, backend=backend)
+    state0, frontier0 = spec.init(chaos_graph, root=0)
+    whole = eng.run_stepwise(chaos_graph, state0, frontier0)
+    with inject(_plan(FaultSpec(site="engine.step", kind="permanent",
+                                start=3))):
+        with pytest.raises(SolveInterrupted) as ei:
+            eng.run_stepwise(chaos_graph, state0, frontier0,
+                             checkpoint_every=1)
+    ckpt = ei.value.checkpoint
+    assert isinstance(ckpt, Checkpoint) and ckpt.step >= 1
+    resumed = eng.run_stepwise(chaos_graph, state0, frontier0,
+                               resume_from=ckpt)
+    for a, b in zip(jax.tree_util.tree_leaves(whole.state),
+                    jax.tree_util.tree_leaves(resumed.state)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert int(whole.steps) == int(resumed.steps)
+
+
+def test_checkpoint_rejected_for_phase_programs(chaos_graph):
+    with pytest.raises(ValueError, match="flat programs"):
+        api.solve(chaos_graph, "betweenness", checkpoint_every=4)
+
+
+# ---------------------------------------------------------------------------
+# the chaos invariant: differential results under a full plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm,kwargs,key,exact", [
+    ("bfs", dict(root=0), "dist", True),
+    ("wcc", dict(), None, True),
+    ("pagerank", dict(iters=10), None, False),
+])
+def test_ci_default_plan_preserves_results(chaos_graph, algorithm,
+                                           kwargs, key, exact):
+    """Every transient fault in the ci-default plan must be recovered:
+    results match the fault-free solve (bit-identical for integer
+    states; 1e-5 for float, where the jnp fallback may reorder sums)."""
+    def run():
+        st = api.solve(chaos_graph, algorithm, backend=PallasBackend(),
+                       **kwargs).state
+        return np.asarray(st if key is None else st[key])
+
+    ref = run()
+    with inject(named_plans()["ci-default"]) as inj:
+        got = run()
+    assert sum(inj.stats()["injected"].values()) >= 1, (
+        "plan injected nothing — the chaos run was vacuous")
+    if exact:
+        assert (got == ref).all()
+    else:
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# QueryService failure paths (satellite: scheduler chaos)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def svc_graph():
+    src = np.array([0, 1, 2, 3, 4, 0, 2])
+    dst = np.array([1, 2, 3, 4, 5, 2, 5])
+    return build_graph(src, dst, 6)
+
+
+def test_fail_records_slot_and_chunk_in_stats(svc_graph):
+    svc = QueryService(svc_graph, slots=2)
+    rid = svc.submit("bfs", source=0, bogus_kwarg=1)
+    svc.run_until_complete()
+    assert svc.status(rid)["status"] == "failed"
+    with pytest.raises(RuntimeError, match="failed"):
+        svc.poll(rid)
+    failures = svc.stats()["failures"]
+    assert len(failures) == 1
+    assert failures[0]["rid"] == rid
+    assert failures[0]["slot"] is not None
+
+
+def test_unbatchable_serve_time_failure_propagates(svc_graph):
+    svc = QueryService(svc_graph, slots=2)
+    rid = svc.submit("pagerank", iters="not-a-number")
+    svc.run_until_complete()
+    st = svc.status(rid)
+    assert st["status"] == "failed" and "Error" in st["error"]
+    assert svc.pending() == 0
+
+
+def test_permanent_chunk_fault_fails_structurally_no_hang(svc_graph):
+    with inject(_plan(FaultSpec(site="service.chunk",
+                                kind="permanent"))):
+        svc = QueryService(svc_graph, slots=2)
+        rids = [svc.submit("bfs", source=s) for s in range(3)]
+        svc.run_until_complete()          # must terminate
+    for rid in rids:
+        st = svc.status(rid)
+        assert st["status"] == "failed"
+        assert "FaultInjected" in st["error"]
+    fails = svc.stats()["failures"]
+    assert fails and all(f["error"] == "FaultInjected" for f in fails)
+
+
+def test_transient_chunk_fault_retries_and_serves(svc_graph):
+    ref = np.asarray(api.solve(svc_graph, "bfs", root=0).state["dist"])
+    with inject(_plan(FaultSpec(site="service.chunk", kind="transient",
+                                every=3, start=1))):
+        svc = QueryService(svc_graph, slots=2)
+        rid = svc.submit("bfs", source=0)
+        svc.run_until_complete()
+        got = np.asarray(svc.poll(rid)["dist"])
+    assert (got == ref).all()
+    assert svc.chunk_retries >= 1
+    assert svc.stats()["chunk_retries"] >= 1
+
+
+def test_cache_faults_degrade_to_recompute(svc_graph):
+    plan = _plan(FaultSpec(site="service.cache.get", kind="permanent",
+                           error="OSError"),
+                 FaultSpec(site="service.cache.put", kind="permanent",
+                           error="OSError"))
+    ref = np.asarray(api.solve(svc_graph, "bfs", root=2).state["dist"])
+    with inject(plan):
+        svc = QueryService(svc_graph, slots=2)
+        r1 = svc.submit("bfs", source=2)
+        svc.run_until_complete()
+        r2 = svc.submit("bfs", source=2)   # lookup faults -> recompute
+        svc.run_until_complete()
+    assert (np.asarray(svc.poll(r1)["dist"]) == ref).all()
+    assert (np.asarray(svc.poll(r2)["dist"]) == ref).all()
+    assert svc.cache_errors >= 2
+    assert not svc.record(r2).cached
+
+
+def test_admission_control_bounds_the_queue(svc_graph):
+    svc = QueryService(svc_graph, slots=2, max_queue=2)
+    svc.submit("bfs", source=0)
+    svc.submit("bfs", source=1)
+    with pytest.raises(AdmissionError, match="max_queue=2"):
+        svc.submit("bfs", source=2)
+    assert svc.admission_rejected == 1
+    # coalesced duplicates bypass admission (no new engine work)
+    rid = svc.submit("bfs", source=0)
+    assert svc.record(rid).rid == rid
+    svc.run_until_complete()
+    # a drained queue admits again; cache hits always admitted
+    svc2_rid = svc.submit("bfs", source=2)
+    assert svc.status(svc2_rid)["status"] in ("pending", "done")
+
+
+def test_deadline_expires_queued_queries(svc_graph):
+    t = [0.0]
+    svc = QueryService(svc_graph, slots=2, clock=lambda: t[0])
+    rid = svc.submit("bfs", source=0, deadline_ms=50.0)
+    ok = svc.submit("bfs", source=1)          # no deadline
+    t[0] = 0.2                                 # 200ms later
+    svc.run_until_complete()
+    st = svc.status(rid)
+    assert st["status"] == "failed" and "DeadlineExceeded" in st["error"]
+    with pytest.raises(RuntimeError) as ei:
+        svc.poll(rid)
+    assert isinstance(ei.value.__cause__, DeadlineExceeded)
+    assert ei.value.__cause__.where == "queued"
+    assert svc.poll(ok) is not None            # the other query served
+    assert svc.stats()["deadline_expired"] == 1
+
+
+def test_deadline_rejects_nonpositive(svc_graph):
+    svc = QueryService(svc_graph)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        svc.submit("bfs", source=0, deadline_ms=0)
+
+
+def test_status_is_total_poll_is_not(svc_graph):
+    svc = QueryService(svc_graph, slots=2)
+    rid = svc.submit("bfs", source=3)
+    assert svc.status(rid)["status"] == "pending"
+    assert svc.status(10_000) == {"rid": 10_000, "status": "unknown"}
+    with pytest.raises(KeyError):
+        svc.poll(10_000)
+    svc.run_until_complete()
+    done = svc.status(rid)
+    assert done["status"] == "done" and done["converged"]
+
+
+def test_force_retire_under_faults_returns_best_effort(svc_graph):
+    """A query that can't converge inside its chunk budget is
+    force-retired with its best-effort state (converged=False, never
+    cached) even while transient chunk faults are being retried — a
+    non-converging query plus a flaky chunk must not wedge the loop."""
+    with inject(_plan(FaultSpec(site="service.chunk", kind="transient",
+                                every=3, start=1))):
+        svc = QueryService(svc_graph, slots=2, chunk_steps=1,
+                           max_chunks_per_query=1)
+        rid = svc.submit("ppr", source=0, tol=0.0)   # tol=0 never settles
+        svc.run_until_complete()                      # must terminate
+    assert svc.stats()["force_retired"] == 1
+    rec = svc.record(rid)
+    assert rec.done and not rec.converged
+    st = svc.status(rid)
+    assert st["status"] == "done" and st["converged"] is False
+    assert svc.poll(rid) is not None                  # best-effort state
+    assert svc.chunk_retries >= 1                     # faults did fire
+    # force-retired states depend on scheduler timing: never cached
+    rid2 = svc.submit("ppr", source=0, tol=0.0)
+    assert not svc.record(rid2).cached
+
+
+_CHAOS_SITES = ("service.chunk", "service.cache.get",
+                "service.cache.put", "pallas.pull", "pallas.push",
+                "engine.step", "tune.cache.load", "tune.cache.write")
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       n_sites=st.integers(1, len(_CHAOS_SITES)),
+       order_seed=st.integers(0, 2**16))
+def test_scheduler_chaos_schedule(seed, n_sites, order_seed):
+    """Hypothesis chaos: random transient fault sites × random arrival
+    orders. Invariant: the service always drains, and every query is
+    served with the exact fault-free answer (transient faults are
+    recoverable by construction)."""
+    src = np.array([0, 1, 2, 3, 4, 0, 2])
+    dst = np.array([1, 2, 3, 4, 5, 2, 5])
+    g = build_graph(src, dst, 6)
+    refs = {s: np.asarray(api.solve(g, "bfs", root=s).state["dist"])
+            for s in range(6)}
+    rng = np.random.default_rng(seed)
+    sites = list(rng.choice(_CHAOS_SITES, size=n_sites, replace=False))
+    specs = tuple(FaultSpec(site=s, kind="transient",
+                            every=int(rng.integers(2, 5)), start=1,
+                            error=("OSError" if ".cache." in s
+                                   else "FaultInjected"))
+                  for s in sites)
+    arrival = np.random.default_rng(order_seed).permutation(6)
+    resilience.deactivate()
+    clear_resilience_stats()
+    try:
+        with inject(FaultPlan(name="hyp", seed=seed, specs=specs)):
+            svc = QueryService(g, slots=3)
+            rids = {int(s): svc.submit("bfs", source=int(s))
+                    for s in arrival}
+            svc.run_until_complete()
+            for s, rid in rids.items():
+                got = np.asarray(svc.poll(rid)["dist"])
+                assert (got == refs[s]).all(), (s, sites)
+    finally:
+        resilience.deactivate()
+        clear_resilience_stats()
+
+
+# ---------------------------------------------------------------------------
+# observability: counters, events, report, zero-overhead
+# ---------------------------------------------------------------------------
+
+def test_collect_resilience_counters_events_and_report(chaos_graph):
+    from repro.obs import Telemetry, collect_resilience, render_report
+    tel = Telemetry()
+    plan = _plan(FaultSpec(site="engine.step", kind="transient",
+                           every=4, start=2))
+    with inject(plan):
+        api.solve(chaos_graph, "bfs", root=0, checkpoint_every=1,
+                  telemetry=tel)
+    counters = tel.counters.as_dict()
+    assert counters["resilience.injected.engine.step"] >= 1
+    assert counters["resilience.resume.engine.step"] >= 1
+    evs = list(tel.events)
+    names = {e.get("name") for e in evs if e.get("kind") == "event"}
+    assert "resilience.fault" in names
+    assert any(n.startswith("resilience.resume") for n in names)
+    md = render_report(evs)
+    assert "## Resilience" in md and "resilience.fault" in md
+    # drained: a second collect adds no new events
+    assert drain_events() == []
+    collect_resilience(tel)
+
+
+def test_no_plan_no_overhead_no_counters(chaos_graph):
+    """The zero-overhead claim: with no plan and telemetry=None, a solve
+    leaves the resilience bookkeeping untouched (fault_point is a
+    global read + None check; nothing counts, nothing queues)."""
+    clear_resilience_stats()
+    r = api.solve(chaos_graph, "bfs", root=0)
+    assert r.converged
+    assert resilience_stats() == {}
+    assert drain_events() == []
+
+
+def test_solve_results_identical_with_and_without_guards(chaos_graph):
+    """check_finite/checkpoint_every change the execution loop, not the
+    math: guarded runs reproduce the plain run bit-for-bit."""
+    plain = api.solve(chaos_graph, "bfs", root=2)
+    guarded = api.solve(chaos_graph, "bfs", root=2,
+                        check_finite="nan", checkpoint_every=2)
+    assert (np.asarray(plain.state["dist"])
+            == np.asarray(guarded.state["dist"])).all()
+    assert int(plain.steps) == int(guarded.steps)
+    # phase programs accept the guard too, checked at run end
+    res = api.solve(chaos_graph, "sssp_delta", source=0, delta=2.0,
+                    check_finite="nan")
+    assert res.converged
